@@ -1,0 +1,59 @@
+"""Paper Figs. 4-6: compute cost, parameter count and compute/parameter
+ratio relative to AlexNet — the paper's scalability predictor ("models with
+a higher ratio scale better"), applied to the assigned 10-arch pool.
+
+Compute cost = forward FLOPs for one sample at seq 512 (LM) / one image
+(CNN); parameters = total.  All analytic (registry accounting).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import registry
+
+
+def alexnet_costs():
+    # conv stack flops for one 224x224x3 image (standard AlexNet accounting)
+    convs = [
+        (55 * 55 * 96, 11 * 11 * 3), (27 * 27 * 256, 5 * 5 * 96),
+        (13 * 13 * 384, 3 * 3 * 256), (13 * 13 * 384, 3 * 3 * 384),
+        (13 * 13 * 256, 3 * 3 * 384),
+    ]
+    fcs = [(256 * 6 * 6, 4096), (4096, 4096), (4096, 1000)]
+    flops = sum(2 * o * k for o, k in convs) + sum(2 * i * o for i, o in fcs)
+    params = sum(k * o // (o // o) for o, k in [])  # (conv params below)
+    params = (11*11*3*96 + 5*5*96*256 + 3*3*256*384 + 3*3*384*384
+              + 3*3*384*256 + 256*36*4096 + 4096*4096 + 4096*1000)
+    return flops, params
+
+
+def lm_forward_flops_per_sample(cfg, seq: int = 512) -> float:
+    n = registry.count_params(cfg, active_only=True)
+    n -= cfg.vocab_size * cfg.d_model
+    return 2.0 * n * seq
+
+
+def rows():
+    a_flops, a_params = alexnet_costs()
+    out = [("alexnet", 1.0, 1.0, 1.0)]
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        f = lm_forward_flops_per_sample(cfg) / a_flops
+        p = registry.count_params(cfg) / a_params
+        out.append((arch, f, p, f / p))
+    return out
+
+
+def run():
+    results = []
+    print("# Fig4-6: relative compute, params, ratio (AlexNet = 1.0)")
+    print(f"{'arch':26s} {'compute':>10s} {'params':>10s} {'ratio':>8s}")
+    for arch, f, p, r in rows():
+        print(f"{arch:26s} {f:10.2f} {p:10.2f} {r:8.3f}")
+        results.append((f"fig456/{arch}/ratio", 0.0, r))
+    return results
+
+
+if __name__ == "__main__":
+    run()

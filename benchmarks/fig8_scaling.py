@@ -1,0 +1,67 @@
+"""Paper Fig. 8: strong-scaling speedup, via the paper's own §IV-A model —
+step time ~ C/p + comm(p) with comm growing ~log p (tree) / (p-1)/p (ring).
+
+The paper measures 1..16 InfiniBand CPU nodes / 1..4 K40 GPUs; the TPU
+analogue below predicts strong-scaling speedup for 1..16 v5e "nodes" (data-
+parallel groups) from each arch's analytic compute cost and allreduce
+volume, using the same batch-fixed strong-scaling setup (global batch 256).
+
+Also reproduces the paper's qualitative finding: ratio (Fig. 6) orders the
+speedup curves — AlexNet-like low-ratio models scale worst.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import registry
+from repro.roofline import hw
+
+GLOBAL_BATCH = 256
+SEQ = 512
+
+
+def step_time(cfg, p: int) -> float:
+    """Strong scaling: C/p compute + ring-allreduce gradients (fp32)."""
+    n_active = registry.count_params(cfg, active_only=True)
+    n_total = registry.count_params(cfg)
+    tokens = GLOBAL_BATCH * SEQ
+    compute = 6.0 * (n_active - cfg.vocab_size * cfg.d_model) * tokens \
+        / hw.PEAK_FLOPS_BF16
+    if p == 1:
+        return compute
+    wire = 2.0 * 4.0 * n_total * (p - 1) / p          # ring allreduce fp32
+    return compute / p + wire / hw.ICI_BW_PER_LINK
+
+
+def speedup_curve(cfg, ps=(1, 2, 4, 8, 16)):
+    t1 = step_time(cfg, 1)
+    return [t1 / step_time(cfg, p) for p in ps]
+
+
+def run():
+    results = []
+    ps = (1, 2, 4, 8, 16)
+    print("# Fig8: modeled strong-scaling speedup (global batch 256, v5e)")
+    print(f"{'arch':26s} " + " ".join(f"p={p:<5d}" for p in ps))
+    curves = {}
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        cur = speedup_curve(cfg, ps)
+        curves[arch] = cur
+        print(f"{arch:26s} " + " ".join(f"{s:6.2f}" for s in cur))
+        results.append((f"fig8/{arch}/speedup@16", 0.0, cur[-1]))
+    # the paper's ordering claim: higher compute/param ratio -> better scaling
+    from benchmarks.fig456_ratios import rows as ratio_rows
+    ratios = {a: r for a, _, _, r in ratio_rows() if a != "alexnet"}
+    order_by_ratio = sorted(ratios, key=ratios.get)
+    order_by_speedup = sorted(curves, key=lambda a: curves[a][-1])
+    agree = np.mean([order_by_ratio.index(a) == order_by_speedup.index(a)
+                     for a in ratios])
+    print(f"# ratio-ordering vs speedup-ordering agreement: {agree:.0%}")
+    results.append(("fig8/ordering_agreement", 0.0, float(agree)))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Roofline table over all dry-run cells (EXPERIMENTS.md §Roofline source).
+
+Reads results/dryrun/*.json (produced by launch/dryrun.py on the 512-device
+placeholder meshes) and emits the three-term roofline per cell plus CSV/MD
+artifacts under results/.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.roofline.analysis import format_csv, format_markdown, load_rows
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "results" / "dryrun"
+
+
+def run():
+    rows = load_rows(DRYRUN)
+    if not rows:
+        print("# no dry-run records found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return [("roofline/cells", 0.0, 0.0)]
+    (ROOT / "results" / "roofline.csv").write_text(format_csv(rows))
+    (ROOT / "results" / "roofline.md").write_text(format_markdown(rows))
+    by_bottleneck = {}
+    for r in rows:
+        by_bottleneck.setdefault(r.bottleneck, []).append(r)
+    print(f"# Roofline: {len(rows)} cells "
+          f"(results/roofline.csv, results/roofline.md)")
+    for k, v in sorted(by_bottleneck.items()):
+        print(f"#   {k}-bound cells: {len(v)}")
+    worst = sorted(rows, key=lambda r: r.est_mfu)[:8]
+    print("# worst est-MFU cells:")
+    for r in worst:
+        print(f"#   {r.cell}: est_mfu={r.est_mfu:.2%} "
+              f"bottleneck={r.bottleneck}")
+    results = [("roofline/cells", 0.0, float(len(rows)))]
+    for r in rows:
+        results.append((f"roofline/{r.cell}/est_mfu", 0.0, r.est_mfu))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Fault tolerance demo: train on 4 DP replicas, kill a replica mid-run
+(simulated fault), resume on 2 replicas from the last checkpoint — the
+ULFM-style "continued execution" the paper targets (§II-B), enabled by the
+DP replication argument of §III-B.
+
+Run:  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.failures import FaultInjector, run_with_recovery
+from repro.configs import get_config
+from repro.configs.base import (MeshConfig, OptimizerConfig, RunConfig,
+                                ShapeConfig)
+from repro.core.transparent import TransparentTrainer
+from repro.models import registry
+
+CKPT = "/tmp/matexjax_elastic"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_config("stablelm-1.6b", smoke=True)
+    bundle = registry.build(cfg)
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 16)),
+                                      jnp.int32),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 16)),
+                                      jnp.int32)} for _ in range(40)]
+
+    def make_trainer(attempt):
+        # first attempt: 4 DP replicas; after the fault: shrink to 2
+        dp = 4 if attempt == 0 else 2
+        print(f"[supervisor] building mesh with data={dp} "
+              f"(attempt {attempt})")
+        run = RunConfig(
+            model=cfg, shape=ShapeConfig("e", "train", 16, 8),
+            mesh=MeshConfig(shape=(dp, 2), axis_names=("data", "model"),
+                            allreduce="layerwise"),
+            optimizer=OptimizerConfig(name="adam", lr=1e-2))
+        return TransparentTrainer(run, bundle.loss_fn, bundle.specs)
+
+    state, hist = run_with_recovery(
+        make_trainer=make_trainer,
+        data_iter_factory=lambda start: iter(batches[start:]),
+        ckpt_dir=CKPT, total_steps=30, ckpt_every=10,
+        injector=FaultInjector(fail_at_steps=(17,)))
+
+    print(f"\nrestarts: {hist['restarts']}  "
+          f"resumed at steps: {hist['resume_steps']}")
+    losses = hist["losses"]
+    print("loss curve (around the fault at step 17):")
+    for s, l in losses:
+        mark = "  <- resumed here" if s in (11,) else ""
+        print(f"  step {s:3d}  loss {l:.4f}{mark}")
+    print("training survived the replica loss and finished on the "
+          "shrunk mesh.")
+
+
+if __name__ == "__main__":
+    main()

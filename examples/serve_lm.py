@@ -1,0 +1,25 @@
+"""Serving example: batched prefill+decode through the production serve
+driver (request queue -> fixed decode batch -> greedy generation).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def main():
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "qwen2.5-14b", "--smoke",
+           "--requests", "6", "--batch", "3",
+           "--prompt-len", "12", "--max-new", "8"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    raise SystemExit(subprocess.run(cmd, env=env).returncode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Elastic re-meshing: resume a run on a different device count.
+
+The paper's §III-B argument — "by using data parallelism the critical data
+structures are automatically replicated for fault tolerance" — becomes an
+executable mechanism here: because DP state is replicated (or flat-sharded
+with a canonical global layout), a checkpoint taken on an N-replica mesh
+restores onto an M-replica mesh by re-placing the same logical arrays under
+the new NamedShardings.  Combined with checkpoint.py this gives
+ULFM-style *continued execution*: lose a host -> rebuild a smaller mesh ->
+restore -> keep training (see failures.py for the supervision loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import MeshConfig, RunConfig
+from repro.checkpoint.checkpoint import restore_checkpoint, latest_step
+
+
+def shrink_mesh_config(mesh_cfg: MeshConfig, lost_replicas: int = 1) -> MeshConfig:
+    """Drop data-parallel replicas (the failure-absorbing axis)."""
+    shape = list(mesh_cfg.shape)
+    for i, a in enumerate(mesh_cfg.axis_names):
+        if a == "data":
+            new = shape[i] - lost_replicas
+            if new < 1:
+                raise ValueError("cannot shrink below one data replica")
+            shape[i] = new
+    return dataclasses.replace(mesh_cfg, shape=tuple(shape))
+
+
+def rebatch_for_mesh(global_batch: int, old_dp: int, new_dp: int,
+                     keep_global: bool = True) -> int:
+    """Elastic batch policy: keep the global batch (per-replica grows) or
+    keep per-replica batch (global shrinks — changes optimization slightly,
+    which the supervisor must log)."""
+    if keep_global:
+        assert global_batch % new_dp == 0, (global_batch, new_dp)
+        return global_batch
+    per = global_batch // old_dp
+    return per * new_dp
+
+
+def restore_elastic(ckpt_dir, trainer, *, step: Optional[int] = None):
+    """Restore a checkpoint onto ``trainer``'s (possibly different) mesh.
+
+    Works for replicated and fsdp modes directly; for the zero1 flat-shard
+    optimizer the loader re-pads/re-splits the canonical flat vectors when
+    the DP degree changed.
+    """
+    like = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        trainer.state_structs())
+    shardings = trainer.state_shardings()
+
+    # detect zero1 flat-state shape mismatch (dp changed)
+    import json
+    from pathlib import Path
+    directory = Path(ckpt_dir)
+    s = step if step is not None else latest_step(directory)
+    manifest = json.loads(
+        (directory / f"step_{s:09d}" / "manifest.json").read_text())
+    like_shapes = [tuple(l.shape) for l in jax.tree_util.tree_leaves(like)]
+    saved_shapes = [tuple(x) for x in manifest["shapes"]]
+    if like_shapes == saved_shapes:
+        return restore_checkpoint(ckpt_dir, like, step=step,
+                                  shardings=shardings)
+
+    # re-split path: load raw, reconcile flat [dp, shard] leaves
+    raw, s = restore_checkpoint(ckpt_dir, None, step=step) \
+        if False else _load_raw(directory, s)
+    new_leaves = []
+    for arr, ref in zip(raw, jax.tree_util.tree_leaves(like)):
+        if tuple(arr.shape) == tuple(ref.shape):
+            new_leaves.append(arr)
+            continue
+        if arr.ndim == 2 and ref.ndim == 2 and arr.shape[0] != ref.shape[0]:
+            flat = arr.reshape(-1)
+            want = ref.shape[0] * ref.shape[1]
+            flat = np.pad(flat, (0, max(0, want - flat.size)))[:want]
+            new_leaves.append(flat.reshape(ref.shape))
+            continue
+        raise ValueError(f"cannot reconcile leaf {arr.shape} -> {ref.shape}")
+    treedef = jax.tree_util.tree_structure(like)
+    state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    sh_leaves = jax.tree_util.tree_leaves(shardings)
+    placed = [jax.device_put(a, sh) for a, sh in
+              zip(jax.tree_util.tree_leaves(state), sh_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, placed), s
+
+
+def _load_raw(directory, step: int):
+    import json
+    d = directory / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    return [np.load(d / f"leaf_{i:05d}.npy")
+            for i in range(manifest["n_leaves"])], step

@@ -1,0 +1,248 @@
+"""Configuration dataclasses for MaTEx-JAX.
+
+Every run is described by a ``RunConfig`` = (ModelConfig, ShapeConfig,
+MeshConfig).  Model configs for the ten assigned architectures live in
+``repro.configs.<arch>``; shape presets in ``repro.configs.shapes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration (token-choice top-k routing)."""
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    router_jitter: float = 0.0
+    # load-balancing auxiliary loss weight (Switch-style)
+    aux_loss_weight: float = 0.01
+    # capacity factor for dense one-hot dispatch (einsum-based, TPU friendly)
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention configuration."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 => full-rank q projection (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU recurrence configuration."""
+    lru_width: int = 0            # 0 => same as d_model
+    conv1d_width: int = 4
+    # pattern: how many recurrent blocks per attention block (2 recurrent : 1 local attn)
+    pattern: Tuple[str, ...] = ("recurrent", "recurrent", "attention")
+    attention_window: int = 2048
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV-6 (Finch) configuration."""
+    head_size: int = 64
+    decay_lora: int = 64          # rank of data-dependent decay LoRA
+    token_shift: bool = True
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder-decoder (whisper-style) extras; frontend is a stub."""
+    num_encoder_layers: int = 4
+    encoder_seq_len: int = 1500   # whisper frame count after conv frontend
+    frontend: str = "stub"        # precomputed frame embeddings via input_specs()
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    """Vision-language (pixtral-style) extras; vision tower is a stub."""
+    num_image_tokens: int = 1024  # precomputed patch embeddings per image
+    frontend: str = "stub"
+
+
+# ---------------------------------------------------------------------------
+# ModelConfig
+# ---------------------------------------------------------------------------
+
+ATTN_KINDS = ("full", "swa", "local", "mla", "none")
+FAMILIES = ("dense", "moe", "hybrid", "ssm", "encdec", "vlm", "cnn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # one of FAMILIES
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 => d_model // num_heads
+    attn_kind: str = "full"       # one of ATTN_KINDS
+    window: int = 0               # sliding/local attention window (0 = n/a)
+    qkv_bias: bool = False
+    act: str = "swiglu"           # "swiglu" | "gelu" | "geglu" | "relu"
+    norm: str = "rmsnorm"         # "rmsnorm" | "layernorm"
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    scale_embed: bool = False     # gemma-style sqrt(d_model) embedding scaling
+    norm_eps: float = 1e-6
+    # sub-configs (None when not applicable)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    # numerics
+    param_dtype: str = "float32"  # master weights
+    compute_dtype: str = "bfloat16"
+    # remat ("none" | "full" | "dots" — checkpoint-dots policy)
+    remat: str = "full"
+    # traced-attention tile sizes (perf knobs; kernels have their own)
+    attn_q_block: int = 512
+    attn_kv_block: int = 1024
+    # flash-style attention backward: nested remat recomputes the score
+    # blocks instead of storing them (kills the dominant HBM term of the
+    # traced path; see EXPERIMENTS.md §Perf).  Off by default so the
+    # baseline table stays paper-faithful; hillclimb flips it.
+    attn_remat: bool = False
+    # set True for architectures whose attention is subquadratic / bounded-state,
+    # which qualifies them for the long_500k cell.
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    def validate(self) -> None:
+        assert self.family in FAMILIES, self.family
+        assert self.attn_kind in ATTN_KINDS, self.attn_kind
+        if self.family == "moe":
+            assert self.moe is not None
+        if self.attn_kind == "mla":
+            assert self.mla is not None
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (total, incl. embeddings)."""
+        from repro.models.registry import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.registry import count_params
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# ShapeConfig — the four assigned input-shape presets
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str                     # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+    def validate(self) -> None:
+        assert self.kind in ("train", "prefill", "decode")
+
+
+# ---------------------------------------------------------------------------
+# MeshConfig + distribution options (the paper's feature knobs)
+# ---------------------------------------------------------------------------
+
+ALLREDUCE_STRATEGIES = (
+    "fused",          # single flat-bucket psum
+    "layerwise",      # paper §III-D.2: ordered, per-layer reduction
+    "bucketed",       # size-capped buckets (overlap-friendly)
+    "hierarchical",   # intra-pod then inter-pod (topology-aware)
+    "reduce_scatter", # beyond-paper ZeRO-1: RS + optimizer + AG
+    "compressed",     # beyond-paper: bf16 wire format + fp32 error feedback
+)
+
+DP_MODES = ("replicated", "fsdp")
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+    # paper-faithful vs beyond-paper parameter placement
+    dp_mode: str = "replicated"
+    allreduce: str = "layerwise"
+    bucket_bytes: int = 32 * 1024 * 1024   # for "bucketed"
+    # sharding rule overrides: logical axis -> mesh axis (or None)
+    rules_override: Tuple[Tuple[str, Optional[str]], ...] = ()
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a in ("pod", "data"))
+
+    @property
+    def model_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a == "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def validate(self) -> None:
+        assert len(self.shape) == len(self.axis_names)
+        assert self.dp_mode in DP_MODES
+        assert self.allreduce in ALLREDUCE_STRATEGIES
+
+
+SINGLE_POD = MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+MULTI_POD = MeshConfig(shape=(2, 16, 16), axis_names=("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# RunConfig
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adam"            # "sgd" | "momentum" | "adagrad" | "adam" | "adamw"
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    grad_clip: float = 1.0        # 0 disables
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = field(default_factory=lambda: SINGLE_POD)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    seed: int = 0
+    microbatch: int = 0           # 0 => no gradient accumulation
+
+    def validate(self) -> None:
+        self.model.validate()
+        self.shape.validate()
+        self.mesh.validate()

@@ -1,0 +1,24 @@
+"""qwen2.5-14b [dense] — GQA with QKV bias.  [hf:Qwen/Qwen2.5; hf]
+48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064.
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "qwen2.5-14b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+        head_dim=128, d_ff=13824, vocab_size=152_064,
+        attn_kind="full", qkv_bias=True, act="swiglu", rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="dense",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=256,
+        attn_kind="full", qkv_bias=True, act="swiglu", remat="none",
+    )

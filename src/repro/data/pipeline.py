@@ -1,0 +1,117 @@
+"""Input pipeline: rank-sharded iteration + background prefetch + global
+device batches.
+
+On a multi-host TPU deployment each jax process feeds only its addressable
+shard (``jax.make_array_from_process_local_data``); on the single-process
+CPU container the same code path degenerates to a full-batch put with the
+correct NamedSharding.  The trainer consumes global arrays either way — the
+pipeline is the MaTEx data-reader abstraction (§III-F) end to end.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.data.readers import DataSet
+
+P = jax.sharding.PartitionSpec
+
+
+class BatchIterator:
+    """Deterministic epoch shuffling + drop-last batching over a DataSet."""
+
+    def __init__(self, ds: DataSet, batch: int, seed: int = 0,
+                 shuffle: bool = True, label_key: str = "labels",
+                 data_key: str = "tokens"):
+        self.ds = ds
+        self.batch = batch
+        self.seed = seed
+        self.shuffle = shuffle
+        self.data_key = data_key
+        self.label_key = label_key
+        self.epoch = 0
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        n = len(self.ds.training_data)
+        while True:
+            idx = np.arange(n)
+            if self.shuffle:
+                rng = np.random.default_rng(self.seed + self.epoch)
+                rng.shuffle(idx)
+            for i in range(0, n - self.batch + 1, self.batch):
+                sel = idx[i:i + self.batch]
+                yield {self.data_key: self.ds.training_data[sel],
+                       self.label_key: self.ds.training_labels[sel]}
+            self.epoch += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch (depth-bounded), hiding host read latency
+    behind device compute — the I/O consideration of paper §III-F."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._fill, args=(iter(it),),
+                                       daemon=True)
+        self.thread.start()
+
+    def _fill(self, it):
+        try:
+            for item in it:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def device_put_global(batch: Dict[str, np.ndarray], mesh,
+                      dp_axes: Tuple[str, ...]):
+    """Host batch -> global jax arrays sharded batch-dim over the DP axes."""
+    def one(x):
+        spec = P(tuple(dp_axes), *([None] * (x.ndim - 1)))
+        sharding = jax.sharding.NamedSharding(mesh, spec)
+        if jax.process_count() > 1:
+            return jax.make_array_from_process_local_data(sharding, x)
+        return jax.device_put(x, sharding)
+    return jax.tree.map(one, batch)
+
+
+def make_input_pipeline(ds: DataSet, global_batch: int, mesh,
+                        dp_axes: Tuple[str, ...], *, seed: int = 0,
+                        prefetch: int = 2, data_key: str = "tokens",
+                        label_key: str = "labels"):
+    """Full pipeline: shard -> shuffle -> batch -> prefetch -> device arrays."""
+    world = max(jax.process_count(), 1)
+    local_batch = global_batch // world
+    it = BatchIterator(ds, local_batch, seed=seed, data_key=data_key,
+                       label_key=label_key)
+    pf = Prefetcher(iter(it), depth=prefetch)
+
+    def gen():
+        for host_batch in pf:
+            yield device_put_global(host_batch, mesh, dp_axes)
+
+    return gen(), pf

@@ -1,0 +1,27 @@
+"""jit'd public wrapper: model-layout [B,S,H,hd] flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [B,S,H,hd]; k/v: [B,T,KV,hd] -> [B,S,H,hd] (self-attention layout
+    used by repro.models.attention)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [BH, Sq, hd]; k/v: [BKV, Sk, hd] (GQA: BH = G * BKV).
+
+    Materializes the full score matrix — memory-unbounded, correctness only.
+    """
+    BH, Sq, hd = q.shape
+    BKV, Sk, _ = k.shape
+    G = BH // BKV
+    kf = jnp.repeat(k, G, axis=0)
+    vf = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * (hd ** -0.5)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkh->bqh", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

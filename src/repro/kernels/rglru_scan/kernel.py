@@ -1,0 +1,69 @@
+"""RG-LRU linear-recurrence TPU kernel (pl.pallas_call + BlockSpec).
+
+Evaluates  h_t = a_t * h_{t-1} + x_t  (elementwise, a_t = exp(log_a_t))
+over the sequence with the state carried in VMEM scratch across a
+*sequential* time-block grid dimension.
+
+TPU adaptation: the GPU formulation of linear-scan layers leans on warp
+shuffles / Blelloch trees; on TPU the VPU prefers a short unrolled serial
+loop over a lane-parallel [block_b, width] tile — the recurrence is serial
+in t but fully vector-parallel in (batch, width), which matches VREG lanes.
+Width is tiled over the grid's parallel dimensions so the working set
+(3 tiles + state) stays in VMEM.
+
+Grid: (nb, nw, nt) with nt sequential; state scratch [block_b, block_w].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _lru_kernel(log_a_ref, x_ref, o_ref, h_scr, *, block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def body(i, h):
+        a = jnp.exp(log_a_ref[:, i, :])
+        h = a * h + x_ref[:, i, :]
+        o_ref[:, i, :] = h
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, block_t, body, h_scr[...])
+
+
+def lru_scan_padded(log_a, x, *, block_b: int = 8, block_t: int = 128,
+                    block_w: int = 128, interpret: bool = False):
+    """log_a, x: [B, S, W] fp32 -> h: [B, S, W] fp32 (prefix recurrence).
+
+    B, S, W are padded to block multiples by the caller (ops.py).
+    """
+    B, S, W = x.shape
+    block_b = min(block_b, B)
+    block_t = min(block_t, S)
+    block_w = min(block_w, W)
+    nb = pl.cdiv(B, block_b)
+    nt = pl.cdiv(S, block_t)
+    nw = pl.cdiv(W, block_w)
+
+    kernel = functools.partial(_lru_kernel, block_t=block_t)
+    spec = pl.BlockSpec((block_b, block_t, block_w),
+                        lambda ib, iw, it: (ib, it, iw))
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nw, nt),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_w), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(log_a, x)

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the RG-LRU scan kernel (padding + dtype mgmt)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import lru_scan_padded
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_t"))
+def lru_scan(log_a, gated, *, interpret: bool = False, block_t: int = 128):
+    """Drop-in for the associative-scan path in models/rglru.py.
+
+    log_a, gated: [B, S, W] fp32 -> h [B, S, W] fp32."""
+    B, S, W = gated.shape
+    bt = min(block_t, max(S, 8))
+    S_p = -(-S // bt) * bt
+    W_p = -(-W // 128) * 128 if W > 128 else W
+    la = jnp.pad(log_a.astype(jnp.float32),
+                 ((0, 0), (0, S_p - S), (0, W_p - W)))
+    x = jnp.pad(gated.astype(jnp.float32),
+                ((0, 0), (0, S_p - S), (0, W_p - W)))
+    h = lru_scan_padded(la, x, block_t=bt, interpret=interpret)
+    return h[:, :S, :W]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(log_a, x):
+    """h_t = exp(log_a_t) * h_{t-1} + x_t, h_0 = x_0-style prefix scan.
+
+    log_a, x: [B, S, W] -> [B, S, W] fp32."""
+    def step(h, inp):
+        la, xt = inp
+        h = jnp.exp(la) * h + xt
+        return h, h
+
+    la = log_a.astype(jnp.float32).transpose(1, 0, 2)
+    xt = x.astype(jnp.float32).transpose(1, 0, 2)
+    h0 = jnp.zeros_like(xt[0])
+    _, hs = jax.lax.scan(step, h0, (la, xt))
+    return hs.transpose(1, 0, 2)

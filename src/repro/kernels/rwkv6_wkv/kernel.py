@@ -1,0 +1,86 @@
+"""RWKV-6 WKV recurrence TPU kernel (pl.pallas_call + BlockSpec).
+
+Per head, with outer-product state S in R^{hd x hd}:
+    out_t = r_t^T (S_{t-1} + (u * k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+TPU adaptation: CUDA RWKV kernels assign one thread per channel and rely on
+shared-memory broadcasts; here the state tile [hd, hd] (64x64 = one MXU tile)
+lives in VMEM scratch and the serial time loop runs rank-1 updates as VPU
+outer products — (batch*heads) fills the parallel grid dimension, time blocks
+are the sequential dimension carrying the state.
+
+Grid: (BH, nt) with nt sequential; layouts r/k/v/w: [BH, S, hd].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                s_scr, *, block_t: int, nt: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        s_scr[...] = s0_ref[0]
+
+    u = u_ref[0][:, None]                           # [hd, 1]: u_i broadcast
+
+    def body(i, s):
+        r = r_ref[0, i, :][None, :]                 # [1, hd]
+        k = k_ref[0, i, :][None, :]
+        v = v_ref[0, i, :][None, :]
+        w = w_ref[0, i, :][None, :]
+        kv = k.T @ v                                # [hd, hd] rank-1
+        out = r @ (s + u * kv)                      # [1, hd]
+        o_ref[0, i, :] = out[0]
+        return w.T * s + kv
+
+    s_scr[...] = jax.lax.fori_loop(0, block_t, body, s_scr[...])
+
+    @pl.when(it == nt - 1)
+    def _finish():
+        sT_ref[0] = s_scr[...]
+
+
+def wkv6_padded(r, k, v, w, u, s0, *, block_t: int = 64,
+                interpret: bool = False):
+    """r,k,v,w: [BH, S, hd] fp32; u: [BH_heads? no — [BH, hd]]; s0: [BH, hd, hd].
+
+    Returns (out [BH, S, hd], s_last [BH, hd, hd]) fp32.  S must be a
+    multiple of block_t (ops.py pads; padded steps use w=1, k=0 so the state
+    is unchanged).
+    """
+    BH, S, hd = r.shape
+    block_t = min(block_t, S)
+    nt = pl.cdiv(S, block_t)
+
+    kernel = functools.partial(_wkv_kernel, block_t=block_t, nt=nt)
+    seq_spec = pl.BlockSpec((1, block_t, hd), lambda bh, it: (bh, it, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nt),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, hd), lambda bh, it: (bh, 0)),          # u
+            pl.BlockSpec((1, hd, hd), lambda bh, it: (bh, 0, 0)),   # s0
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, hd, hd), lambda bh, it: (bh, 0, 0)),   # s_last
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u, s0)

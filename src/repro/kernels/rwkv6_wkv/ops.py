@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the WKV6 kernel: model layout + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv.kernel import wkv6_padded
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_t"))
+def wkv6(r, k, v, w, u, s0, *, interpret: bool = False, block_t: int = 64):
+    """Model layout: r,k,v,w [B,S,H,hd]; u [H,hd]; s0 [B,H,hd,hd].
+
+    Returns (out [B,S,H,hd] fp32, s_last [B,H,hd,hd] fp32) — drop-in for
+    models.rwkv6.wkv_scan."""
+    B, S, H, hd = r.shape
+    bt = min(block_t, max(S, 8))
+    S_p = -(-S // bt) * bt
+
+    def flat(t, pad_value=0.0):
+        t = t.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        return jnp.pad(t, ((0, 0), (0, S_p - S), (0, 0)),
+                       constant_values=pad_value)
+
+    rf, kf, vf = flat(r), flat(k), flat(v)
+    wf = flat(w, pad_value=1.0)          # padded steps: w=1, k=0 -> state fixed
+    uf = jnp.broadcast_to(u.astype(jnp.float32)[None], (B, H, hd)
+                          ).reshape(B * H, hd)
+    s0f = s0.astype(jnp.float32).reshape(B * H, hd, hd)
+    out, s_last = wkv6_padded(rf, kf, vf, wf, uf, s0f, block_t=bt,
+                              interpret=interpret)
+    out = out[:, :S].reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return out, s_last.reshape(B, H, hd, hd)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the WKV6 kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r,k,v,w: [BH, S, hd] fp32; u: [BH, hd]; s0: [BH, hd, hd].
+
+    Returns (out [BH, S, hd], s_last [BH, hd, hd])."""
+    rf, kf, vf, wf = (t.astype(jnp.float32).transpose(1, 0, 2)
+                      for t in (r, k, v, w))
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [BH, hd, hd]
+        out = jnp.einsum("bi,bij->bj", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    s_last, out = jax.lax.scan(step, s0.astype(jnp.float32), (rf, kf, vf, wf))
+    return out.transpose(1, 0, 2), s_last

@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill + decode loop with request batching.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen2.5-14b --smoke --requests 8 --prompt-len 16 --max-new 12
+
+A deliberately small but real serving loop: a queue of requests is packed
+into a fixed decode batch; prefill builds each sequence's cache; decode
+steps run the whole batch; finished sequences are swapped out.  (Per-slot
+cache insertion is the production path on TPU; the CPU demo re-prefills
+the batch when it changes, which is equivalent for correctness.)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import registry
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    bundle = registry.build(cfg)
+    if bundle.prefill_fn is None:
+        raise SystemExit(f"{args.arch} has no serve path")
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    prompts = [rng.integers(0, cfg.vocab_size, (args.prompt_len,))
+               for _ in range(args.requests)]
+    pending = list(range(args.requests))
+    done = {}
+    prefill = jax.jit(bundle.prefill_fn)
+    decode = jax.jit(bundle.decode_fn)
+
+    t0 = time.time()
+    n_decode_steps = 0
+    while pending:
+        batch_ids = pending[:args.batch]
+        pending = pending[len(batch_ids):]
+        toks = jnp.asarray(np.stack([prompts[i] for i in batch_ids]),
+                           jnp.int32)
+        if cfg.family == "encdec":
+            frames = jnp.zeros((len(batch_ids), cfg.encdec.encoder_seq_len,
+                                cfg.d_model), jnp.float32)
+            logits, state = prefill(params, frames, toks)
+        elif cfg.family == "vlm":
+            patches = jnp.zeros((len(batch_ids), cfg.vlm.num_image_tokens,
+                                 cfg.d_model), jnp.float32)
+            logits, state = prefill(params, toks, patches)
+        else:
+            logits, state = prefill(params, toks)
+        outs = [[int(jnp.argmax(logits[j]))] for j in range(len(batch_ids))]
+        for _ in range(args.max_new - 1):
+            last = jnp.asarray([[o[-1]] for o in outs], jnp.int32)
+            logits, state = decode(params, last, state)
+            n_decode_steps += 1
+            for j in range(len(batch_ids)):
+                outs[j].append(int(jnp.argmax(logits[j])))
+        for j, rid in enumerate(batch_ids):
+            done[rid] = outs[j]
+        print(f"completed batch {batch_ids} "
+              f"({len(done)}/{args.requests})", flush=True)
+    dt = time.time() - t0
+    total_new = sum(len(v) for v in done.values())
+    print(f"served {args.requests} requests, {total_new} tokens "
+          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s on CPU)")
+    for rid in sorted(done):
+        print(f"  req {rid}: {done[rid][:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Sharding derivation for serve-side state (KV caches / recurrent states)
+and inputs.  Train-side sharding lives in core/transparent.py.
+
+jit-boundary in/out_shardings require exact divisibility, so every rule is
+divisibility-guarded: e.g. GQA caches with KV=8 heads on a 16-way model axis
+shard ``head_dim`` instead (128 % 16 == 0) — attention then contracts a
+model-sharded dim and GSPMD inserts the score psum.
+
+Cache leaves are name-matched (the trees are ours, names are stable):
+  k/v        [L, B, Lc, KV, hd]   batch->dp; KV->model, else hd->model
+  ckv/krope  [L, B, Lc, R]        batch->dp; R->model when divisible
+  s          [L, B, H, hd, hd]    batch->dp; heads->model (wkv state)
+  h          [n, B, W]            batch->dp; lru width->model
+  conv       [n, B, cw-1, W]      batch->dp; width->model
+  x / cm     [L, B, D]            batch->dp
+  enc        [B, T, D]            batch->dp
+  pos/index  replicated
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+P = jax.sharding.PartitionSpec
+
+
+def _dp(dp_axes: Tuple[str, ...], batch: int, dp_total: int):
+    if not dp_axes or batch <= 1 or batch % max(dp_total, 1) != 0:
+        return None
+    return tuple(dp_axes)
+
+
+def serve_state_pspecs(state_structs, *, dp_axes: Tuple[str, ...],
+                       dp_total: int, model_size: int):
+    """PartitionSpec tree matching a decode-state struct tree."""
+
+    def _model(dim_size: int):
+        return "model" if model_size > 1 and dim_size % model_size == 0 \
+            else None
+
+    def rule(path, leaf):
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = p.key
+                break
+        nd = leaf.ndim
+        if name in ("pos", "index") or nd <= 1:
+            return P()
+        # batch dim position: stacked trees put it at dim 1; "enc" at dim 0
+        bdim = 0 if name == "enc" else 1
+        batch = leaf.shape[bdim] if nd > bdim else 1
+        dp = _dp(dp_axes, batch, dp_total)
+        spec = [None] * nd
+        if dp is not None:
+            spec[bdim] = dp
+        if name in ("k", "v") and nd == 5:
+            spec[3] = _model(leaf.shape[3])
+            if spec[3] is None:
+                spec[4] = _model(leaf.shape[4])      # shard head_dim instead
+        elif name in ("ckv", "krope") and nd == 4:
+            spec[3] = _model(leaf.shape[3])
+        elif name == "s" and nd == 5:
+            spec[2] = _model(leaf.shape[2])
+            if spec[2] is None:
+                spec[3] = _model(leaf.shape[3])
+        elif name == "h" and nd == 3:
+            spec[2] = _model(leaf.shape[2])
+        elif name == "conv" and nd == 4:
+            spec[3] = _model(leaf.shape[3])
+        elif name in ("x", "cm") and nd == 3:
+            pass                                     # small activations
+        elif name == "enc" and nd == 3:
+            pass                                     # replicated on model
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, state_structs)
+
+
+def serve_input_pspecs(input_structs, *, dp_axes: Tuple[str, ...],
+                       dp_total: int):
+    def rule(leaf):
+        if leaf.ndim == 0:
+            return P()
+        batch = leaf.shape[0]
+        dp = _dp(dp_axes, batch, dp_total)
+        return P(dp, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(rule, input_structs)
+
+
+def with_shardings(structs, pspecs, mesh):
+    return jax.tree.map(
+        lambda st, sp: jax.ShapeDtypeStruct(
+            st.shape, st.dtype,
+            sharding=jax.sharding.NamedSharding(mesh, sp)),
+        structs, pspecs)

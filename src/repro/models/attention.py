@@ -1,0 +1,430 @@
+"""Attention substrate: GQA (full / sliding-window / local) + DeepSeek MLA.
+
+Layouts: activations ``[batch, seq, d_model]``; heads ``[batch, seq, heads, head_dim]``.
+
+Three execution paths:
+  * ``attention_core``      — chunked online-softmax (double lax.scan), bounded
+                              memory at 32k+ contexts; the traced default.
+  * ``windowed_attention``  — per-q-block dynamic-slice of the KV range for
+                              sliding-window/local attention (subquadratic).
+  * ``decode_attend``       — single-step decode against a (ring-buffer) cache.
+
+On TPU the Pallas flash kernel (``repro.kernels.flash_attention``) replaces
+``attention_core`` when ``use_pallas=True`` (see transformer.py); the functions
+here double as its reference semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, apply_rope, dot
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    specs = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, kv * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, kv * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed2")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h * hd,), ("heads",), init="zeros")
+        specs["bk"] = ParamSpec((kv * hd,), ("kv_heads",), init="zeros")
+        specs["bv"] = ParamSpec((kv * hd,), ("kv_heads",), init="zeros")
+    return specs
+
+
+def mla_specs(cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    specs = {
+        # compressed kv + shared rope key
+        "w_dkv": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "rank")),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), ("rank",), init="zeros"),
+        "w_uk": ParamSpec((m.kv_lora_rank, h * m.qk_nope_head_dim), ("rank", "heads")),
+        "w_uv": ParamSpec((m.kv_lora_rank, h * m.v_head_dim), ("rank", "heads")),
+        "wo": ParamSpec((h * m.v_head_dim, d), ("heads", "embed2")),
+    }
+    if m.q_lora_rank:
+        specs["w_dq"] = ParamSpec((d, m.q_lora_rank), ("embed", "rank"))
+        specs["q_norm"] = ParamSpec((m.q_lora_rank,), ("rank",), init="zeros")
+        specs["w_uq"] = ParamSpec((m.q_lora_rank, h * qk_dim), ("rank", "heads"))
+    else:
+        specs["wq"] = ParamSpec((d, h * qk_dim), ("embed", "heads"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (full / causal)
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _gqa_scores(q, k, scale):
+    """q: [B,qb,KV,G,hd]  k: [B,kb,KV,hd]  ->  [B,KV,G,qb,kb] (fp32)."""
+    return jnp.einsum(
+        "bqkgh,btkh->bkgqt", q, k,
+        preferred_element_type=jnp.float32) * scale
+
+
+def attention_core(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                   window: int = 0, q_block: int = 512, kv_block: int = 1024,
+                   kv_valid: Optional[jax.Array] = None):
+    """Memory-bounded attention via double scan with online softmax.
+
+    q: [B,S,H,hd]; k,v: [B,T,KV,hd]; q_pos: [S] or [B,S]; k_pos: [T] or [B,T].
+    window>0 additionally masks keys older than ``window`` positions.
+    kv_valid: optional [B,T] bool mask of valid cache slots.
+    Returns [B,S,H,hd] in q.dtype.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]                   # may differ from hd (MLA)
+    G = H // KV
+    scale = hd ** -0.5
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    # pad to block multiples
+    S_p = -(-S // qb) * qb
+    T_p = -(-T // kb) * kb
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None, :], (B, S))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None, :], (B, T))
+    qp = jnp.pad(q, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, T_p - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, T_p - T), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(q_pos, ((0, 0), (0, S_p - S)), constant_values=-1)
+    kpos_p = jnp.pad(k_pos, ((0, 0), (0, T_p - T)), constant_values=2**30)
+    valid_p = (jnp.pad(kv_valid, ((0, 0), (0, T_p - T)), constant_values=False)
+               if kv_valid is not None
+               else jnp.pad(jnp.ones((B, T), bool), ((0, 0), (0, T_p - T)),
+                            constant_values=False))
+
+    nq, nk = S_p // qb, T_p // kb
+    qp = qp.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)      # [nq,B,qb,KV,G,hd]
+    kp = kp.reshape(B, nk, kb, KV, hd).transpose(1, 0, 2, 3, 4)           # [nk,B,kb,KV,hd]
+    vp = vp.reshape(B, nk, kb, KV, hd_v).transpose(1, 0, 2, 3, 4)
+    qpos_b = qpos_p.reshape(B, nq, qb).transpose(1, 0, 2)                  # [nq,B,qb]
+    kpos_b = kpos_p.reshape(B, nk, kb).transpose(1, 0, 2)
+    valid_b = valid_p.reshape(B, nk, kb).transpose(1, 0, 2)
+
+    def q_step(_, q_in):
+        q_i, qpos_i = q_in                                                # [B,qb,KV,G,hd], [B,qb]
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            k_j, v_j, kpos_j, valid_j = kv_in
+            s = _gqa_scores(q_i, k_j, scale)                              # [B,KV,G,qb,kb]
+            msk = valid_j[:, None, None, None, :]
+            if causal:
+                msk = msk & (kpos_j[:, None, None, None, :]
+                             <= qpos_i[:, None, None, :, None])
+            if window:
+                msk = msk & (kpos_j[:, None, None, None, :]
+                             > qpos_i[:, None, None, :, None] - window)
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qb, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kp, vp, kpos_b, valid_b))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]                       # [B,KV,G,qb,hd]
+        return None, out.transpose(0, 3, 1, 2, 4)                          # [B,qb,KV,G,hd]
+
+    _, out = jax.lax.scan(q_step, None, (qp, qpos_b))                      # [nq,B,qb,KV,G,hd]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S_p, H, hd_v)[:, :S]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window attention: per-q-block KV slice (subquadratic)
+# ---------------------------------------------------------------------------
+
+def windowed_attention(q, k, v, q_pos, k_pos, *, window: int, q_block: int = 512):
+    """Causal sliding-window attention; each q block attends a KV slice of
+    length ``window + q_block`` ending at the block's last position.
+
+    Shapes as in attention_core.  Assumes q and k cover the same contiguous
+    positions (train/prefill self-attention).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qb = min(q_block, S)
+    S_p = -(-S // qb) * qb
+    span = window + qb
+    if span >= T:  # window covers everything — fall back
+        return attention_core(q, k, v, q_pos, k_pos, causal=True, window=window)
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None, :], (B, S))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None, :], (B, T))
+    qp = jnp.pad(q, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(q_pos, ((0, 0), (0, S_p - S)), constant_values=-1)
+    nq = S_p // qb
+    qp = qp.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpos_b = qpos_p.reshape(B, nq, qb).transpose(1, 0, 2)
+    starts = jnp.arange(nq) * qb + qb - span                               # may be <0; clamped
+
+    def q_step(_, q_in):
+        q_i, qpos_i, start = q_in
+        start = jnp.clip(start, 0, T - span)
+        k_j = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)         # [B,span,KV,hd]
+        v_j = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        kpos_j = jax.lax.dynamic_slice_in_dim(k_pos, start, span, axis=1)  # [B,span]
+        s = _gqa_scores(q_i, k_j, scale)                                   # [B,KV,G,qb,span]
+        msk = (kpos_j[:, None, None, None, :] <= qpos_i[:, None, None, :, None])
+        msk &= (kpos_j[:, None, None, None, :] > qpos_i[:, None, None, :, None] - window)
+        s = jnp.where(msk, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(v_j.dtype), v_j,
+                         preferred_element_type=jnp.float32)
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, out = jax.lax.scan(q_step, None, (qp, qpos_b, starts))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S_p, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, cache_len: int, num_kv: int, head_dim: int, dtype):
+    """Cache slots carry their absolute position (-1 = empty) so ring-buffer
+    overwrites and windowing need no extra bookkeeping."""
+    return {
+        "k": jnp.zeros((batch, cache_len, num_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, num_kv, head_dim), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),       # absolute next position
+    }
+
+
+def cache_specs(batch: int, cache_len: int, num_kv: int, head_dim: int, dtype):
+    import numpy as np
+    S = jax.ShapeDtypeStruct
+    return {
+        "k": S((batch, cache_len, num_kv, head_dim), jnp.dtype(dtype)),
+        "v": S((batch, cache_len, num_kv, head_dim), jnp.dtype(dtype)),
+        "pos": S((cache_len,), jnp.int32),
+        "index": S((), jnp.int32),
+    }
+
+
+def cache_update(cache, k_new, v_new):
+    """Append one step (k_new/v_new: [B,1,KV,hd]) at ring slot index % len."""
+    L = cache["k"].shape[1]
+    slot = cache["index"] % L
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], cache["index"][None], slot, axis=0)
+    return {"k": k, "v": v, "pos": pos, "index": cache["index"] + 1}
+
+
+def decode_attend(q, cache, *, window: int = 0):
+    """q: [B,1,H,hd] against the cache. Returns [B,1,H,hd]."""
+    B, _, H, hd = q.shape
+    KV = cache["k"].shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    cur = cache["index"] - 1                      # position of the newest token
+    kpos = cache["pos"]                           # [L]
+    valid = kpos >= 0
+    valid &= kpos <= cur
+    if window:
+        valid &= kpos > cur - window
+    q_ = q.reshape(B, 1, KV, G, hd)
+    s = _gqa_scores(q_, cache["k"], scale)        # [B,KV,G,1,L]
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(cache["v"].dtype), cache["v"],
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full GQA block apply (projections + rope + core/window/decode dispatch)
+# ---------------------------------------------------------------------------
+
+def attention_apply(cfg, p, x, positions, *, cache=None, use_pallas: bool = False):
+    """Self-attention for train/prefill (cache=None) or one decode step.
+
+    Returns (out [B,S,D], new_cache_or_None).
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    cd = x.dtype
+
+    q = dot(x, p["wq"], cd)
+    k = dot(x, p["wk"], cd)
+    v = dot(x, p["wv"], cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = _split_heads(q, H, hd)
+    k = _split_heads(k, KV, hd)
+    v = _split_heads(v, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    window = cfg.window if cfg.attn_kind in ("swa", "local") else 0
+    if cache is None:
+        if use_pallas:
+            from repro.kernels.flash_attention import ops as fa_ops
+            core = functools.partial(fa_ops.flash_attention,
+                                     causal=True, window=window)
+        elif window and S > 2 * window:
+            core = lambda q, k, v: windowed_attention(
+                q, k, v, positions, positions, window=window,
+                q_block=cfg.attn_q_block)
+        else:
+            core = lambda q, k, v: attention_core(
+                q, k, v, positions, positions, causal=True, window=window,
+                q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+        if cfg.attn_remat and not use_pallas:
+            # flash-style custom-VJP backward: saves only (O, logsumexp) and
+            # recomputes score blocks in the backward — kills the stacked
+            # probability residuals that dominate the traced path's HBM term
+            # (nested jax.checkpoint does NOT achieve this: the scan
+            # transpose re-stacks them; see EXPERIMENTS.md §Perf).
+            from repro.models.flash_vjp import flash_attention_vjp
+            core = functools.partial(
+                flash_attention_vjp, causal=True, window=window,
+                q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+        out = core(q, k, v)
+        new_cache = None
+    else:
+        new_cache = cache_update(cache, k, v)
+        out = decode_attend(q, new_cache, window=window)
+    out = out.reshape(B, S, H * hd)
+    return dot(out, p["wo"], cd), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA apply (DeepSeek-V2): compressed KV cache, expanded for train/prefill,
+# absorbed projections for decode.
+# ---------------------------------------------------------------------------
+
+def mla_init_cache(batch: int, cache_len: int, cfg, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_cache_specs(batch: int, cache_len: int, cfg, dtype):
+    m = cfg.mla
+    S = jax.ShapeDtypeStruct
+    return {
+        "ckv": S((batch, cache_len, m.kv_lora_rank), jnp.dtype(dtype)),
+        "krope": S((batch, cache_len, m.qk_rope_head_dim), jnp.dtype(dtype)),
+        "pos": S((cache_len,), jnp.int32),
+        "index": S((), jnp.int32),
+    }
+
+
+def _mla_q(cfg, p, x, positions, cd):
+    m = cfg.mla
+    H = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        from repro.models.common import rms_norm
+        cq = rms_norm(dot(x, p["w_dq"], cd), p["q_norm"], cfg.norm_eps)
+        q = dot(cq, p["w_uq"], cd)
+    else:
+        q = dot(x, p["wq"], cd)
+    q = q.reshape(*x.shape[:2], H, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(cfg, p, x, positions, *, cache=None):
+    """Returns (out [B,S,D], new_cache_or_None)."""
+    from repro.models.common import rms_norm
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cd = x.dtype
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    dkv = dot(x, p["w_dkv"], cd)                                  # [B,S,rank+rope]
+    ckv, krope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    q_nope, q_rope = _mla_q(cfg, p, x, positions, cd)
+
+    if cache is None:
+        # expanded path: materialize per-head K/V from the latent
+        k_nope = dot(ckv, p["w_uk"], cd).reshape(B, S, H, m.qk_nope_head_dim)
+        vv = dot(ckv, p["w_uv"], cd).reshape(B, S, H, m.v_head_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))],
+            axis=-1)
+        out = attention_core(q, k, vv, positions, positions, causal=True)
+        out = out.reshape(B, S, H * m.v_head_dim)
+        return dot(out, p["wo"], cd), None
+
+    # absorbed decode path: score in the latent space (cache stays compressed)
+    L = cache["ckv"].shape[1]
+    slot = cache["index"] % L
+    new_cache = {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), slot, axis=1),
+        "krope": jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope.astype(cache["krope"].dtype), slot, axis=1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], cache["index"][None], slot, axis=0),
+        "index": cache["index"] + 1,
+    }
+    cur = new_cache["index"] - 1
+    valid = (new_cache["pos"] >= 0) & (new_cache["pos"] <= cur)
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim).astype(cd)
+    # absorb: q' = q_nope @ W_uk^T  -> latent-space queries [B,1,H,rank]
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk, preferred_element_type=jnp.float32)
+    s = jnp.einsum("bshr,btr->bhst", q_lat.astype(cd), new_cache["ckv"],
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bshn,btn->bhst", q_rope, new_cache["krope"],
+                    preferred_element_type=jnp.float32)
+    s = jnp.where(valid[None, None, None, :], s * scale, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    # output in latent space, then up-project via W_uv
+    o_lat = jnp.einsum("bhst,btr->bshr", pr.astype(cd), new_cache["ckv"],
+                       preferred_element_type=jnp.float32).astype(cd)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim).astype(cd)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv, preferred_element_type=jnp.float32)
+    out = out.astype(cd).reshape(B, 1, H * m.v_head_dim)
+    return dot(out, p["wo"], cd), new_cache

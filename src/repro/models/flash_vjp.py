@@ -1,0 +1,180 @@
+"""Flash-attention forward/backward with custom VJP — O(S) residuals.
+
+Differentiating the scanned attention (attention_core) stacks the score
+blocks as scan residuals even under jax.checkpoint (the scan transpose
+needs them; EXPERIMENTS.md §Perf cell-1 iter 7 measures the refutation).
+This module implements the standard FlashAttention backward: save only
+(O, L=logsumexp) per row, recompute P block-by-block in the backward and
+accumulate dq / dk / dv in scan carries — no stacked probability tensors.
+
+Layout [B, S, KV, G, hd] internally; public API matches attention_core for
+the causal/windowed self-attention case (q_pos == k_pos == arange).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _blocks(x, nb, bs, axis=1):
+    # [B, S, ...] -> [nb, B, bs, ...]
+    shape = x.shape
+    x = x.reshape(shape[0], nb, bs, *shape[2:])
+    return jnp.moveaxis(x, 1, 0)
+
+
+def _unblocks(x, S):
+    # [nb, B, bs, ...] -> [B, S, ...]
+    x = jnp.moveaxis(x, 0, 1)
+    return x.reshape(x.shape[0], S, *x.shape[3:])
+
+
+def _mask(q0, k0, bq, bk, S, causal, window):
+    qp = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kp = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = kp < S
+    if causal:
+        m &= kp <= qp
+    if window:
+        m &= kp > qp - window
+    return m
+
+
+def _fwd(q, k, v, causal, window, bq, bk):
+    """Returns (out fp32 [B,S,H? -> B,S,KV,G,hd], L [B,S,KV,G])."""
+    B, S, KV, G, hd = q.shape
+    nq, nk = S // bq, S // bk
+    scale = hd ** -0.5
+    qb = _blocks(q, nq, bq)                         # [nq,B,bq,KV,G,hd]
+    kb = _blocks(k, nk, bk)                         # [nk,B,bk,KV,hd]
+    vb = _blocks(v, nk, bk)
+
+    def q_step(_, qi):
+        qblk, iq = qi
+
+        def kv_step(carry, kj):
+            m_p, l_p, acc = carry
+            kblk, vblk, ik = kj
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(iq * bq, ik * bk, bq, bk, S, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_n = jnp.maximum(m_p, jnp.max(s, -1))
+            corr = jnp.exp(m_p - m_n)
+            p = jnp.exp(s - m_n[..., None])
+            l_n = l_p * corr + jnp.sum(p, -1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_n, l_n, acc), None
+
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        L = m + jnp.log(jnp.maximum(l, 1e-30))            # logsumexp rows
+        return None, (o.transpose(0, 3, 1, 2, 4),          # [B,bq,KV,G,hd]
+                      L.transpose(0, 3, 1, 2))             # [B,bq,KV,G]
+
+    _, (ob, Lb) = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    return _unblocks(ob, S), _unblocks(Lb, S)
+
+
+def _bwd(res, do, causal, window, bq, bk):
+    q, k, v, o, L = res
+    B, S, KV, G, hd = q.shape
+    nq, nk = S // bq, S // bk
+    scale = hd ** -0.5
+    do = do.astype(jnp.float32)
+    # D_i = rowsum(dO * O)
+    D = jnp.sum(do * o, axis=-1)                          # [B,S,KV,G]
+    qb = _blocks(q, nq, bq)
+    dob = _blocks(do, nq, bq)
+    Lb = _blocks(L, nq, bq)
+    Db = _blocks(D, nq, bq)
+    kb = _blocks(k, nk, bk)
+    vb = _blocks(v, nk, bk)
+
+    def kv_step(dq_full, kj):
+        """Outer scan over kv blocks; carry = dq accumulator [nq,...]."""
+        kblk, vblk, ik = kj
+
+        def q_step(carry, qi):
+            dkj, dvj = carry
+            qblk, doblk, Lblk, Dblk, iq = qi
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(iq * bq, ik * bk, bq, bk, S, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - Lblk.transpose(0, 2, 3, 1)[..., None])  # [B,KV,G,bq,bk]
+            dov = jnp.einsum("bqkgh,btkh->bkgqt", doblk, vblk,
+                             preferred_element_type=jnp.float32)
+            ds = p * (dov - Dblk.transpose(0, 2, 3, 1)[..., None]) * scale
+            dq_blk = jnp.einsum("bkgqt,btkh->bqkgh", ds, kblk,
+                                preferred_element_type=jnp.float32)
+            dkj = dkj + jnp.einsum("bkgqt,bqkgh->btkh", ds, qblk,
+                                   preferred_element_type=jnp.float32)
+            dvj = dvj + jnp.einsum("bkgqt,bqkgh->btkh",
+                                   p.astype(jnp.float32), doblk,
+                                   preferred_element_type=jnp.float32)
+            return (dkj, dvj), dq_blk
+
+        z = jnp.zeros((B, bk, KV, hd), jnp.float32)
+        (dkj, dvj), dq_blocks = jax.lax.scan(
+            q_step, (z, z), (qb, dob, Lb, Db, jnp.arange(nq)))
+        return dq_full + dq_blocks, (dkj, dvj)
+
+    dq0 = jnp.zeros((nq, B, bq, KV, G, hd), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(kv_step, dq0, (kb, vb, jnp.arange(nk)))
+    return (_unblocks(dq, S).astype(q.dtype),
+            _unblocks(dk, S).astype(k.dtype),
+            _unblocks(dv, S).astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, bq, bk):
+    out, _ = _fwd(q, k, v, causal, window, bq, bk)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, causal, window, bq, bk):
+    out, L = _fwd(q, k, v, causal, window, bq, bk)
+    return out.astype(q.dtype), (q, k, v, out, L)
+
+
+def _flash_bwd(causal, window, bq, bk, res, g):
+    return _bwd(res, g, causal, window, bq, bk)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_vjp(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_block: int = 512, kv_block: int = 1024):
+    """Drop-in for attention_core on self-attention (contiguous positions).
+
+    q: [B,S,H,hd]; k,v: [B,S,KV,hd] -> [B,S,H,hd].  Pads S to tile size.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(q_block, S)
+    bk = min(kv_block, S)
+    S_p = -(-S // max(bq, bk)) * max(bq, bk)
+    if S_p % bq:
+        S_p = -(-S_p // bq) * bq
+    pad = S_p - S
+    q5 = q.reshape(B, S, KV, G, hd)
+    if pad:
+        q5 = jnp.pad(q5, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = _flash(q5, k, v, causal, window, bq, bk)
+    return out[:, :S].reshape(B, S, H, hd)

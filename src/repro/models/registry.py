@@ -1,0 +1,250 @@
+"""Architecture registry: one uniform interface over all model families.
+
+A ``ModelBundle`` exposes, per architecture:
+  * ``specs``                 — ParamSpec tree (init / dry-run / shardings)
+  * ``loss_fn(params,batch)``       — train_* cells
+  * ``prefill_fn(params,**inputs)`` — prefill_* cells
+  * ``decode_fn(params,tokens,state)`` — decode_* / long_* cells
+  * ``*_input_specs(shape)``  — ShapeDtypeStruct stand-ins per assignment
+    (modality frontends are stubs: whisper gets frame embeddings, pixtral
+    gets patch embeddings)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common, transformer, rglru, rwkv6, whisper, pixtral
+
+
+S_ = jax.ShapeDtypeStruct
+
+
+@dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    specs: Any
+    loss_fn: Callable                     # (params, batch) -> scalar loss
+    prefill_fn: Optional[Callable]        # (params, **inputs) -> (logits, state)
+    decode_fn: Optional[Callable]         # (params, tokens, state) -> (logits, state)
+    train_input_specs: Callable           # (ShapeConfig) -> dict of SDS
+    prefill_input_specs: Callable
+    decode_state_specs: Callable          # (ShapeConfig) -> state SDS tree
+    init_decode_state: Callable           # (batch, seq_len) -> state arrays
+
+    def param_structs(self):
+        return common.param_shape_structs(self.specs)
+
+    def init_params(self, key):
+        return common.init_params(self.specs, key)
+
+
+def _lm_train_specs(cfg, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": S_((B, S), jnp.int32), "labels": S_((B, S), jnp.int32)}
+
+
+def _lm_prefill_specs(cfg, shape: ShapeConfig):
+    return {"tokens": S_((shape.global_batch, shape.seq_len), jnp.int32)}
+
+
+def _lm_decode_tokens(shape: ShapeConfig):
+    return {"tokens": S_((shape.global_batch, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Family builders
+# ---------------------------------------------------------------------------
+
+def _build_lm(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        specs=transformer.lm_specs(cfg),
+        loss_fn=functools.partial(transformer.lm_loss, cfg),
+        prefill_fn=lambda params, tokens: transformer.lm_prefill(
+            cfg, params, tokens,
+            cache_len=transformer.decode_cache_len(cfg, tokens.shape[1])),
+        decode_fn=functools.partial(transformer.lm_decode, cfg),
+        train_input_specs=functools.partial(_lm_train_specs, cfg),
+        prefill_input_specs=functools.partial(_lm_prefill_specs, cfg),
+        decode_state_specs=lambda shape: transformer.decode_cache_specs(
+            cfg, shape.global_batch, shape.seq_len),
+        init_decode_state=functools.partial(
+            lambda cfg, b, s: transformer.init_decode_caches(cfg, b, s), cfg),
+    )
+
+
+def _build_rg(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        specs=rglru.rg_specs(cfg),
+        loss_fn=functools.partial(rglru.rg_loss, cfg),
+        prefill_fn=lambda params, tokens: rglru.rg_prefill(cfg, params, tokens),
+        decode_fn=functools.partial(rglru.rg_decode, cfg),
+        train_input_specs=functools.partial(_lm_train_specs, cfg),
+        prefill_input_specs=functools.partial(_lm_prefill_specs, cfg),
+        decode_state_specs=lambda shape: rglru.rg_state_specs(
+            cfg, shape.global_batch, shape.seq_len),
+        init_decode_state=functools.partial(
+            lambda cfg, b, s: rglru.rg_init_states(cfg, b, s), cfg),
+    )
+
+
+def _build_rwkv(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        specs=rwkv6.rwkv_specs(cfg),
+        loss_fn=functools.partial(rwkv6.rwkv_loss, cfg),
+        prefill_fn=lambda params, tokens: rwkv6.rwkv_prefill(cfg, params, tokens),
+        decode_fn=functools.partial(rwkv6.rwkv_decode, cfg),
+        train_input_specs=functools.partial(_lm_train_specs, cfg),
+        prefill_input_specs=functools.partial(_lm_prefill_specs, cfg),
+        decode_state_specs=lambda shape: rwkv6.rwkv_state_specs(
+            cfg, shape.global_batch),
+        init_decode_state=functools.partial(
+            lambda cfg, b, s: rwkv6.rwkv_init_states(cfg, b), cfg),
+    )
+
+
+def _build_whisper(cfg: ModelConfig) -> ModelBundle:
+    e = cfg.encdec
+
+    def train_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        return {
+            "frames": S_((B, e.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+            "tokens": S_((B, S), jnp.int32),
+            "labels": S_((B, S), jnp.int32),
+        }
+
+    def prefill_specs(shape: ShapeConfig):
+        s = train_specs(shape)
+        return {"frames": s["frames"], "tokens": s["tokens"]}
+
+    def state_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        from repro.models.attention import cache_specs
+        one = cache_specs(B, S, cfg.num_kv_heads, cfg.resolved_head_dim,
+                          cfg.compute_dtype)
+        stacked = jax.tree.map(
+            lambda x: S_((cfg.num_layers,) + x.shape, x.dtype), one)
+        return {"self": stacked,
+                "enc": S_((B, e.encoder_seq_len, cfg.d_model),
+                          jnp.dtype(cfg.compute_dtype))}
+
+    def init_state(b, s):
+        from repro.models.attention import init_cache
+        one = init_cache(b, s, cfg.num_kv_heads, cfg.resolved_head_dim,
+                         jnp.dtype(cfg.compute_dtype))
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+        return {"self": stacked,
+                "enc": jnp.zeros((b, e.encoder_seq_len, cfg.d_model),
+                                 jnp.dtype(cfg.compute_dtype))}
+
+    return ModelBundle(
+        cfg=cfg,
+        specs=whisper.whisper_specs(cfg),
+        loss_fn=functools.partial(whisper.whisper_loss, cfg),
+        prefill_fn=lambda params, frames, tokens: whisper.whisper_prefill(
+            cfg, params, frames, tokens),
+        decode_fn=functools.partial(whisper.whisper_decode, cfg),
+        train_input_specs=train_specs,
+        prefill_input_specs=prefill_specs,
+        decode_state_specs=state_specs,
+        init_decode_state=init_state,
+    )
+
+
+def _build_pixtral(cfg: ModelConfig) -> ModelBundle:
+    v = cfg.vlm
+    n_img = v.num_image_tokens
+
+    def train_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        s_text = max(S - n_img, 1)
+        return {
+            "tokens": S_((B, s_text), jnp.int32),
+            "patches": S_((B, n_img, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+            "labels": S_((B, s_text), jnp.int32),
+        }
+
+    def prefill_specs(shape: ShapeConfig):
+        s = train_specs(shape)
+        return {"tokens": s["tokens"], "patches": s["patches"]}
+
+    return ModelBundle(
+        cfg=cfg,
+        specs=pixtral.pixtral_specs(cfg),
+        loss_fn=functools.partial(pixtral.pixtral_loss, cfg),
+        prefill_fn=lambda params, tokens, patches: pixtral.pixtral_prefill(
+            cfg, params, tokens, patches),
+        decode_fn=functools.partial(transformer.lm_decode, cfg),
+        train_input_specs=train_specs,
+        prefill_input_specs=prefill_specs,
+        decode_state_specs=lambda shape: transformer.decode_cache_specs(
+            cfg, shape.global_batch, shape.seq_len),
+        init_decode_state=functools.partial(
+            lambda cfg, b, s: transformer.init_decode_caches(cfg, b, s), cfg),
+    )
+
+
+_BUILDERS = {
+    "dense": _build_lm,
+    "moe": _build_lm,
+    "hybrid": _build_rg,
+    "ssm": _build_rwkv,
+    "encdec": _build_whisper,
+    "vlm": _build_pixtral,
+}
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    cfg.validate()
+    return _BUILDERS[cfg.family](cfg)
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter / FLOP accounting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    bundle = build(cfg)
+    total = 0
+    for leaf in common.spec_leaves(bundle.specs):
+        n = int(np.prod(leaf.shape))
+        total += n
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        # each expert's FFN params (gate+up+down), counted per layer
+        per_expert = 3 * cfg.d_model * m.d_ff_expert
+        n_layers = cfg.num_layers
+        inactive = (m.num_experts - m.top_k) * per_expert * n_layers
+        total -= inactive
+    return total
+
+
+def embed_param_count(cfg: ModelConfig) -> int:
+    n = cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        n *= 2
+    return n
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS per step: 6·N·T (train), 2·N·T (prefill), 2·N·B (decode),
+    with N = active params excluding the input embedding table (lm_head kept)."""
+    n_active = count_params(cfg, active_only=True)
+    n_active -= cfg.vocab_size * cfg.d_model          # input table is a gather
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch        # decode: 1 new token/seq

@@ -1,0 +1,299 @@
+"""RWKV-6 "Finch": attention-free time mixing with data-dependent decay.
+
+Per layer:  time-mix (WKV6 recurrence over an outer-product state) +
+channel-mix (squared-relu MLP with token-shift lerp).
+
+WKV6 per head (state S in R^{hd x hd}, decay w_t data-dependent — the Finch
+hallmark, arXiv:2404.05892):
+    out_t = r_t^T (S_{t-1} + (u * k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+Traced/ref path runs the recurrence with lax.scan over time; the Pallas
+kernel (kernels/rwkv6_wkv) is the block-chunked TPU version; decode is the
+one-step form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ParamSpec, apply_norm, cast_tree, dot,
+                                 layer_norm, norm_specs, stack_specs)
+from repro.models.transformer import (cross_entropy, embed_lookup, embed_specs,
+                                      head_specs, lm_head)
+
+
+def _heads(cfg):
+    hd = cfg.rwkv.head_size
+    return cfg.d_model // hd, hd
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def time_mix_specs(cfg):
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    r = cfg.rwkv.decay_lora
+    return {
+        "ln": norm_specs(cfg),
+        "mu_r": ParamSpec((d,), ("embed",), init="small"),
+        "mu_k": ParamSpec((d,), ("embed",), init="small"),
+        "mu_v": ParamSpec((d,), ("embed",), init="small"),
+        "mu_g": ParamSpec((d,), ("embed",), init="small"),
+        "mu_w": ParamSpec((d,), ("embed",), init="small"),
+        "w_r": ParamSpec((d, d), ("embed", "heads")),
+        "w_k": ParamSpec((d, d), ("embed", "heads")),
+        "w_v": ParamSpec((d, d), ("embed", "heads")),
+        "w_g": ParamSpec((d, d), ("embed", "heads")),
+        "w_o": ParamSpec((d, d), ("heads", "embed2")),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": ParamSpec((d,), ("embed",), init="small"),
+        "decay_a": ParamSpec((d, r), ("embed", "rank"), init="small"),
+        "decay_b": ParamSpec((r, d), ("rank", "embed2"), init="small"),
+        "bonus_u": ParamSpec((h, hd), (None, None), init="small"),
+        # per-head output groupnorm
+        "gn_scale": ParamSpec((d,), ("embed",), init="ones"),
+        "gn_bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def channel_mix_specs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln": norm_specs(cfg),
+        "mu_k": ParamSpec((d,), ("embed",), init="small"),
+        "mu_r": ParamSpec((d,), ("embed",), init="small"),
+        "w_k": ParamSpec((d, f), ("embed", "mlp")),
+        "w_v": ParamSpec((f, d), ("mlp", "embed2")),
+        "w_r": ParamSpec((d, d), ("embed", "embed2")),
+    }
+
+
+def layer_specs(cfg):
+    return {"tm": time_mix_specs(cfg), "cm": channel_mix_specs(cfg)}
+
+
+def rwkv_specs(cfg):
+    specs = {
+        "embed": embed_specs(cfg),
+        "layers": stack_specs(layer_specs(cfg), cfg.num_layers),
+        "final_norm": norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = head_specs(cfg)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r, k, v, w, u, s0=None, use_pallas: bool = False):
+    """r,k,v,w: [B,S,H,hd] (w = decay in (0,1), fp32); u: [H,hd].
+
+    Returns (out [B,S,H,hd] fp32, s_last [B,H,hd,hd] fp32)."""
+    B, S, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    if use_pallas:
+        from repro.kernels.rwkv6_wkv import ops as wkv_ops
+        return wkv_ops.wkv6(r, k, v, w, u, s0)
+    rf, kf, vf, wf = (t.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for t in (r, k, v, w))                     # [S,B,H,hd]
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]               # [B,H,hd,hd]
+        out = jnp.einsum("bhi,bhij->bhj", r_t,
+                         s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    s_last, out = jax.lax.scan(step, s0, (rf, kf, vf, wf))
+    return out.transpose(1, 0, 2, 3), s_last
+
+
+def wkv_step(r, k, v, w, u, s):
+    """One decode step; r,k,v,w: [B,H,hd]."""
+    kv = k[..., :, None] * v[..., None, :]
+    out = jnp.einsum("bhi,bhij->bhj", r, s + u[None, :, :, None] * kv)
+    s = w[..., :, None] * s + kv
+    return out, s
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _lerp(x, z, mu):
+    return x + (z - x) * mu.astype(x.dtype)
+
+
+def _shift(x, last=None):
+    """z_t = x_{t-1}; last: [B,D] carries state across decode steps."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay in (0,1), fp32."""
+    x32 = xw.astype(jnp.float32)
+    lora = jnp.tanh(x32 @ p["decay_a"].astype(jnp.float32)) @ p["decay_b"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(p["decay_w0"].astype(jnp.float32) + lora))
+
+
+def time_mix_apply(cfg, p, x, state=None, use_pallas=False):
+    """state: {"x": [B,D], "s": [B,H,hd,hd]} or None. -> (y, new_state)."""
+    cd = x.dtype
+    B, S, D = x.shape
+    H, hd = _heads(cfg)
+    xin = apply_norm(cfg, p["ln"], x)
+    z = _shift(xin, state["x"] if state is not None else None)
+    r = dot(_lerp(xin, z, p["mu_r"]), p["w_r"], cd).reshape(B, S, H, hd)
+    k = dot(_lerp(xin, z, p["mu_k"]), p["w_k"], cd).reshape(B, S, H, hd)
+    v = dot(_lerp(xin, z, p["mu_v"]), p["w_v"], cd).reshape(B, S, H, hd)
+    g = jax.nn.silu(dot(_lerp(xin, z, p["mu_g"]), p["w_g"], cd))
+    w = _decay(p, _lerp(xin, z, p["mu_w"])).reshape(B, S, H, hd)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    if state is None:
+        out, s_last = wkv_scan(r, k, v, w, u, use_pallas=use_pallas)
+        new_state = None if state is None else state
+        new_state = {"x": xin[:, -1], "s": s_last}
+    else:
+        out, s_last = wkv_step(r[:, 0].astype(jnp.float32),
+                               k[:, 0].astype(jnp.float32),
+                               v[:, 0].astype(jnp.float32),
+                               w[:, 0], u, state["s"])
+        out = out[:, None]
+        new_state = {"x": xin[:, -1], "s": s_last}
+
+    # per-head group norm on the flattened head outputs
+    out = out.reshape(B, S, H, hd)
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 64e-5)
+    out = out.reshape(B, S, D).astype(cd)
+    out = out * p["gn_scale"].astype(cd) + p["gn_bias"].astype(cd)
+    y = dot(out * g, p["w_o"], cd)
+    return x + y, new_state
+
+
+def channel_mix_apply(cfg, p, x, state=None):
+    cd = x.dtype
+    xin = apply_norm(cfg, p["ln"], x)
+    z = _shift(xin, state if state is not None else None)
+    k = dot(_lerp(xin, z, p["mu_k"]), p["w_k"], cd)
+    k = jnp.square(jax.nn.relu(k))
+    kv = dot(k, p["w_v"], cd)
+    rr = jax.nn.sigmoid(dot(_lerp(xin, z, p["mu_r"]), p["w_r"], cd))
+    return x + rr * kv, xin[:, -1]
+
+
+def layer_apply(cfg, p, x, state=None, use_pallas=False):
+    tm_state = state["tm"] if state is not None else None
+    cm_state = state["cm"] if state is not None else None
+    x, new_tm = time_mix_apply(cfg, p["tm"], x, tm_state, use_pallas)
+    x, new_cm = channel_mix_apply(cfg, p["cm"], x, cm_state)
+    if state is None:
+        return x, None
+    return x, {"tm": new_tm, "cm": new_cm}
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def rwkv_forward(cfg, params, tokens, use_pallas=False):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_lookup(cfg, params, tokens, cd)
+    fn = functools.partial(layer_apply, cfg, use_pallas=use_pallas)
+    if cfg.remat != "none":
+        fn = jax.checkpoint(fn)
+
+    def body(x, lp):
+        x, _ = fn(lp, x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def rwkv_loss(cfg, params, batch, *, use_pallas=False):
+    params = cast_tree(params, cfg.compute_dtype)
+    x = rwkv_forward(cfg, params, batch["tokens"], use_pallas=use_pallas)
+    logits = lm_head(cfg, params, x)
+    return cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+def rwkv_init_states(cfg, batch: int):
+    H, hd = _heads(cfg)
+    cd = jnp.dtype(cfg.compute_dtype)
+    one = {
+        "tm": {"x": jnp.zeros((batch, cfg.d_model), cd),
+               "s": jnp.zeros((batch, H, hd, hd), jnp.float32)},
+        "cm": jnp.zeros((batch, cfg.d_model), cd),
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+
+
+def rwkv_state_specs(cfg, batch: int):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        jax.eval_shape(lambda: rwkv_init_states(cfg, batch)))
+
+
+def rwkv_decode(cfg, params, tokens, states):
+    """tokens [B,1] -> (logits [B,V], new_states). Position-free (no rope)."""
+    params = cast_tree(params, cfg.compute_dtype)
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_lookup(cfg, params, tokens, cd)
+
+    def body(x, xs):
+        lp, st = xs
+        return layer_apply(cfg, lp, x, st)
+
+    x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params, x)
+    return logits[:, 0], new_states
+
+
+def rwkv_prefill(cfg, params, tokens, *, use_pallas=False):
+    """Full forward materializing final states. -> (last_logits, states)."""
+    params = cast_tree(params, cfg.compute_dtype)
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_lookup(cfg, params, tokens, cd)
+
+    def body(x, lp):
+        xin = apply_norm(cfg, lp["tm"]["ln"], x)
+        # time mix with state collection
+        B, S, D = x.shape
+        H, hd = _heads(cfg)
+        z = _shift(xin)
+        r = dot(_lerp(xin, z, lp["tm"]["mu_r"]), lp["tm"]["w_r"], cd).reshape(B, S, H, hd)
+        k = dot(_lerp(xin, z, lp["tm"]["mu_k"]), lp["tm"]["w_k"], cd).reshape(B, S, H, hd)
+        v = dot(_lerp(xin, z, lp["tm"]["mu_v"]), lp["tm"]["w_v"], cd).reshape(B, S, H, hd)
+        g = jax.nn.silu(dot(_lerp(xin, z, lp["tm"]["mu_g"]), lp["tm"]["w_g"], cd))
+        w = _decay(lp["tm"], _lerp(xin, z, lp["tm"]["mu_w"])).reshape(B, S, H, hd)
+        u = lp["tm"]["bonus_u"].astype(jnp.float32)
+        out, s_last = wkv_scan(r, k, v, w, u, use_pallas=use_pallas)
+        tm_state = {"x": xin[:, -1], "s": s_last}
+        out = out.reshape(B, S, H, hd)
+        mu_ = jnp.mean(out, axis=-1, keepdims=True)
+        var = jnp.var(out, axis=-1, keepdims=True)
+        out = ((out - mu_) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, D).astype(cd)
+        out = out * lp["tm"]["gn_scale"].astype(cd) + lp["tm"]["gn_bias"].astype(cd)
+        x = x + dot(out * g, lp["tm"]["w_o"], cd)
+        x, cm_state = channel_mix_apply(cfg, lp["cm"], x)
+        return x, {"tm": tm_state, "cm": cm_state}
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params, x[:, -1:])
+    return logits[:, 0], states

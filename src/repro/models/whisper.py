@@ -1,0 +1,216 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB).
+
+Per the assignment, ``[audio]`` entries exercise the transformer backbone
+only: ``input_specs()`` provides precomputed frame embeddings [B, T_enc, D]
+in place of the mel-spectrogram conv frontend.
+
+Whisper idioms kept: pre-LN layernorm, GELU MLP with biases, learned
+positions, cross-attention in every decoder layer, sinusoid-free stub.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (ParamSpec, apply_norm, cast_tree, dot,
+                                 norm_specs, stack_specs)
+from repro.models.transformer import cross_entropy, embed_specs, lm_head
+
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def cross_attention_specs(cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    return {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, kv * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, kv * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed2")),
+        "bq": ParamSpec((h * hd,), ("heads",), init="zeros"),
+        "bv": ParamSpec((kv * hd,), ("kv_heads",), init="zeros"),
+    }
+
+
+def encoder_layer_specs(cfg):
+    return {"ln1": norm_specs(cfg), "attn": attn.attention_specs(cfg),
+            "ln2": norm_specs(cfg), "mlp": mlp_mod.mlp_specs(cfg)}
+
+
+def decoder_layer_specs(cfg):
+    return {"ln1": norm_specs(cfg), "attn": attn.attention_specs(cfg),
+            "ln_x": norm_specs(cfg), "xattn": cross_attention_specs(cfg),
+            "ln2": norm_specs(cfg), "mlp": mlp_mod.mlp_specs(cfg)}
+
+
+def whisper_specs(cfg):
+    e = cfg.encdec
+    return {
+        "embed": embed_specs(cfg),                       # decoder token embed
+        "enc_pos": ParamSpec((e.encoder_seq_len, cfg.d_model), (None, "embed"),
+                             init="small"),
+        "encoder": stack_specs(encoder_layer_specs(cfg), e.num_encoder_layers),
+        "enc_norm": norm_specs(cfg),
+        "decoder": stack_specs(decoder_layer_specs(cfg), cfg.num_layers),
+        "final_norm": norm_specs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def cross_attention_apply(cfg, p, x, enc_kv):
+    """x: [B,S,D]; enc_kv: precomputed {"k","v"}: [B,T,KV,hd]."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    cd = x.dtype
+    q = (dot(x, p["wq"], cd) + p["bq"].astype(cd)).reshape(B, S, H, hd)
+    T = enc_kv["k"].shape[1]
+    pos_q = jnp.zeros((S,), jnp.int32)      # cross-attn: no causal masking
+    pos_k = jnp.zeros((T,), jnp.int32)
+    out = attn.attention_core(q, enc_kv["k"], enc_kv["v"], pos_q, pos_k,
+                              causal=False)
+    return dot(out.reshape(B, S, H * hd), p["wo"], cd)
+
+
+def encode(cfg, params, frames):
+    """frames: [B,T,D] stub frame embeddings -> encoder output [B,T,D]."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    T = frames.shape[1]
+    x = frames.astype(cd) + params["enc_pos"][:T].astype(cd)
+    pos = jnp.arange(T, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = apply_norm(cfg, lp["ln1"], x)
+        # bidirectional self-attention
+        B, S, _ = h.shape
+        hd = cfg.resolved_head_dim
+        H, KV = cfg.num_heads, cfg.num_kv_heads
+        q = dot(h, lp["attn"]["wq"], cd)
+        k = dot(h, lp["attn"]["wk"], cd)
+        v = dot(h, lp["attn"]["wv"], cd)
+        if cfg.qkv_bias:
+            q = q + lp["attn"]["bq"].astype(cd)
+            k = k + lp["attn"]["bk"].astype(cd)
+            v = v + lp["attn"]["bv"].astype(cd)
+        q = q.reshape(B, S, H, hd)
+        k = k.reshape(B, S, KV, hd)
+        v = v.reshape(B, S, KV, hd)
+        a = attn.attention_core(q, k, v, pos, pos, causal=False)
+        x = x + dot(a.reshape(B, S, H * hd), lp["attn"]["wo"], cd)
+        x = x + mlp_mod.mlp_apply(cfg, lp["mlp"], apply_norm(cfg, lp["ln2"], x))
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _enc_kv(cfg, lp, enc_out):
+    cd = enc_out.dtype
+    B, T, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = dot(enc_out, lp["xattn"]["wk"], cd).reshape(B, T, KV, hd)
+    v = (dot(enc_out, lp["xattn"]["wv"], cd)
+         + lp["xattn"]["bv"].astype(cd)).reshape(B, T, KV, hd)
+    return {"k": k, "v": v}
+
+
+def decoder_layer_apply(cfg, lp, x, positions, enc_out, cache=None):
+    h = apply_norm(cfg, lp["ln1"], x)
+    a, new_cache = attn.attention_apply(cfg, lp["attn"], h, positions, cache=cache)
+    x = x + a
+    h = apply_norm(cfg, lp["ln_x"], x)
+    x = x + cross_attention_apply(cfg, lp["xattn"], h, _enc_kv(cfg, lp, enc_out))
+    x = x + mlp_mod.mlp_apply(cfg, lp["mlp"], apply_norm(cfg, lp["ln2"], x))
+    return x, new_cache
+
+
+def whisper_loss(cfg, params, batch):
+    """batch: {"frames": [B,T,D], "tokens": [B,S], "labels": [B,S]}"""
+    params = cast_tree(params, cfg.compute_dtype)
+    cd = jnp.dtype(cfg.compute_dtype)
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    from repro.models.transformer import embed_lookup
+    x = embed_lookup(cfg, params, tokens, cd)
+
+    def body(x, lp):
+        x, _ = decoder_layer_apply(cfg, lp, x, positions, enc_out)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(fn, x, params["decoder"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params, x)
+    return cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+def whisper_prefill(cfg, params, frames, tokens):
+    """Encode + run decoder over the prompt, building self-attn caches.
+
+    Returns (last_logits [B,V], {"self": caches, "enc": enc_out})."""
+    params = cast_tree(params, cfg.compute_dtype)
+    cd = jnp.dtype(cfg.compute_dtype)
+    enc_out = encode(cfg, params, frames)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    from repro.models.transformer import _fill_kv_cache, embed_lookup
+    x = embed_lookup(cfg, params, tokens, cd)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def body(x, lp):
+        h = apply_norm(cfg, lp["ln1"], x)
+        a, _ = attn.attention_apply(cfg, lp["attn"], h, positions)
+        k = dot(h, lp["attn"]["wk"], cd)
+        v = dot(h, lp["attn"]["wv"], cd)
+        if cfg.qkv_bias:
+            k = k + lp["attn"]["bk"].astype(cd)
+            v = v + lp["attn"]["bv"].astype(cd)
+        k = attn.apply_rope(k.reshape(B, S, KV, hd), positions, cfg.rope_theta)
+        v = v.reshape(B, S, KV, hd)
+        cache = _fill_kv_cache(k, v, positions, S)
+        x = x + a
+        h = apply_norm(cfg, lp["ln_x"], x)
+        x = x + cross_attention_apply(cfg, lp["xattn"], h, _enc_kv(cfg, lp, enc_out))
+        x = x + mlp_mod.mlp_apply(cfg, lp["mlp"], apply_norm(cfg, lp["ln2"], x))
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, params["decoder"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params, x[:, -1:])
+    return logits[:, 0], {"self": caches, "enc": enc_out}
+
+
+def whisper_decode(cfg, params, tokens, state):
+    """One decode step; state = {"self": stacked caches, "enc": enc_out}."""
+    params = cast_tree(params, cfg.compute_dtype)
+    cd = jnp.dtype(cfg.compute_dtype)
+    caches, enc_out = state["self"], state["enc"]
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), 0, jnp.int32) + caches["index"][0]
+    from repro.models.transformer import embed_lookup
+    x = embed_lookup(cfg, params, tokens, cd)
+
+    def body(x, xs):
+        lp, cache = xs
+        x, new_cache = decoder_layer_apply(cfg, lp, x, positions, enc_out,
+                                           cache=cache)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["decoder"], caches))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params, x)
+    return logits[:, 0], {"self": new_caches, "enc": enc_out}

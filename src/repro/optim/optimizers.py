@@ -1,0 +1,154 @@
+"""Optimizer substrate (paper §I names AdaGrad, Adam, Momentum SGD).
+
+Functional, pytree-based, self-contained (no optax offline):
+
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=1e-3))
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+All states/updates are fp32 ("master weights"); callers cast params to the
+compute dtype inside the loss (mixed precision).  ``update`` consumes fp32
+gradients.  Flat-shard variants (for the ZeRO-1 reduce_scatter strategy)
+operate on 1-D fp32 vectors with the same math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]   # (grads, state, params)
+    cfg: OptimizerConfig
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# SGD / momentum
+# ---------------------------------------------------------------------------
+
+def _sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        new = _tmap(lambda p, g: p - cfg.lr * g.astype(p.dtype), params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer(init, update, cfg)
+
+
+def _momentum(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        v = _tmap(lambda v, g: cfg.momentum * v + g.astype(jnp.float32),
+                  state["v"], grads)
+        new = _tmap(lambda p, v: p - cfg.lr * v.astype(p.dtype), params, v)
+        return new, {"step": state["step"] + 1, "v": v}
+
+    return Optimizer(init, update, cfg)
+
+
+# ---------------------------------------------------------------------------
+# AdaGrad
+# ---------------------------------------------------------------------------
+
+def _adagrad(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "acc": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        acc = _tmap(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                    state["acc"], grads)
+        new = _tmap(
+            lambda p, g, a: p - (cfg.lr * g.astype(jnp.float32)
+                                 / (jnp.sqrt(a) + cfg.eps)).astype(p.dtype),
+            params, grads, acc)
+        return new, {"step": state["step"] + 1, "acc": acc}
+
+    return Optimizer(init, update, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+def _adam(cfg: OptimizerConfig, decoupled_wd: bool) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(z, params), "v": _tmap(z, params)}
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+        b1, b2 = cfg.beta1, cfg.beta2
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step = cfg.lr * (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            if decoupled_wd and cfg.weight_decay:
+                step = step + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+        new = _tmap(upd, params, m, v)
+        return new, {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update, cfg)
+
+
+_FACTORY = {
+    "sgd": lambda c: _sgd(c),
+    "momentum": lambda c: _momentum(c),
+    "adagrad": lambda c: _adagrad(c),
+    "adam": lambda c: _adam(c, False),
+    "adamw": lambda c: _adam(c, True),
+}
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    try:
+        fac = _FACTORY[cfg.name]
+    except KeyError:
+        raise KeyError(f"unknown optimizer {cfg.name!r}: {sorted(_FACTORY)}") from None
+    return fac(cfg)
+
+
+def opt_state_specs(opt: Optimizer, param_specs):
+    """ParamSpec-shaped ShapeDtypeStructs for the optimizer state (dry-run)."""
+    structs = jax.eval_shape(
+        opt.init,
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+                     param_specs,
+                     is_leaf=lambda x: hasattr(x, "axes")))
+    return structs

@@ -1,0 +1,121 @@
+"""Roofline synthesis: dry-run JSON records -> three-term roofline table.
+
+Terms (per device, per step, seconds; all inputs are per-device quantities
+from the post-SPMD HLO):
+
+  compute    = dot_flops / PEAK_FLOPS_BF16
+  memory     = hbm_bytes / HBM_BW
+  collective = wire_bytes / ICI_BW_PER_LINK
+
+The bottleneck is the max term (perfect-overlap assumption); est. MFU =
+compute / max(...); MODEL_FLOPS ratio = 6·N·D-style analytic flops over the
+compiled global flops (how much compiled compute is "useful" — catches
+remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.roofline import hw
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str
+    devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    est_step_s: float
+    est_mfu: float              # compiled-flops MFU upper bound
+    model_mfu: float            # useful-flops (6ND) MFU upper bound
+    model_to_hlo: float         # MODEL_FLOPS / (global HLO flops)
+    peak_bytes_per_dev: float
+    fits_hbm: bool
+    compile_s: float
+
+    @property
+    def cell(self) -> str:
+        return f"{self.arch}/{self.shape}/{self.mesh}/{self.mode}"
+
+
+def row_from_record(rec: dict) -> Optional[RooflineRow]:
+    if not rec.get("ok"):
+        return None
+    st = rec["hlo_stats"]
+    n_dev = rec["devices"]
+    flops_dev = st["dot_flops"] + st["conv_flops"]
+    wire = st["wire_bytes"]
+    if rec.get("mode") == "compressed":
+        wire *= 0.5     # CPU fallback lowers an fp32 wire; TPU wire is bf16
+    compute_s = flops_dev / hw.PEAK_FLOPS_BF16
+    memory_s = st["hbm_bytes"] / hw.HBM_BW
+    coll_s = wire / hw.ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    est = max(terms.values())
+    model_flops_dev = rec["model_flops_global"] / n_dev
+    peak = rec["memory"]["peak_estimate_bytes"]
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        mode=rec["mode"], devices=n_dev,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck, est_step_s=est,
+        est_mfu=compute_s / est if est else 0.0,
+        model_mfu=(model_flops_dev / hw.PEAK_FLOPS_BF16) / est if est else 0.0,
+        model_to_hlo=(rec["model_flops_global"] /
+                      (flops_dev * n_dev) if flops_dev else 0.0),
+        peak_bytes_per_dev=peak,
+        fits_hbm=peak <= hw.HBM_BYTES,
+        compile_s=rec.get("compile_s", 0.0),
+    )
+
+
+def load_rows(results_dir, include_tags: bool = False) -> List[RooflineRow]:
+    rows = []
+    for f in sorted(Path(results_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag") and not include_tags:
+            continue                      # hillclimb variants: §Perf only
+        row = row_from_record(rec)
+        if row is not None:
+            if rec.get("tag"):
+                row.mode = f"{row.mode}+{rec['tag']}"
+            rows.append(row)
+    return rows
+
+
+def format_markdown(rows: List[RooflineRow]) -> str:
+    hdr = ("| cell | compute s | memory s | collective s | bottleneck | "
+           "est MFU | model MFU | model/HLO | peak GB/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r.cell} | {r.compute_s:.3f} | {r.memory_s:.3f} | "
+            f"{r.collective_s:.3f} | {r.bottleneck} | {r.est_mfu:.2%} | "
+            f"{r.model_mfu:.2%} | {r.model_to_hlo:.2f} | "
+            f"{r.peak_bytes_per_dev/2**30:.1f} | "
+            f"{'y' if r.fits_hbm else 'N'} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def format_csv(rows: List[RooflineRow]) -> str:
+    out = ["arch,shape,mesh,mode,devices,compute_s,memory_s,collective_s,"
+           "bottleneck,est_mfu,model_mfu,model_to_hlo,peak_gb_dev,fits_hbm,"
+           "compile_s"]
+    for r in rows:
+        out.append(
+            f"{r.arch},{r.shape},{r.mesh},{r.mode},{r.devices},"
+            f"{r.compute_s:.6f},{r.memory_s:.6f},{r.collective_s:.6f},"
+            f"{r.bottleneck},{r.est_mfu:.4f},{r.model_mfu:.4f},"
+            f"{r.model_to_hlo:.4f},{r.peak_bytes_per_dev/2**30:.3f},"
+            f"{int(r.fits_hbm)},{r.compile_s:.1f}")
+    return "\n".join(out) + "\n"

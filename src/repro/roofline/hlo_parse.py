@@ -1,0 +1,379 @@
+"""Post-SPMD HLO text analyzer: scan-corrected FLOPs, HBM bytes, collectives.
+
+Why not cost_analysis(): XLA's HloCostAnalysis counts a ``while`` body ONCE,
+but our models scan over layers (x26..x56) and attention blocks — calibration
+(tests/test_roofline.py) shows an exact /trip_count undercount.  This module
+reconstructs the computation call graph, estimates each while's trip count
+from the loop-bound constant in its condition, and weights every computation
+by its execution multiplicity.
+
+Per-device quantities (the module is the post-partitioning per-device
+program):
+  * ``dot_flops``    — 2 x prod(result) x prod(contracting dims), x mult
+  * ``conv_flops``   — 2 x prod(result) x prod(kernel)/C_out,     x mult
+  * ``hbm_bytes``    — per top-level instruction: result + operand bytes
+                       (fusion interiors excluded — fused ops don't touch HBM)
+  * ``collectives``  — kind, per-device buffer bytes, group size, x mult,
+                       plus ring-model wire bytes
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_ATOM = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.*?)\s*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\]{},]+))\s+"
+    r"([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\]{},]+))")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[[\d,]+\](?:T\([\d,]+\))?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_TRIP_ANNOT_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_WHILE_ATTRS_RE = re.compile(
+    r"condition=%?([\w.\-]+)|body=%?([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CALLED_SET_RE = re.compile(r"called_computations=\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVE_OPS = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                   "collective-permute", "all-reduce-start", "all-gather-start",
+                   "collective-permute-start"}
+# HBM-traffic accounting models TPU fusion: elementwise chains fuse into
+# their producers/consumers, so only "boundary" ops move HBM bytes.  This is
+# a whitelist, not a blacklist — XLA:CPU leaves far more ops unfused than a
+# TPU compile would, and counting them all inflates the memory term ~10x
+# (calibrated on the rwkv6 scan, whose Pallas kernel keeps state in VMEM).
+_BYTES_OPS = {"dot", "dot_general", "convolution", "fusion", "custom-call",
+              "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+              "reduce", "reduce-window", "select-and-scatter", "sort",
+              "transpose", "concatenate", "pad", "reverse", "copy",
+              "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute", "cholesky", "triangular-solve", "fft"}
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_ATOM.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _dims_of(shape_str: str) -> List[int]:
+    m = _SHAPE_ATOM.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    multiplicity: float = 1.0
+
+    @property
+    def wire_bytes(self) -> float:
+        """Ring-model per-device bytes on the wire (x multiplicity)."""
+        p = max(self.group_size, 2)
+        n = self.result_bytes
+        if self.kind == "all-reduce":
+            per = 2.0 * n * (p - 1) / p
+        elif self.kind == "all-gather":
+            per = n * (p - 1) / p
+        elif self.kind == "reduce-scatter":
+            per = n * (p - 1)
+        elif self.kind == "all-to-all":
+            per = n * (p - 1) / p
+        else:                              # collective-permute
+            per = float(n)
+        return per * self.multiplicity
+
+
+@dataclass
+class _Instr:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    is_entry: bool
+    instrs: List[_Instr] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)   # name -> shape str
+
+
+@dataclass
+class Contributor:
+    comp: str
+    opcode: str
+    shape: str
+    multiplicity: float
+    flops: float = 0.0
+    bytes: float = 0.0
+    meta: str = ""
+
+
+@dataclass
+class ModuleStats:
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: List[CollectiveOp] = field(default_factory=list)
+    while_trip_counts: List[int] = field(default_factory=list)
+    contributors: List[Contributor] = field(default_factory=list)
+
+    def top_flops(self, n=15):
+        return sorted((c for c in self.contributors if c.flops),
+                      key=lambda c: -c.flops)[:n]
+
+    def top_bytes(self, n=15):
+        return sorted((c for c in self.contributors if c.bytes),
+                      key=lambda c: -c.bytes)[:n]
+
+    def top_collectives(self, n=15):
+        return sorted(self.collectives, key=lambda c: -c.wire_bytes)[:n]
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.conv_flops
+
+    @property
+    def wire_bytes_total(self) -> float:
+        return sum(c.wire_bytes for c in self.collectives)
+
+    def collective_summary(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0.0, "buffer_bytes": 0.0, "wire_bytes": 0.0})
+        for c in self.collectives:
+            out[c.kind]["count"] += c.multiplicity
+            out[c.kind]["buffer_bytes"] += c.result_bytes * c.multiplicity
+            out[c.kind]["wire_bytes"] += c.wire_bytes
+        return {k: dict(v) for k, v in out.items()}
+
+
+def _parse_computations(text: str) -> List[_Comp]:
+    comps: List[_Comp] = []
+    cur: Optional[_Comp] = None
+    depth = 0
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                cur = _Comp(name=m.group(2), is_entry=bool(m.group(1)))
+                for pname, pshape in _PARAM_RE.findall(m.group(3)):
+                    cur.symbols[pname] = pshape
+                comps.append(cur)
+                depth = 1
+            continue
+        stripped = line.strip()
+        if stripped == "}":
+            depth -= 1
+            if depth == 0:
+                cur = None
+            continue
+        if stripped.endswith("{"):
+            depth += 1
+        im = _INSTR_RE.match(line)
+        if im:
+            name, shape, opcode = im.group(1), im.group(2), im.group(3)
+            cur.symbols[name] = shape
+            cur.instrs.append(_Instr(name, shape, opcode, line))
+    return comps
+
+
+def _dot_flops(instr: _Instr, comp: _Comp) -> float:
+    _, res_elems = 0, _shape_elems_bytes(instr.shape)[0]
+    cm = _LHS_CONTRACT_RE.search(instr.line)
+    cdims = [int(x) for x in cm.group(1).split(",")] if cm and cm.group(1) else []
+    # first operand (lhs) shape
+    paren = instr.line.index("(")
+    ops = _OPERAND_RE.findall(instr.line[paren:instr.line.find(")", paren)])
+    contract = 1
+    if ops:
+        lhs_shape = comp.symbols.get(ops[0], "")
+        dims = _dims_of(lhs_shape)
+        for cd in cdims:
+            if cd < len(dims):
+                contract *= dims[cd]
+    return 2.0 * res_elems * max(contract, 1)
+
+
+def _conv_flops(instr: _Instr, comp: _Comp) -> float:
+    res_elems = _shape_elems_bytes(instr.shape)[0]
+    paren = instr.line.index("(")
+    ops = _OPERAND_RE.findall(instr.line[paren:instr.line.find(")", paren)])
+    if len(ops) < 2:
+        return 2.0 * res_elems
+    kdims = _dims_of(comp.symbols.get(ops[1], ""))
+    rdims = _dims_of(instr.shape)
+    if not kdims or not rdims:
+        return 2.0 * res_elems
+    co = rdims[-1] if rdims[-1] in kdims else kdims[-1]
+    kernel_elems = 1
+    for d in kdims:
+        kernel_elems *= d
+    return 2.0 * res_elems * kernel_elems / max(co, 1)
+
+
+def _instr_bytes(instr: _Instr, comp: _Comp) -> float:
+    if instr.opcode not in _BYTES_OPS:
+        return 0.0
+    total = _shape_elems_bytes(instr.shape)[1]
+    paren = instr.line.index("(")
+    close = instr.line.find(")", paren)
+    for op in _OPERAND_RE.findall(instr.line[paren:close if close > 0 else None]):
+        shp = comp.symbols.get(op)
+        if shp:
+            total += _shape_elems_bytes(shp)[1]
+    return float(total)
+
+
+def _trip_count(while_line: str, cond: Optional[_Comp]) -> int:
+    """Primary: XLA's known_trip_count backend_config on the while op.
+    Fallback: largest integer constant in the condition computation."""
+    m = _TRIP_ANNOT_RE.search(while_line)
+    if m:
+        return int(m.group(1))
+    if cond is None:
+        return 1
+    vals = [int(c.group(1)) for ins in cond.instrs
+            for c in _CONST_INT_RE.finditer(ins.line)]
+    return max(vals) if vals else 1
+
+
+def analyze_module(hlo_text: str) -> ModuleStats:
+    comps = _parse_computations(hlo_text)
+    by_name = {c.name: c for c in comps}
+
+    # call graph with multiplicity factors; fusion interiors excluded from
+    # byte/flop accounting via `fusion_interior` marking (dots inside fusions
+    # still count — XLA:CPU keeps dots unfused, but be conservative)
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    fusion_comps = set()
+    for c in comps:
+        for ins in c.instrs:
+            if ins.opcode == "while":
+                cond = body = None
+                for m in _WHILE_ATTRS_RE.finditer(ins.line):
+                    cond = m.group(1) or cond
+                    body = m.group(2) or body
+                trips = _trip_count(ins.line, by_name.get(cond))
+                if body in by_name:
+                    edges[c.name].append((body, float(max(trips, 1))))
+                continue
+            if ins.opcode == "fusion":
+                for m in _CALLED_RE.finditer(ins.line):
+                    if m.group(1) in by_name:
+                        fusion_comps.add(m.group(1))
+                        edges[c.name].append((m.group(1), 1.0))
+                continue
+            for m in _CALLED_RE.finditer(ins.line):
+                if m.group(1) in by_name:
+                    edges[c.name].append((m.group(1), 1.0))
+            sm = _CALLED_SET_RE.search(ins.line)
+            if sm:
+                for nm in sm.group(1).split(","):
+                    nm = nm.strip().lstrip("%")
+                    if nm in by_name:
+                        edges[c.name].append((nm, 1.0))
+
+    mult: Dict[str, float] = defaultdict(float)
+    roots = [c.name for c in comps if c.is_entry]
+    if not roots and comps:
+        roots = [comps[-1].name]
+    stack = [(r, 1.0) for r in roots]
+    guard = 0
+    while stack and guard < 200_000:
+        guard += 1
+        name, m = stack.pop()
+        mult[name] += m
+        for child, f in edges.get(name, ()):
+            stack.append((child, m * f))
+
+    stats = ModuleStats()
+    for c in comps:
+        m = mult.get(c.name, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = c.name in fusion_comps
+        for ins in c.instrs:
+            op = ins.opcode
+            if op in _COLLECTIVE_OPS:
+                kind = op.replace("-start", "")
+                gsize = 0
+                gm = _GROUPS_IOTA_RE.search(ins.line)
+                if gm:
+                    gsize = int(gm.group(2))
+                else:
+                    gm = _GROUPS_LIST_RE.search(ins.line)
+                    if gm:
+                        gsize = len([x for x in gm.group(1).split(",") if x.strip()])
+                stats.collectives.append(CollectiveOp(
+                    kind=kind,
+                    result_bytes=_shape_elems_bytes(ins.shape)[1],
+                    group_size=max(gsize, 1), multiplicity=m))
+            elif op in ("dot", "dot_general"):
+                fl = m * _dot_flops(ins, c)
+                stats.dot_flops += fl
+                stats.contributors.append(Contributor(
+                    comp=c.name, opcode=op, shape=ins.shape, multiplicity=m,
+                    flops=fl, meta=_op_meta(ins)))
+            elif op == "convolution":
+                fl = m * _conv_flops(ins, c)
+                stats.conv_flops += fl
+                stats.contributors.append(Contributor(
+                    comp=c.name, opcode=op, shape=ins.shape, multiplicity=m,
+                    flops=fl, meta=_op_meta(ins)))
+            elif op == "while":
+                cond = None
+                for wm in _WHILE_ATTRS_RE.finditer(ins.line):
+                    cond = wm.group(1) or cond
+                stats.while_trip_counts.append(
+                    _trip_count(ins.line, by_name.get(cond)))
+            if not in_fusion and op not in _COLLECTIVE_OPS:
+                by = m * _instr_bytes(ins, c)
+                stats.hbm_bytes += by
+                if by > 0 and op not in ("dot", "dot_general", "convolution"):
+                    stats.contributors.append(Contributor(
+                        comp=c.name, opcode=op, shape=ins.shape,
+                        multiplicity=m, bytes=by, meta=_op_meta(ins)))
+                elif by > 0:
+                    # attach bytes to the dot/conv contributor just appended
+                    if stats.contributors and stats.contributors[-1].comp == c.name:
+                        stats.contributors[-1].bytes += by
+    return stats
+
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _op_meta(ins: _Instr) -> str:
+    m = _META_RE.search(ins.line)
+    return m.group(1)[-90:] if m else ""

@@ -1,0 +1,9 @@
+"""TPU v5e hardware constants (the TARGET; this container runs on CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (approx, v5e 2D torus)
+HBM_BYTES = 16 << 30            # 16 GiB per chip
+
+# cross-pod (data-center network / optical) — used for the "pod" axis
+DCN_BW = 25e9                   # bytes/s per host pair, conservative

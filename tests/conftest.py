@@ -1,0 +1,28 @@
+"""Test environment: 8 placeholder CPU devices for distribution tests.
+
+Must run before any jax import.  The production dry-run (512 devices) sets
+its own flag in its own process (launch/dryrun.py); benchmarks run with the
+default single device.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402  (initialize after the flag)
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh222():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh42():
+    return jax.make_mesh((4, 2), ("data", "model"))
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

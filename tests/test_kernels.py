@@ -1,0 +1,169 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps
++ hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru_scan.ops import lru_scan
+from repro.kernels.rglru_scan.ref import lru_scan_ref
+from repro.kernels.rwkv6_wkv.ops import wkv6
+from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, S, H, KV, hd, causal, window, dtype)
+    (2, 128, 4, 2, 64, True, 0, jnp.float32),
+    (1, 96, 4, 4, 32, True, 0, jnp.float32),       # ragged seq vs block
+    (2, 256, 4, 1, 64, True, 64, jnp.float32),     # MQA + sliding window
+    (1, 128, 2, 2, 128, False, 0, jnp.float32),    # non-causal
+    (1, 64, 2, 1, 64, True, 0, jnp.bfloat16),      # bf16 i/o
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,causal,window,dtype", FLASH_CASES)
+def test_flash_attention_matches_ref(rng, B, S, H, KV, hd, causal, window,
+                                     dtype):
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    ref = attention_ref(qf.astype(jnp.float32), kf.astype(jnp.float32),
+                        vf.astype(jnp.float32), causal=causal, window=window)
+    ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dtype))
+
+
+def test_flash_attention_matches_model_attention(rng):
+    """The kernel and the traced chunked path must agree (they are swapped
+    by use_pallas in models/attention.py)."""
+    from repro.models.attention import attention_core
+    B, S, H, KV, hd = 1, 64, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    pos = jnp.arange(S)
+    a = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                        interpret=True)
+    b = attention_core(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+LRU_CASES = [
+    (2, 64, 32, 16, jnp.float32),
+    (1, 100, 129, 32, jnp.float32),    # ragged S and W
+    (3, 16, 64, 8, jnp.float32),
+    (2, 48, 64, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,W,bt,dtype", LRU_CASES)
+def test_lru_scan_matches_ref(rng, B, S, W, bt, dtype):
+    la = jnp.asarray(-np.abs(rng.normal(size=(B, S, W))), dtype)
+    x = jnp.asarray(rng.normal(size=(B, S, W)), dtype)
+    out = lru_scan(la, x, interpret=True, block_t=bt)
+    ref = lru_scan_ref(la.astype(jnp.float32), x.astype(jnp.float32))
+    np.testing.assert_allclose(out, ref, atol=_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 33), st.integers(1, 40),
+       st.integers(2, 16))
+def test_lru_scan_property(B, S, W, bt):
+    """Property: kernel equals oracle for arbitrary (B, S, W, block)."""
+    r = np.random.default_rng(S * 100 + W)
+    la = jnp.asarray(-np.abs(r.normal(size=(B, S, W))), jnp.float32)
+    x = jnp.asarray(r.normal(size=(B, S, W)), jnp.float32)
+    out = lru_scan(la, x, interpret=True, block_t=bt)
+    ref = lru_scan_ref(la, x)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_lru_model_path_matches_kernel(rng):
+    """models.rglru associative-scan path == Pallas kernel path."""
+    from repro.configs import get_config
+    from repro.models.common import init_params
+    from repro.models.rglru import recurrent_block_specs, rg_lru_scan
+    cfg = get_config("recurrentgemma-2b", smoke=True)
+    p = init_params(recurrent_block_specs(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 24, 64)), jnp.float32)
+    y1, h1 = rg_lru_scan(p, x, use_pallas=False)
+    from repro.kernels.rglru_scan.ops import lru_scan as lru_kernel
+    from repro.models.rglru import _lru_gates
+    la, gated = _lru_gates(p, x)
+    h = lru_kernel(la, gated, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(h, np.float32), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+WKV_CASES = [
+    (2, 32, 2, 16, 8, jnp.float32),
+    (1, 50, 4, 32, 16, jnp.float32),   # ragged S
+    (2, 16, 1, 64, 8, jnp.float32),
+    (1, 24, 2, 32, 8, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,hd,bt,dtype", WKV_CASES)
+def test_wkv6_matches_ref(rng, B, S, H, hd, bt, dtype):
+    r = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(size=(B, S, H, hd)))),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, hd, hd)), jnp.float32)
+    out, s_last = wkv6(r, k, v, w, u, s0, interpret=True, block_t=bt)
+
+    def flat(t):
+        return t.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    oref, sref = wkv6_ref(flat(r), flat(k), flat(v), flat(w), uf,
+                          s0.reshape(B * H, hd, hd))
+    np.testing.assert_allclose(out, oref.reshape(B, H, S, hd).transpose(0, 2, 1, 3),
+                               atol=max(_tol(dtype), 1e-4) * 10)
+    np.testing.assert_allclose(s_last.reshape(B * H, hd, hd), sref, atol=1e-4)
+
+
+def test_wkv6_state_threading(rng):
+    """Splitting a sequence in two and threading the state must equal one
+    pass (the invariant prefill/decode relies on)."""
+    B, S, H, hd = 1, 16, 2, 16
+    r = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(size=(B, S, H, hd)))), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    full, s_full = wkv6(r, k, v, w, u, s0, interpret=True, block_t=8)
+    h = S // 2
+    o1, s1 = wkv6(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, s0,
+                  interpret=True, block_t=8)
+    o2, s2 = wkv6(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s1,
+                  interpret=True, block_t=8)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), full, atol=1e-4)
+    np.testing.assert_allclose(s2, s_full, atol=1e-4)

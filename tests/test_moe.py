@@ -1,0 +1,92 @@
+"""MoE dispatch: capacity semantics, top-k combine correctness, aux loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.models import moe as M
+from repro.models.common import init_params
+
+
+def _cfg(num_experts=4, top_k=2, cf=8.0):
+    base = get_config("mixtral-8x22b", smoke=True)
+    return base.replace(moe=MoEConfig(num_experts=num_experts, top_k=top_k,
+                                      d_ff_expert=32, capacity_factor=cf))
+
+
+def _dense_ref(cfg, p, x):
+    """Every token through its top-k experts with no capacity limit."""
+    m = cfg.moe
+    B, S, D = x.shape
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, sel = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    out = jnp.zeros_like(x)
+    for e in range(m.num_experts):
+        h = jax.nn.silu(x @ p["w_gate"][e]) * (x @ p["w_up"][e])
+        ye = h @ p["w_down"][e]
+        wgt = jnp.sum(jnp.where(sel == e, gates, 0.0), axis=-1)
+        out = out + wgt[..., None] * ye
+    return out
+
+
+def test_moe_matches_dense_when_capacity_ample(rng):
+    cfg = _cfg(cf=8.0)      # capacity >> tokens: nothing dropped
+    p = init_params(M.moe_specs(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)) * 0.5, jnp.float32)
+    y, aux = M.moe_apply(cfg, p, x)
+    ref = _dense_ref(cfg, p, x)
+    np.testing.assert_allclose(y, ref, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """With capacity_factor << 1 the combine weights must drop tokens
+    (outputs shrink toward zero) rather than corrupt them."""
+    cfg_full = _cfg(cf=8.0)
+    cfg_tight = _cfg(cf=0.25)
+    p = init_params(M.moe_specs(cfg_full), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg_full.d_model)), jnp.float32)
+    y_full, _ = M.moe_apply(cfg_full, p, x)
+    y_tight, _ = M.moe_apply(cfg_tight, p, x)
+    assert float(jnp.linalg.norm(y_tight)) < float(jnp.linalg.norm(y_full))
+    assert jnp.all(jnp.isfinite(y_tight))
+
+
+def test_moe_aux_loss_prefers_balance():
+    """Uniform routing must yield a (near-)minimal aux loss of ~1.0."""
+    cfg = _cfg(num_experts=4, top_k=1)
+    p = init_params(M.moe_specs(cfg), jax.random.PRNGKey(1))
+    # zero router -> uniform probabilities -> balanced
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"])
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 32, cfg.d_model)),
+                    jnp.float32)
+    _, aux = M.moe_apply(cfg, p, x)
+    assert 0.9 <= float(aux) <= 1.1
+
+
+def test_moe_grads_flow_to_router_and_experts(rng):
+    cfg = _cfg()
+    p = init_params(M.moe_specs(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)), jnp.float32)
+
+    def loss(p):
+        y, aux = M.moe_apply(cfg, p, x)
+        return jnp.mean(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.sum(jnp.abs(g["router"]))) > 0
+    assert float(jnp.sum(jnp.abs(g["w_gate"]))) > 0
+
+
+def test_shared_experts_path(rng):
+    cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+    p = init_params(M.moe_specs(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)), jnp.float32)
+    y, aux = M.moe_apply(cfg, p, x)
+    assert y.shape == x.shape
+    assert jnp.all(jnp.isfinite(y))
