@@ -16,9 +16,9 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig456_ratios, fig7_equivalence, fig8_scaling,
-                            overhead, roofline_table)
+                            overhead, roofline_table, serving)
     modules = [fig456_ratios, fig8_scaling, overhead, fig7_equivalence,
-               roofline_table]
+               roofline_table, serving]
     rows = []
     failed = []
     for mod in modules:

@@ -1,0 +1,86 @@
+"""Serving-engine benchmark: tokens/sec, TTFT, p50/p99 inter-token latency.
+
+    PYTHONPATH=src python benchmarks/serving.py [--arch qwen2.5-14b] \
+        [--requests 16] [--batch 4] [--out BENCH_serving.json]
+
+Protocol: one warm-up pass populates the jit caches (prefill per prompt
+length + the single batched-decode executable), then the measured pass
+serves a fresh queue of ragged-length requests through the continuous-
+batching engine.  Results land in ``BENCH_serving.json`` so later PRs have
+a perf trajectory to beat; the ``run()`` hook returns harness-style
+``(name, us_per_call, derived)`` rows.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+DEFAULTS = dict(arch="qwen2.5-14b", requests=16, batch=4, prompt_len=16,
+                max_new=12)
+
+
+def _serve_once(arch, requests, batch, prompt_len, max_new):
+    import numpy as np
+    from repro.configs import ServeConfig, get_config
+    from repro.serving import ServingEngine
+
+    cfg = get_config(arch, smoke=True)
+    scfg = ServeConfig(max_batch=batch, max_queue=max(requests, 8),
+                       max_seq_len=prompt_len + max_new,
+                       max_new_tokens=max_new, prefill_chunk=2,
+                       decode_steps=4)
+    engine = ServingEngine(cfg, scfg, seed=0)
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(max(prompt_len // 2, 1), prompt_len + 1,
+                           size=requests)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lengths]
+    # warm-up: compile prefill for every prompt length + the decode step
+    engine.generate(prompts, max_new)
+    # measured pass on a fresh engine state (same compiled callables)
+    engine.metrics.reset()
+    engine.results.clear()
+    out = engine.generate(prompts, max_new)
+    assert len(out) == requests and all(len(t) == max_new for t in out)
+    return engine.metrics.summary()
+
+
+def run(**overrides):
+    """Harness hook: [(name, us_per_call, derived), ...]."""
+    kw = {**DEFAULTS, **overrides}
+    s = _serve_once(kw["arch"], kw["requests"], kw["batch"],
+                    kw["prompt_len"], kw["max_new"])
+    return [
+        ("serving_tokens_per_sec", 0.0, s["tokens_per_sec"]),
+        ("serving_ttft_p50", s["ttft_p50_s"] * 1e6, s["ttft_p50_s"]),
+        ("serving_ttft_p99", s["ttft_p99_s"] * 1e6, s["ttft_p99_s"]),
+        ("serving_itl_p50", s["itl_p50_s"] * 1e6, s["itl_p50_s"]),
+        ("serving_itl_p99", s["itl_p99_s"] * 1e6, s["itl_p99_s"]),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=DEFAULTS["arch"])
+    ap.add_argument("--requests", type=int, default=DEFAULTS["requests"])
+    ap.add_argument("--batch", type=int, default=DEFAULTS["batch"])
+    ap.add_argument("--prompt-len", type=int, default=DEFAULTS["prompt_len"])
+    ap.add_argument("--max-new", type=int, default=DEFAULTS["max_new"])
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_serving.json"))
+    args = ap.parse_args()
+    s = _serve_once(args.arch, args.requests, args.batch, args.prompt_len,
+                    args.max_new)
+    record = {
+        "arch": args.arch, "smoke": True, "requests": args.requests,
+        "batch_slots": args.batch, "prompt_len": args.prompt_len,
+        "max_new": args.max_new, **s,
+    }
+    Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+    print(json.dumps(record, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

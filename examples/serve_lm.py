@@ -1,5 +1,6 @@
-"""Serving example: batched prefill+decode through the production serve
-driver (request queue -> fixed decode batch -> greedy generation).
+"""Serving example: the continuous-batching engine via the serve CLI
+(admission queue -> per-slot KV insertion -> fixed-shape batched decode ->
+streamed greedy generation; see src/repro/serving/).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """

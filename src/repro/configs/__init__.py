@@ -4,7 +4,8 @@ from repro.configs import (alexnet, deepseek_v2_lite_16b, minitron_8b,
                            qwen25_14b, recurrentgemma_2b, rwkv6_1_6b,
                            stablelm_1_6b, whisper_tiny)
 from repro.configs.base import (MeshConfig, ModelConfig, OptimizerConfig,
-                                RunConfig, ShapeConfig, MULTI_POD, SINGLE_POD)
+                                RunConfig, ServeConfig, ShapeConfig,
+                                MULTI_POD, SINGLE_POD)
 from repro.configs.shapes import SHAPES, get_shape
 
 _MODULES = (recurrentgemma_2b, qwen25_14b, stablelm_1_6b, minitron_8b,

@@ -218,6 +218,43 @@ MULTI_POD = MeshConfig(shape=(2, 16, 16), axis_names=("pod", "data", "model"))
 
 
 # ---------------------------------------------------------------------------
+# ServeConfig — continuous-batching inference engine (repro.serving)
+# ---------------------------------------------------------------------------
+
+SERVE_POLICIES = ("fcfs", "priority")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Knobs for the continuous-batching serving engine.
+
+    The decode batch shape is fixed at ``max_batch`` slots so XLA compiles
+    the batched decode exactly once; requests are inserted into / evicted
+    from KV-cache slots individually (no batch re-prefill).
+    """
+    max_batch: int = 8            # decode slots (fixed batched-decode shape)
+    max_queue: int = 64           # admission control: reject beyond this
+    max_seq_len: int = 256        # per-slot KV-cache capacity (prompt + new)
+    max_new_tokens: int = 32      # default generation budget per request
+    policy: str = "fcfs"          # "fcfs" | "priority" (priority can preempt)
+    prefill_chunk: int = 2        # max prefills admitted per engine cycle
+    decode_steps: int = 4         # decode steps per cycle between admissions
+    eos_token: int = -1           # stop token (-1 disables early stop)
+
+    def validate(self) -> None:
+        assert self.policy in SERVE_POLICIES, self.policy
+        assert self.max_batch >= 1
+        assert self.max_queue >= 1
+        assert self.max_seq_len >= 2
+        assert self.max_new_tokens >= 1
+        assert self.prefill_chunk >= 1
+        assert self.decode_steps >= 1
+
+    def replace(self, **kw) -> "ServeConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
 # RunConfig
 # ---------------------------------------------------------------------------
 

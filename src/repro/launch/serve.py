@@ -1,84 +1,106 @@
-"""Batched serving driver: prefill + decode loop with request batching.
+"""Serving CLI: thin driver over the continuous-batching engine
+(``repro.serving``).
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen2.5-14b --smoke --requests 8 --prompt-len 16 --max-new 12
 
-A deliberately small but real serving loop: a queue of requests is packed
-into a fixed decode batch; prefill builds each sequence's cache; decode
-steps run the whole batch; finished sequences are swapped out.  (Per-slot
-cache insertion is the production path on TPU; the CPU demo re-prefills
-the batch when it changes, which is equivalent for correctness.)
+Requests enter an admission queue and are prefilled into KV-cache *slots*
+individually (per-slot insertion/eviction — no batch re-prefill); decode
+runs over the fixed slot pool so XLA compiles the batched step exactly
+once.  Prompt lengths are jittered to exercise ragged continuous batching.
+Pass ``--mesh DxM`` (e.g. ``2x1``) to serve data-parallel over slots and
+tensor-parallel within decode on a device mesh — selected by config, no
+code changes, per the paper's transparency principle.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
+import os
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (fixed batched-decode shape)")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max prompt length (lengths jittered down to half)")
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--policy", choices=("fcfs", "priority"), default="fcfs")
+    ap.add_argument("--prefill-chunk", type=int, default=2)
+    ap.add_argument("--decode-steps", type=int, default=4)
+    ap.add_argument("--mesh", default="",
+                    help="DATAxMODEL device mesh, e.g. 2x1 (default: none)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N placeholder CPU devices (0 = mesh size "
+                         "when --mesh is set and jax is not yet imported)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are emitted")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the metrics summary as JSON")
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
+    mesh_shape = None
+    if args.mesh:
+        try:
+            mesh_shape = tuple(int(x) for x in args.mesh.lower().split("x"))
+            assert len(mesh_shape) == 2
+        except (ValueError, AssertionError):
+            ap.error(f"--mesh expects DATAxMODEL (e.g. 2x1), got {args.mesh!r}")
+    # must happen before the first jax import: CPU hosts need placeholder
+    # devices to build the mesh (same bootstrap as launch/train.py --devices)
+    n_dev = args.devices or (
+        mesh_shape[0] * mesh_shape[1] if mesh_shape else 0)
+    if n_dev > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_dev}")
+
     import numpy as np
-    from repro.configs import get_config
-    from repro.models import registry
+    from repro.configs import MeshConfig, ServeConfig, get_config
+    from repro.serving import ServingEngine
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    bundle = registry.build(cfg)
-    if bundle.prefill_fn is None:
-        raise SystemExit(f"{args.arch} has no serve path")
-    params = bundle.init_params(jax.random.PRNGKey(0))
+    serve_cfg = ServeConfig(
+        max_batch=args.batch, max_queue=args.max_queue,
+        max_seq_len=args.prompt_len + args.max_new,
+        max_new_tokens=args.max_new, policy=args.policy,
+        prefill_chunk=args.prefill_chunk, decode_steps=args.decode_steps)
+    mesh_cfg = None
+    if mesh_shape is not None:
+        mesh_cfg = MeshConfig(shape=mesh_shape, axis_names=("data", "model"))
+
+    engine = ServingEngine(cfg, serve_cfg, mesh_cfg=mesh_cfg)
     rng = np.random.default_rng(0)
+    lengths = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1,
+                           size=args.requests)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lengths]
 
-    prompts = [rng.integers(0, cfg.vocab_size, (args.prompt_len,))
-               for _ in range(args.requests)]
-    pending = list(range(args.requests))
-    done = {}
-    prefill = jax.jit(bundle.prefill_fn)
-    decode = jax.jit(bundle.decode_fn)
+    stream = None
+    if args.stream:
+        def stream(rid, tok, done):
+            print(f"  req {rid} -> {tok}{'  [done]' if done else ''}",
+                  flush=True)
 
-    t0 = time.time()
-    n_decode_steps = 0
-    while pending:
-        batch_ids = pending[:args.batch]
-        pending = pending[len(batch_ids):]
-        toks = jnp.asarray(np.stack([prompts[i] for i in batch_ids]),
-                           jnp.int32)
-        if cfg.family == "encdec":
-            frames = jnp.zeros((len(batch_ids), cfg.encdec.encoder_seq_len,
-                                cfg.d_model), jnp.float32)
-            logits, state = prefill(params, frames, toks)
-        elif cfg.family == "vlm":
-            patches = jnp.zeros((len(batch_ids), cfg.vlm.num_image_tokens,
-                                 cfg.d_model), jnp.float32)
-            logits, state = prefill(params, toks, patches)
-        else:
-            logits, state = prefill(params, toks)
-        outs = [[int(jnp.argmax(logits[j]))] for j in range(len(batch_ids))]
-        for _ in range(args.max_new - 1):
-            last = jnp.asarray([[o[-1]] for o in outs], jnp.int32)
-            logits, state = decode(params, last, state)
-            n_decode_steps += 1
-            for j in range(len(batch_ids)):
-                outs[j].append(int(jnp.argmax(logits[j])))
-        for j, rid in enumerate(batch_ids):
-            done[rid] = outs[j]
-        print(f"completed batch {batch_ids} "
-              f"({len(done)}/{args.requests})", flush=True)
-    dt = time.time() - t0
-    total_new = sum(len(v) for v in done.values())
-    print(f"served {args.requests} requests, {total_new} tokens "
-          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s on CPU)")
-    for rid in sorted(done):
-        print(f"  req {rid}: {done[rid][:8]}...")
+    outs = engine.generate(prompts, args.max_new, stream=stream)
+    s = engine.metrics.summary()
+    if args.json:
+        print(json.dumps(s, indent=2))
+    else:
+        print(f"served {s['completed']}/{args.requests} requests, "
+              f"{s['tokens_out']} tokens in {s['elapsed_s']:.2f}s "
+              f"({s['tokens_per_sec']:.1f} tok/s)")
+        print(f"  ttft   p50 {s['ttft_p50_s']*1e3:8.1f} ms   "
+              f"p99 {s['ttft_p99_s']*1e3:8.1f} ms")
+        print(f"  itl    p50 {s['itl_p50_s']*1e3:8.1f} ms   "
+              f"p99 {s['itl_p99_s']*1e3:8.1f} ms")
+        print(f"  queue  max {s['queue_depth_max']}  "
+              f"preemptions {s['preemptions']}  rejected {s['rejected']}")
+        for i, toks in enumerate(outs):
+            print(f"  req {i}: {toks[:8]}{'...' if len(toks) > 8 else ''}")
 
 
 if __name__ == "__main__":

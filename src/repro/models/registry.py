@@ -37,6 +37,15 @@ class ModelBundle:
     prefill_input_specs: Callable
     decode_state_specs: Callable          # (ShapeConfig) -> state SDS tree
     init_decode_state: Callable           # (batch, seq_len) -> state arrays
+    # Serving decode-path contract (repro.serving): prefill that emits a
+    # decode state sized for an engine-owned KV slot of capacity ``cache_len``
+    # (token budget = prompt + generated).  Signature:
+    #     serve_prefill_fn(params, tokens, *, cache_len) -> (last_logits, state)
+    # ``state`` must match ``init_decode_state(batch, cache_len)`` leaf-for-
+    # leaf so the engine can insert it into its slot pool without reshaping.
+    # None for families the engine does not serve yet (encdec / vlm frontends
+    # need per-request modality inputs).
+    serve_prefill_fn: Optional[Callable] = None
 
     def param_structs(self):
         return common.param_shape_structs(self.specs)
@@ -77,6 +86,9 @@ def _build_lm(cfg: ModelConfig) -> ModelBundle:
             cfg, shape.global_batch, shape.seq_len),
         init_decode_state=functools.partial(
             lambda cfg, b, s: transformer.init_decode_caches(cfg, b, s), cfg),
+        serve_prefill_fn=lambda params, tokens, *, cache_len: transformer.lm_prefill(
+            cfg, params, tokens,
+            cache_len=transformer.decode_cache_len(cfg, cache_len)),
     )
 
 
@@ -93,6 +105,8 @@ def _build_rg(cfg: ModelConfig) -> ModelBundle:
             cfg, shape.global_batch, shape.seq_len),
         init_decode_state=functools.partial(
             lambda cfg, b, s: rglru.rg_init_states(cfg, b, s), cfg),
+        serve_prefill_fn=lambda params, tokens, *, cache_len: rglru.rg_prefill(
+            cfg, params, tokens, cache_len=cache_len),
     )
 
 
@@ -109,6 +123,9 @@ def _build_rwkv(cfg: ModelConfig) -> ModelBundle:
             cfg, shape.global_batch),
         init_decode_state=functools.partial(
             lambda cfg, b, s: rwkv6.rwkv_init_states(cfg, b), cfg),
+        # recurrent state is O(1) in sequence length: capacity is a no-op
+        serve_prefill_fn=lambda params, tokens, *, cache_len: rwkv6.rwkv_prefill(
+            cfg, params, tokens),
     )
 
 

@@ -296,9 +296,14 @@ def rg_decode(cfg, params, tokens, states):
     return logits[:, 0], new_states
 
 
-def rg_prefill(cfg, params, tokens, *, use_pallas=False):
+def rg_prefill(cfg, params, tokens, *, cache_len: int = 0, use_pallas=False):
     """Prefill: full forward while materializing final recurrent states and
-    the local-attention ring caches.  Returns (last_logits [B,V], states)."""
+    the local-attention ring caches.  Returns (last_logits [B,V], states).
+
+    ``cache_len`` sets the ring-cache capacity (still bounded by the
+    attention window); 0 keeps the prompt-length cache of the demo path.
+    The serving engine passes its pool capacity so prefill states drop
+    straight into a KV slot without reshaping."""
     params = cast_tree(params, cfg.compute_dtype)
     cd = jnp.dtype(cfg.compute_dtype)
     B, S = tokens.shape
@@ -324,7 +329,7 @@ def rg_prefill(cfg, params, tokens, *, use_pallas=False):
         k = dot(h, p["attn"]["wk"], cd).reshape(B, S, cfg.num_kv_heads, -1)
         v = dot(h, p["attn"]["wv"], cd).reshape(B, S, cfg.num_kv_heads, -1)
         k = attn.apply_rope(k, positions, cfg.rope_theta)
-        cache = _fill_kv_cache(k, v, positions, min(S, win))
+        cache = _fill_kv_cache(k, v, positions, min(cache_len or S, win))
         x = x + a
         x = x + mlp_mod.mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
         return x, cache

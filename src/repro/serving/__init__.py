@@ -1,0 +1,14 @@
+"""Continuous-batching inference subsystem (the serving counterpart of the
+paper's user-transparent training runtime).
+
+Users write the model (registry bundles expose ``serve_prefill_fn`` /
+``decode_fn``); the engine owns batching, slotted KV-cache management,
+scheduling, and mesh sharding — selected by config, not user code.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import SlotKVCachePool, pool_pspecs
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["ServingEngine", "SlotKVCachePool", "pool_pspecs",
+           "ServingMetrics", "Request", "Scheduler"]

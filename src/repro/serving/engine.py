@@ -1,0 +1,267 @@
+"""Continuous-batching serving engine.
+
+The user supplies a model config (whose registry bundle defines
+``serve_prefill_fn``/``decode_fn``); the engine supplies everything the
+paper's transparency principle says the runtime should own: request
+admission, slot-level KV-cache management, prefill/decode interleaving, and
+mesh sharding.  A sequential "one request at a time" mental model in, heavy
+traffic out.
+
+Event loop (one ``step()`` = one cycle):
+
+  1. preemption  — under the ``priority`` policy, evict low-priority slots
+                   for strictly-higher-priority waiters (state re-prefilled
+                   on resume; emitted tokens are kept).
+  2. admission   — prefill up to ``prefill_chunk`` waiting requests
+                   (batch-of-1 prefills, jitted per prompt length) and
+                   insert each resulting state into a free KV slot.
+  3. decode      — ``decode_steps`` batched decode steps over the *fixed*
+                   slot pool: decode compiles exactly once because the
+                   batch shape never changes; per-slot ``pos``/``index``
+                   leaves let slots run at ragged sequence positions.
+  4. completion  — finished slots (token budget or EOS) are evicted
+                   individually; their neighbours never notice.
+
+Greedy (argmax) decoding — chosen so batched serving is *token-identical*
+to an unbatched sequential decode of each request, the serving analogue of
+the paper's Fig. 7 equivalence claim (tested in tests/test_serving.py).
+
+Mesh transparency: pass a ``MeshConfig`` and the engine places parameters
+via the same logical-axis rules as ``TransparentTrainer`` (tensor-parallel
+decode over "model") and shards the slot pool over the data axes
+(data-parallel replica serving).  No user code changes — the config *is*
+the deployment.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MeshConfig, ModelConfig, ServeConfig
+from repro.models import common, registry
+from repro.serving.kvcache import SlotKVCachePool
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import Request, Scheduler
+
+P = jax.sharding.PartitionSpec
+
+# stream callback: (request_id, token, done) -> None
+StreamFn = Callable[[int, int, bool], None]
+
+
+class ServingEngine:
+    def __init__(self, model_cfg: ModelConfig,
+                 serve_cfg: Optional[ServeConfig] = None, *,
+                 params=None, mesh_cfg: Optional[MeshConfig] = None,
+                 seed: int = 0, clock=None):
+        self.model_cfg = model_cfg
+        self.cfg = serve_cfg or ServeConfig()
+        self.cfg.validate()
+        self.bundle = registry.build(model_cfg)
+        if self.bundle.serve_prefill_fn is None:
+            raise ValueError(
+                f"{model_cfg.name} ({model_cfg.family}) has no serving "
+                "decode-path contract (serve_prefill_fn); encdec/vlm "
+                "frontends need per-request modality inputs — see ROADMAP")
+
+        # -- mesh placement (config-selected, transparent to callers) -----
+        self.mesh = None
+        dp_axes, dp_total, model_size = (), 1, 1
+        if mesh_cfg is not None:
+            from repro.launch import mesh as mesh_mod
+            mesh_cfg.validate()
+            self.mesh = mesh_mod.build_mesh(mesh_cfg)
+            dp_axes = mesh_cfg.dp_axes
+            dp_total = mesh_mod.dp_size(mesh_cfg)
+            model_size = mesh_mod.model_size(mesh_cfg)
+            rules = common.rules_for(mesh_cfg, model_cfg)
+            param_sh = common.logical_to_mesh(self.bundle.specs, self.mesh,
+                                              rules)
+        if params is None:
+            params = self.bundle.init_params(jax.random.PRNGKey(seed))
+        if self.mesh is not None:
+            params = jax.device_put(params, param_sh)
+        self.params = params
+
+        # -- slot pool ------------------------------------------------------
+        self.pool = SlotKVCachePool(
+            self.cfg.max_batch,
+            lambda: self.bundle.init_decode_state(1, self.cfg.max_seq_len),
+            mesh=self.mesh, dp_axes=dp_axes, dp_total=dp_total,
+            model_size=model_size)
+
+        self.scheduler = Scheduler(self.cfg)
+        self.metrics = ServingMetrics(clock)
+        self.requests: Dict[int, Request] = {}
+        self.results: Dict[int, List[int]] = {}
+        self._rid = itertools.count()
+        self._last_tokens = np.zeros((self.cfg.max_batch,), np.int32)
+
+        # -- compiled entry points -----------------------------------------
+        # prefill: one jit object; XLA caches per (prompt_len, cache_len)
+        self._prefill = jax.jit(self.bundle.serve_prefill_fn,
+                                static_argnames=("cache_len",))
+
+        decode_fn = self.bundle.decode_fn
+
+        def _decode_step(params, toks, pool_state):
+            """toks [slots,1,1] + pool -> (greedy next token [slots], pool)."""
+            logits, new_state = jax.vmap(decode_fn, in_axes=(None, 0, 0))(
+                params, toks, pool_state)
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            return nxt, new_state
+
+        if self.mesh is not None:
+            slots = self.cfg.max_batch
+            tok_axis = (tuple(dp_axes) if dp_total > 1
+                        and slots % dp_total == 0 else None)
+
+            def ns(spec):
+                return jax.sharding.NamedSharding(self.mesh, spec)
+
+            self._decode = jax.jit(
+                _decode_step,
+                in_shardings=(param_sh,
+                              ns(P(tok_axis, None, None)),
+                              self.pool.shardings),
+                out_shardings=(ns(P()), self.pool.shardings),
+                donate_argnums=(2,))
+        else:
+            self._decode = jax.jit(_decode_step, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: Optional[int] = None,
+               priority: int = 0, deadline: Optional[float] = None
+               ) -> Optional[int]:
+        """Queue one request.  Returns its id, or None when the admission
+        queue is full (caller sheds load / retries)."""
+        prompt = tuple(int(t) for t in prompt)
+        max_new = (self.cfg.max_new_tokens if max_new_tokens is None
+                   else max_new_tokens)
+        if max_new < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new}")
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new > self.cfg.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"slot capacity max_seq_len={self.cfg.max_seq_len}")
+        rid = next(self._rid)
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new,
+                      priority=priority, deadline=deadline)
+        if not self.scheduler.submit(req):
+            self.metrics.record_reject()
+            return None
+        self.requests[rid] = req
+        self.metrics.record_submit(rid)
+        return rid
+
+    # ------------------------------------------------------------------
+    # Event loop
+    # ------------------------------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.scheduler.depth() or self.pool.owner)
+
+    def _emit(self, req: Request, token: int, stream: Optional[StreamFn]):
+        first = not req.tokens
+        req.tokens.append(token)
+        if first and not req.preempted:
+            self.metrics.record_first_token(req.rid)
+        else:
+            self.metrics.record_token(req.rid)
+        done = self._finished(req, token)
+        if stream is not None:
+            stream(req.rid, token, done)
+        return done
+
+    def _finished(self, req: Request, token: int) -> bool:
+        if self.cfg.eos_token >= 0 and token == self.cfg.eos_token:
+            return True
+        return len(req.tokens) >= req.max_new_tokens
+
+    def _complete(self, slot: int, req: Request):
+        self.pool.evict(slot)
+        self.results[req.rid] = req.tokens
+        self.metrics.record_completion(req.rid)
+
+    def _admit(self, req: Request, stream: Optional[StreamFn]):
+        prompt = req.resume_prompt()
+        toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
+        logits, state = self._prefill(self.params, toks,
+                                      cache_len=self.cfg.max_seq_len)
+        self.metrics.record_prefill(len(prompt))
+        slot = self.pool.insert(req.rid, state)
+        assert slot is not None, "admission with no free slot"
+        token = int(jnp.argmax(logits[0]))
+        self._last_tokens[slot] = token
+        if self._emit(req, token, stream):
+            self._complete(slot, req)
+
+    def step(self, stream: Optional[StreamFn] = None) -> bool:
+        """One engine cycle; returns True while work remains."""
+        cfg = self.cfg
+        # 1. preemption (priority policy only)
+        if (cfg.policy == "priority" and self.pool.free_slots == 0
+                and self.scheduler.depth()):
+            running = {s: self.requests[r] for s, r in self.pool.owner.items()}
+            for slot, victim in self.scheduler.preemption(running):
+                self.pool.evict(slot)
+                self.scheduler.requeue(victim)
+                self.metrics.record_preemption()
+        # 2. admission: prefill into free slots, per-slot insertion
+        for req in self.scheduler.next_prefills(self.pool.free_slots):
+            self._admit(req, stream)
+        self.metrics.sample_queue_depth(self.scheduler.depth())
+        # 3. batched decode over the fixed pool
+        for _ in range(cfg.decode_steps):
+            if not self.pool.owner:
+                break
+            toks = jnp.asarray(self._last_tokens.reshape(-1, 1, 1))
+            nxt, self.pool.state = self._decode(self.params, toks,
+                                                self.pool.state)
+            nxt = np.asarray(nxt)
+            self._last_tokens = nxt.copy()
+            # 4. completion swap-out
+            for slot, rid in sorted(self.pool.owner.items()):
+                req = self.requests[rid]
+                if self._emit(req, int(nxt[slot]), stream):
+                    self._complete(slot, req)
+        return self.busy
+
+    def run(self, stream: Optional[StreamFn] = None) -> Dict[int, List[int]]:
+        """Drive the loop until queue and slots drain; returns rid -> tokens."""
+        while self.step(stream):
+            pass
+        return dict(self.results)
+
+    # ------------------------------------------------------------------
+    # Convenience: serve a closed batch of prompts
+    # ------------------------------------------------------------------
+
+    def generate(self, prompts, max_new_tokens: Optional[int] = None,
+                 stream: Optional[StreamFn] = None) -> List[List[int]]:
+        """Submit ``prompts`` (list of token lists) and run to completion.
+
+        A closed batch larger than ``max_queue`` is fed with backpressure:
+        when the admission queue is full the engine cycles until it drains
+        (running requests finish and free slots), then keeps submitting —
+        no request of a closed batch is ever shed.
+        """
+        rids = []
+        for p in prompts:
+            while self.scheduler.depth() >= self.cfg.max_queue:
+                self.step(stream)
+            rid = self.submit(p, max_new_tokens)
+            assert rid is not None, "queue admitted past max_queue"
+            rids.append(rid)
+        out = self.run(stream)
+        return [out[r] for r in rids]

@@ -1,0 +1,172 @@
+"""Slotted, preallocated KV-cache pool for continuous-batching decode.
+
+The pool holds one decode-state pytree whose leaves are stacked over a
+leading **slot** axis: ``[slots, <single-sequence decode state>]``, where the
+single-sequence state is exactly what ``ModelBundle.serve_prefill_fn``
+returns for a batch-of-1 prompt (e.g. GQA ring caches ``k/v
+[L, 1, Lc, KV, hd]`` with per-layer ``pos``/``index``).  Because every slot
+carries its *own* position/index leaves, slots decode at ragged sequence
+positions — the property plain batched decode state (shared ``pos``) lacks,
+and the reason the old serve loop had to re-prefill whole batches.
+
+All device ops compile exactly once:
+  * ``insert``  — scatter a prefilled state into slot *i* (traced index)
+  * ``read``    — gather slot *i* back out (tests / debugging)
+  * ``reset``   — restore slot *i* to the blank state (eviction hygiene)
+
+Free-slot bookkeeping is host-side; the engine maps slot -> request.
+
+Mesh transparency: ``pool_pspecs`` derives a PartitionSpec tree for the pool
+(slot axis -> data axes, head/feature dims -> model axis when divisible), so
+the engine serves data-parallel across slots and tensor-parallel within a
+decode step from config alone — same name-matched rule style as
+``launch/sharding.py`` (whose specs cover the *unslotted* serve states).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (pooled leaves = single-seq leaves + leading slot axis)
+# ---------------------------------------------------------------------------
+
+def pool_pspecs(pool_structs, *, dp_axes: Tuple[str, ...] = (),
+                dp_total: int = 1, model_size: int = 1):
+    """PartitionSpec tree for a slot pool.
+
+    slot axis (dim 0) -> dp axes when the slot count divides them;
+    k/v KV-head (else head_dim), MLA rank, and wkv head dims -> "model"
+    when divisible.  ``pos``/``index`` leaves replicate except for the slot
+    axis itself.
+    """
+
+    def _model(dim: int):
+        return "model" if model_size > 1 and dim % model_size == 0 else None
+
+    def rule(path, leaf):
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = p.key
+                break
+        nd = leaf.ndim
+        spec = [None] * nd
+        slots = leaf.shape[0] if nd else 1
+        if dp_axes and dp_total > 1 and slots % dp_total == 0:
+            spec[0] = tuple(dp_axes)
+        if name in ("k", "v") and nd == 6:          # [slots,L,1,Lc,KV,hd]
+            spec[4] = _model(leaf.shape[4])
+            if spec[4] is None:
+                spec[5] = _model(leaf.shape[5])
+        elif name in ("ckv", "krope") and nd == 5:  # [slots,L,1,Lc,R]
+            spec[4] = _model(leaf.shape[4])
+        elif name == "s" and nd == 6:               # [slots,L,1,H,hd,hd]
+            spec[3] = _model(leaf.shape[3])
+        elif name == "h" and nd == 4:               # [slots,n,1,W]
+            spec[3] = _model(leaf.shape[3])
+        elif name == "conv" and nd == 5:            # [slots,n,1,cw-1,W]
+            spec[4] = _model(leaf.shape[4])
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, pool_structs)
+
+
+# ---------------------------------------------------------------------------
+# The pool
+# ---------------------------------------------------------------------------
+
+class SlotKVCachePool:
+    """Fixed-shape pool of ``num_slots`` per-sequence decode states.
+
+    ``blank_fn()`` must return the single-sequence (batch=1) decode state a
+    fresh slot holds — ``ModelBundle.init_decode_state(1, cache_len)``.  The
+    pool allocates once; insertion/eviction are per-slot scatters, never a
+    batch rebuild, so the batched-decode shape the engine compiles against
+    is constant for the lifetime of the process.
+    """
+
+    def __init__(self, num_slots: int, blank_fn: Callable[[], object],
+                 mesh=None, dp_axes: Tuple[str, ...] = (),
+                 dp_total: int = 1, model_size: int = 1):
+        assert num_slots >= 1
+        self.num_slots = num_slots
+        self.mesh = mesh
+        blank = blank_fn()
+        pool_structs = jax.eval_shape(
+            lambda b: jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (num_slots,) + x.shape), b),
+            blank)
+        if mesh is not None:
+            self.pspecs = pool_pspecs(pool_structs, dp_axes=dp_axes,
+                                      dp_total=dp_total, model_size=model_size)
+            self.shardings = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), self.pspecs)
+        else:
+            self.pspecs = None
+            self.shardings = None
+
+        def _stack(b):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (num_slots,) + x.shape).copy(), b)
+
+        def _insert(pool, one, slot):
+            return jax.tree.map(lambda p, o: p.at[slot].set(o), pool, one)
+
+        def _read(pool, slot):
+            return jax.tree.map(lambda p: p[slot], pool)
+
+        out_sh = {"out_shardings": self.shardings} if mesh is not None else {}
+        self._blank = blank
+        self._insert = jax.jit(_insert, donate_argnums=(0,), **out_sh)
+        self._read = jax.jit(_read)
+        self.state = jax.jit(_stack, **out_sh)(blank)
+        self._free: List[int] = list(range(num_slots))
+        self.owner: Dict[int, int] = {}      # slot -> request id
+
+    # -- host bookkeeping --------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self.owner)
+
+    def alloc(self, rid: int) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop(0)
+        assert slot not in self.owner, f"slot {slot} double-assigned"
+        self.owner[slot] = rid
+        return slot
+
+    # -- device ops (each compiled once) -----------------------------------
+
+    def insert(self, rid: int, one_state) -> Optional[int]:
+        """Place a prefilled single-sequence state into a free slot."""
+        slot = self.alloc(rid)
+        if slot is None:
+            return None
+        self.state = self._insert(self.state, one_state,
+                                  jnp.asarray(slot, jnp.int32))
+        return slot
+
+    def evict(self, slot: int):
+        """Free a slot and blank its state (stale K/V never leaks into a
+        later tenant even transiently)."""
+        rid = self.owner.pop(slot)
+        self.state = self._insert(self.state, self._blank,
+                                  jnp.asarray(slot, jnp.int32))
+        self._free.append(slot)
+        self._free.sort()
+        return rid
+
+    def read(self, slot: int):
+        return self._read(self.state, jnp.asarray(slot, jnp.int32))

@@ -1,0 +1,123 @@
+"""Serving telemetry: TTFT, inter-token latency, queue depth, tokens/sec.
+
+``ServingMetrics`` is a plain host-side accumulator — the engine calls the
+``record_*`` hooks from its event loop; nothing here touches jax.  The clock
+is injectable so tests can drive deterministic timelines.
+
+``summary()`` is the export surface: a flat dict (JSON-friendly) consumed by
+``launch/serve.py`` (pretty print) and ``benchmarks/serving.py``
+(BENCH_serving.json trajectory).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+
+def percentile(xs: List[float], p: float) -> float:
+    """Nearest-rank percentile without numpy (metrics must stay import-light)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, int(round((p / 100.0) * (len(s) - 1)))))
+    return s[k]
+
+
+class ServingMetrics:
+    """Per-request latency + engine throughput counters.
+
+    Timeline per request: submit -> first_token (TTFT, covers queueing +
+    prefill) -> token* (inter-token latency) -> completion.
+    """
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self._clock = clock or time.monotonic
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero every counter (benchmarks reuse warm engines)."""
+        self._submit_t: Dict[int, float] = {}
+        self._last_token_t: Dict[int, float] = {}
+        self.ttft: List[float] = []
+        self.itl: List[float] = []                 # inter-token latencies
+        self.queue_depth: List[int] = []           # sampled once per cycle
+        self.preemptions = 0
+        self.rejected = 0
+        self.completed = 0
+        self.tokens_out = 0
+        self.prefill_tokens = 0
+        self._t_start: Optional[float] = None
+        self._t_end: Optional[float] = None
+
+    def now(self) -> float:
+        return self._clock()
+
+    # -- engine hooks ------------------------------------------------------
+
+    def record_submit(self, rid: int) -> None:
+        t = self.now()
+        if self._t_start is None:
+            self._t_start = t
+        self._submit_t[rid] = t
+
+    def record_reject(self) -> None:
+        self.rejected += 1
+
+    def record_prefill(self, n_prompt_tokens: int) -> None:
+        self.prefill_tokens += n_prompt_tokens
+
+    def record_first_token(self, rid: int) -> None:
+        t = self.now()
+        if rid in self._submit_t:
+            self.ttft.append(t - self._submit_t[rid])
+        self._last_token_t[rid] = t
+        self.tokens_out += 1
+        self._t_end = t
+
+    def record_token(self, rid: int) -> None:
+        t = self.now()
+        last = self._last_token_t.get(rid)
+        if last is not None:
+            self.itl.append(t - last)
+        self._last_token_t[rid] = t
+        self.tokens_out += 1
+        self._t_end = t
+
+    def record_completion(self, rid: int) -> None:
+        self.completed += 1
+        self._t_end = self.now()
+        self._submit_t.pop(rid, None)
+        self._last_token_t.pop(rid, None)
+
+    def record_preemption(self) -> None:
+        self.preemptions += 1
+
+    def sample_queue_depth(self, depth: int) -> None:
+        self.queue_depth.append(depth)
+
+    # -- export ------------------------------------------------------------
+
+    def elapsed(self) -> float:
+        if self._t_start is None or self._t_end is None:
+            return 0.0
+        return max(self._t_end - self._t_start, 0.0)
+
+    def summary(self) -> Dict[str, float]:
+        dt = self.elapsed()
+        return {
+            "completed": self.completed,
+            "tokens_out": self.tokens_out,
+            "prefill_tokens": self.prefill_tokens,
+            "elapsed_s": dt,
+            "tokens_per_sec": (self.tokens_out / dt) if dt > 0 else 0.0,
+            "ttft_mean_s": sum(self.ttft) / len(self.ttft) if self.ttft else 0.0,
+            "ttft_p50_s": percentile(self.ttft, 50),
+            "ttft_p99_s": percentile(self.ttft, 99),
+            "itl_p50_s": percentile(self.itl, 50),
+            "itl_p99_s": percentile(self.itl, 99),
+            "queue_depth_max": max(self.queue_depth, default=0),
+            "queue_depth_mean": (sum(self.queue_depth) / len(self.queue_depth)
+                                 if self.queue_depth else 0.0),
+            "preemptions": self.preemptions,
+            "rejected": self.rejected,
+        }

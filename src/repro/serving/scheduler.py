@@ -1,0 +1,143 @@
+"""Admission + batching scheduler for the continuous-batching engine.
+
+Pure host-side logic (no jax): a bounded request queue plus the policy that
+decides which waiting requests are prefilled into free KV slots each engine
+cycle, and — under the ``priority`` policy — which running request to
+preempt when something more urgent is waiting.
+
+Policies
+  * ``fcfs``      — strict arrival order, no preemption.
+  * ``priority``  — higher ``priority`` first; ties broken by earlier
+                    ``deadline`` (None = no deadline = latest), then arrival.
+                    A waiting request with strictly higher priority than the
+                    lowest-priority running one preempts it: the victim's
+                    slot is evicted and the victim re-queued with its
+                    generated tokens folded into the prompt, so its eventual
+                    output is unchanged (greedy decode is deterministic).
+
+``prefill_chunk`` bounds how many prefills are admitted per cycle — the
+prefill/decode interleaving knob: prefill latency a newly admitted request
+pays is hidden from running streams in chunks rather than all at once.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ServeConfig
+
+
+@dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+    rid: int
+    prompt: Tuple[int, ...]               # token ids
+    max_new_tokens: int
+    priority: int = 0                     # higher = more urgent
+    deadline: Optional[float] = None      # absolute time, policy tiebreak
+    arrival_seq: int = 0                  # monotone admission counter
+    # runtime state (owned by the engine)
+    tokens: List[int] = field(default_factory=list)   # generated so far
+    preempted: int = 0                    # times this request was evicted
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.tokens)
+
+    def resume_prompt(self) -> Tuple[int, ...]:
+        """Prompt to re-prefill after preemption: original + generated."""
+        return self.prompt + tuple(self.tokens)
+
+
+class Scheduler:
+    """Bounded FCFS/priority queue feeding KV slots.
+
+    The scheduler never touches device state: the engine asks it *which*
+    requests to prefill (``next_prefills``) and *which* running request to
+    evict (``preemption``); slot bookkeeping itself lives in the KV pool.
+    """
+
+    def __init__(self, cfg: ServeConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.waiting: List[Request] = []
+        self._seq = itertools.count()
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Admit into the waiting queue; False when over ``max_queue``."""
+        if len(self.waiting) >= self.cfg.max_queue:
+            return False
+        req.arrival_seq = next(self._seq)
+        self.waiting.append(req)
+        return True
+
+    def depth(self) -> int:
+        return len(self.waiting)
+
+    # -- ordering ----------------------------------------------------------
+
+    def _rank(self, r: Request):
+        """Sort key: most-urgent first."""
+        if self.cfg.policy == "priority":
+            dl = r.deadline if r.deadline is not None else float("inf")
+            return (-r.priority, dl, r.arrival_seq)
+        return (r.arrival_seq,)
+
+    def _sorted_waiting(self) -> List[Request]:
+        return sorted(self.waiting, key=self._rank)
+
+    # -- batching ----------------------------------------------------------
+
+    def next_prefills(self, free_slots: int) -> List[Request]:
+        """Pop up to min(free_slots, prefill_chunk) requests to prefill now."""
+        n = min(free_slots, self.cfg.prefill_chunk, len(self.waiting))
+        if n <= 0:
+            return []
+        picked = self._sorted_waiting()[:n]
+        for r in picked:
+            self.waiting.remove(r)
+        return picked
+
+    def preemption(self, running: Dict[int, Request]) -> List[Tuple[int, Request]]:
+        """(slot, victim) pairs to evict for strictly-higher-priority waiters.
+
+        Only meaningful under the ``priority`` policy and only when no free
+        slot exists (the engine calls it after admission).  At most one
+        victim per waiting challenger, and never more victims than
+        ``prefill_chunk`` — a freed slot the next admission round cannot
+        refill would idle while its victim needlessly loses decode progress.
+        A challenger never preempts a peer of equal priority (avoids
+        livelock).
+        """
+        if self.cfg.policy != "priority" or not running or not self.waiting:
+            return []
+        victims: List[Tuple[int, Request]] = []
+        # running requests, least-urgent first
+        by_urgency = sorted(running.items(), key=lambda kv: self._rank(kv[1]),
+                            reverse=True)
+        challengers = self._sorted_waiting()[:self.cfg.prefill_chunk]
+        taken = set()
+        for ch in challengers:
+            for slot, victim in by_urgency:
+                if slot in taken:
+                    continue
+                if ch.priority > victim.priority:
+                    victims.append((slot, victim))
+                    taken.add(slot)
+                    break
+            else:
+                break       # most-urgent challenger found no victim: stop
+        return victims
+
+    def requeue(self, req: Request) -> None:
+        """Return a preempted request to the queue (front of its rank class).
+
+        Preempted requests bypass ``max_queue`` — they were already admitted
+        once; bouncing them would drop accepted work.
+        """
+        req.preempted += 1
+        req.arrival_seq = -1 - req.preempted  # before any fresh arrival
+        self.waiting.append(req)

@@ -1,0 +1,272 @@
+"""Continuous-batching serving engine (repro.serving).
+
+Three layers of guarantees:
+  * scheduler packing invariants — FCFS order, admission control, priority
+    ordering + preemption, no slot double-assignment;
+  * KV-slot pool — insert/evict round-trip, eviction hygiene, exhaustion;
+  * end-to-end — batched engine output is **token-identical** to an
+    unbatched sequential decode of each request (the serving analogue of
+    the paper's Fig. 7 equivalence test), on one device and under a mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MeshConfig, ServeConfig, get_config
+from repro.configs.base import ShapeConfig
+from repro.models import registry
+from repro.serving import (Request, Scheduler, ServingEngine, ServingMetrics,
+                           SlotKVCachePool)
+
+
+def _req(rid, plen=4, max_new=4, priority=0, deadline=None):
+    return Request(rid=rid, prompt=tuple(range(1, plen + 1)),
+                   max_new_tokens=max_new, priority=priority,
+                   deadline=deadline)
+
+
+def _prompts(rng, vocab, lengths):
+    return [list(rng.integers(0, vocab, (l,))) for l in lengths]
+
+
+def _sequential_decode(cfg, params, prompt, n_new, cache_len):
+    """Unbatched reference: prefill + single-sequence decode loop."""
+    bundle = registry.build(cfg)
+    prefill = jax.jit(bundle.serve_prefill_fn, static_argnames=("cache_len",))
+    decode = jax.jit(bundle.decode_fn)
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, state = prefill(params, toks, cache_len=cache_len)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        logits, state = decode(params, jnp.asarray([[out[-1]]], jnp.int32),
+                               state)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants
+# ---------------------------------------------------------------------------
+
+def test_scheduler_fcfs_order():
+    s = Scheduler(ServeConfig(max_batch=4, prefill_chunk=2))
+    for i in range(5):
+        assert s.submit(_req(i))
+    # chunked pops preserve arrival order, bounded by chunk AND free slots
+    assert [r.rid for r in s.next_prefills(free_slots=4)] == [0, 1]
+    assert [r.rid for r in s.next_prefills(free_slots=1)] == [2]
+    assert [r.rid for r in s.next_prefills(free_slots=4)] == [3, 4]
+    assert s.next_prefills(free_slots=4) == []
+
+
+def test_scheduler_admission_control():
+    s = Scheduler(ServeConfig(max_queue=2))
+    assert s.submit(_req(0)) and s.submit(_req(1))
+    assert not s.submit(_req(2))          # queue full -> rejected
+    assert s.depth() == 2
+
+
+def test_scheduler_priority_and_deadline_order():
+    s = Scheduler(ServeConfig(policy="priority", prefill_chunk=8))
+    s.submit(_req(0, priority=0))
+    s.submit(_req(1, priority=5, deadline=20.0))
+    s.submit(_req(2, priority=5, deadline=10.0))
+    s.submit(_req(3, priority=5))         # no deadline sorts after deadlines
+    order = [r.rid for r in s.next_prefills(free_slots=8)]
+    assert order == [2, 1, 3, 0]
+
+
+def test_scheduler_preemption_targets_lowest_priority():
+    s = Scheduler(ServeConfig(policy="priority"))
+    running = {0: _req(10, priority=1), 1: _req(11, priority=0),
+               2: _req(12, priority=3)}
+    s.submit(_req(20, priority=5))
+    s.submit(_req(21, priority=2))
+    victims = s.preemption(running)
+    # two challengers outrank someone: rid20 evicts the weakest (rid11),
+    # rid21 evicts the next weakest (rid10); rid12 (prio 3) survives.
+    assert [(slot, v.rid) for slot, v in victims] == [(1, 11), (0, 10)]
+    # equal priority never preempts (no livelock)
+    s2 = Scheduler(ServeConfig(policy="priority"))
+    s2.submit(_req(30, priority=1))
+    assert s2.preemption({0: _req(31, priority=1)}) == []
+    # fcfs never preempts
+    s3 = Scheduler(ServeConfig(policy="fcfs"))
+    s3.submit(_req(40, priority=9))
+    assert s3.preemption({0: _req(41, priority=0)}) == []
+
+
+def test_scheduler_requeued_preemptee_goes_first():
+    s = Scheduler(ServeConfig(policy="priority", prefill_chunk=4))
+    s.submit(_req(0, priority=1))
+    victim = _req(99, priority=1)
+    victim.tokens = [7, 8]
+    s.requeue(victim)
+    order = [r.rid for r in s.next_prefills(free_slots=4)]
+    assert order == [99, 0]
+    assert victim.resume_prompt() == victim.prompt + (7, 8)
+
+
+# ---------------------------------------------------------------------------
+# KV slot pool
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    bundle = registry.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def test_pool_no_double_assignment(dense_setup):
+    cfg, bundle, _ = dense_setup
+    pool = SlotKVCachePool(3, lambda: bundle.init_decode_state(1, 16))
+    slots = [pool.alloc(rid) for rid in (0, 1, 2)]
+    assert sorted(slots) == [0, 1, 2]          # all distinct
+    assert pool.alloc(3) is None               # exhausted -> None
+    rid = pool.evict(slots[1])
+    assert rid == 1 and pool.free_slots == 1
+    assert pool.alloc(4) == slots[1]           # freed slot is reusable
+
+
+def test_pool_insert_evict_roundtrip(dense_setup):
+    cfg, bundle, params = dense_setup
+    cap = 24
+    pool = SlotKVCachePool(2, lambda: bundle.init_decode_state(1, cap))
+    prompt = np.arange(1, 8, dtype=np.int32)[None]
+    _, state = jax.jit(bundle.serve_prefill_fn,
+                       static_argnames=("cache_len",))(
+        params, jnp.asarray(prompt), cache_len=cap)
+    slot = pool.insert(rid=7, one_state=state)
+    assert slot is not None and pool.owner[slot] == 7
+    back = pool.read(slot)
+    jax.tree.map(np.testing.assert_array_equal, back,
+                 jax.tree.map(np.asarray, state))
+    # eviction blanks the slot (no stale K/V for the next tenant)
+    pool.evict(slot)
+    blank = bundle.init_decode_state(1, cap)
+    jax.tree.map(np.testing.assert_array_equal, pool.read(slot),
+                 jax.tree.map(np.asarray, blank))
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_deterministic_clock():
+    t = [0.0]
+    m = ServingMetrics(clock=lambda: t[0])
+    m.record_submit(0)
+    t[0] = 0.5
+    m.record_first_token(0)                    # TTFT = 0.5
+    t[0] = 0.7
+    m.record_token(0)                          # ITL = 0.2
+    t[0] = 1.0
+    m.record_token(0)                          # ITL = 0.3
+    m.record_completion(0)
+    s = m.summary()
+    assert s["ttft_p50_s"] == pytest.approx(0.5)
+    assert s["itl_p50_s"] == pytest.approx(0.2) or \
+        s["itl_p50_s"] == pytest.approx(0.3)
+    assert s["tokens_out"] == 3 and s["completed"] == 1
+    assert s["tokens_per_sec"] == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: batched engine == sequential decode (Fig. 7 analogue)
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_sequential_decode(dense_setup):
+    cfg, _, params = dense_setup
+    scfg = ServeConfig(max_batch=3, max_seq_len=48, max_new_tokens=6,
+                       prefill_chunk=2, decode_steps=2)
+    eng = ServingEngine(cfg, scfg, params=params)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(rng, cfg.vocab_size, [7, 12, 5, 9, 11, 6])
+    events = []
+    outs = eng.generate(prompts, 6,
+                        stream=lambda r, t, d: events.append((r, t, d)))
+    for p, got in zip(prompts, outs):
+        assert got == _sequential_decode(cfg, params, p, 6, scfg.max_seq_len)
+    # every request finished, streamed exactly its tokens, in order
+    assert eng.metrics.summary()["completed"] == len(prompts)
+    assert not eng.busy
+    for rid, toks in enumerate(outs):
+        assert [t for r, t, _ in events if r == rid] == toks
+    assert sum(d for _, _, d in events) == len(prompts)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "recurrentgemma-2b"])
+def test_engine_matches_sequential_decode_families(arch):
+    cfg = get_config(arch, smoke=True)
+    scfg = ServeConfig(max_batch=2, max_seq_len=24, max_new_tokens=4,
+                       decode_steps=3)
+    eng = ServingEngine(cfg, scfg, seed=0)
+    params = eng.params
+    rng = np.random.default_rng(1)
+    prompts = _prompts(rng, cfg.vocab_size, [6, 9, 5])
+    outs = eng.generate(prompts, 4)
+    for p, got in zip(prompts, outs):
+        assert got == _sequential_decode(cfg, params, p, 4, scfg.max_seq_len)
+
+
+def test_engine_mesh_matches_single_device(dense_setup):
+    cfg, _, params = dense_setup
+    scfg = ServeConfig(max_batch=4, max_seq_len=40, max_new_tokens=4,
+                       decode_steps=2)
+    rng = np.random.default_rng(2)
+    prompts = _prompts(rng, cfg.vocab_size, [7, 11, 6, 9, 8])
+    # conftest forces 8 host devices: 2-way data (slots) x 2-way model (TP)
+    mesh_cfg = MeshConfig(shape=(2, 2), axis_names=("data", "model"))
+    out_mesh = ServingEngine(cfg, scfg, params=params,
+                             mesh_cfg=mesh_cfg).generate(prompts, 4)
+    out_single = ServingEngine(cfg, scfg, params=params).generate(prompts, 4)
+    assert out_mesh == out_single
+
+
+def test_engine_priority_preemption_end_to_end(dense_setup):
+    cfg, _, params = dense_setup
+    scfg = ServeConfig(max_batch=1, max_seq_len=40, max_new_tokens=8,
+                       policy="priority", decode_steps=1, prefill_chunk=1)
+    eng = ServingEngine(cfg, scfg, params=params)
+    rng = np.random.default_rng(3)
+    low = eng.submit(list(rng.integers(0, cfg.vocab_size, (6,))),
+                     max_new_tokens=8, priority=0)
+    eng.step()                                 # low occupies the only slot
+    assert eng.pool.free_slots == 0
+    high = eng.submit(list(rng.integers(0, cfg.vocab_size, (5,))),
+                      max_new_tokens=3, priority=5)
+    out = eng.run()
+    assert eng.metrics.preemptions >= 1
+    assert eng.requests[low].preempted >= 1
+    assert len(out[high]) == 3 and len(out[low]) == 8
+    # the high-priority request finished before the preempted one resumed:
+    # its completion evicted the slot the victim later reclaimed
+    assert eng.metrics.summary()["completed"] == 2
+
+
+def test_engine_admission_queue_full(dense_setup):
+    cfg, _, params = dense_setup
+    scfg = ServeConfig(max_batch=1, max_queue=2, max_seq_len=32,
+                       max_new_tokens=4)
+    eng = ServingEngine(cfg, scfg, params=params)
+    assert eng.submit([1, 2, 3]) is not None
+    assert eng.submit([1, 2, 3]) is not None
+    assert eng.submit([1, 2, 3]) is None       # shed load
+    assert eng.metrics.rejected == 1
+
+
+def test_engine_rejects_oversized_request(dense_setup):
+    cfg, _, params = dense_setup
+    eng = ServingEngine(cfg, ServeConfig(max_batch=1, max_seq_len=16),
+                        params=params)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit(list(range(1, 15)), max_new_tokens=10)
+
+
+def test_unserved_families_raise():
+    cfg = get_config("whisper-tiny", smoke=True)
+    with pytest.raises(ValueError, match="no serving"):
+        ServingEngine(cfg, ServeConfig(max_batch=1, max_seq_len=16))
