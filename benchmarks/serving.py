@@ -1,14 +1,21 @@
-"""Serving-engine benchmark: tokens/sec, TTFT, p50/p99 inter-token latency.
+"""Serving-engine benchmark: tokens/sec, TTFT, p50/p99 inter-token latency,
+and paged-vs-slotted KV-cache memory.
 
     PYTHONPATH=src python benchmarks/serving.py [--arch qwen2.5-14b] \
         [--requests 16] [--batch 4] [--out BENCH_serving.json]
 
-Protocol: one warm-up pass populates the jit caches (prefill per prompt
-length + the single batched-decode executable), then the measured pass
-serves a fresh queue of ragged-length requests through the continuous-
-batching engine.  Results land in ``BENCH_serving.json`` so later PRs have
-a perf trajectory to beat; the ``run()`` hook returns harness-style
-``(name, us_per_call, derived)`` rows.
+Protocol: for each KV layout (paged, slotted) one warm-up pass populates
+the jit caches (prefill per prompt length + the single batched-decode
+executable), then the measured pass serves a fresh queue of ragged-length
+requests through the continuous-batching engine.  Results land in
+``BENCH_serving.json`` so later PRs have a perf trajectory to beat — the
+paged section's ``kv_bytes_peak`` vs ``kv_bytes_slotted`` is the memory
+win, its ``tokens_per_sec`` guards against paged-kernel regressions.  The
+``run()`` hook returns harness-style ``(name, us_per_call, derived)`` rows.
+
+Note on latency semantics: since the ITL-under-preemption fix, inter-token
+latency excludes preemption gaps (eviction -> resume time shows up in the
+request's completion time, not as one giant ITL sample).
 """
 import argparse
 import json
@@ -18,10 +25,11 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 DEFAULTS = dict(arch="qwen2.5-14b", requests=16, batch=4, prompt_len=16,
-                max_new=12)
+                max_new=12, page_size=8)
 
 
-def _serve_once(arch, requests, batch, prompt_len, max_new):
+def _serve_once(arch, requests, batch, prompt_len, max_new, kv_layout,
+                page_size):
     import numpy as np
     from repro.configs import ServeConfig, get_config
     from repro.serving import ServingEngine
@@ -30,7 +38,8 @@ def _serve_once(arch, requests, batch, prompt_len, max_new):
     scfg = ServeConfig(max_batch=batch, max_queue=max(requests, 8),
                        max_seq_len=prompt_len + max_new,
                        max_new_tokens=max_new, prefill_chunk=2,
-                       decode_steps=4)
+                       decode_steps=4, kv_layout=kv_layout,
+                       page_size=page_size)
     engine = ServingEngine(cfg, scfg, seed=0)
     rng = np.random.default_rng(0)
     lengths = rng.integers(max(prompt_len // 2, 1), prompt_len + 1,
@@ -43,20 +52,50 @@ def _serve_once(arch, requests, batch, prompt_len, max_new):
     engine.results.clear()
     out = engine.generate(prompts, max_new)
     assert len(out) == requests and all(len(t) == max_new for t in out)
-    return engine.metrics.summary()
+    return engine.paged, engine.metrics.summary()
+
+
+def _bench(**kw):
+    """{'paged': summary, 'slotted': summary, 'kv_bytes_saved_ratio': x}.
+
+    Archs without a paged decode path (recurrent / MLA / windowed) bench
+    the slotted layout only — no 'paged' section, ratio 0."""
+    from repro.configs import get_config
+    from repro.models import registry
+
+    paged_ok = registry.build(
+        get_config(kw["arch"], smoke=True)).paged_decode_fn is not None
+    record = {}
+    for layout in (("paged", "slotted") if paged_ok else ("slotted",)):
+        is_paged, s = _serve_once(kw["arch"], kw["requests"], kw["batch"],
+                                  kw["prompt_len"], kw["max_new"],
+                                  layout, kw["page_size"])
+        assert is_paged == (layout == "paged")
+        record[layout] = s
+    record["kv_bytes_saved_ratio"] = 0.0
+    if paged_ok:
+        peak = record["paged"]["kv_bytes_peak"]
+        wall = record["paged"]["kv_bytes_slotted"]
+        record["kv_bytes_saved_ratio"] = (1.0 - peak / wall) if wall else 0.0
+    return record
 
 
 def run(**overrides):
     """Harness hook: [(name, us_per_call, derived), ...]."""
     kw = {**DEFAULTS, **overrides}
-    s = _serve_once(kw["arch"], kw["requests"], kw["batch"],
-                    kw["prompt_len"], kw["max_new"])
+    r = _bench(**kw)
+    s = r["slotted"]
+    p = r.get("paged", s)
     return [
-        ("serving_tokens_per_sec", 0.0, s["tokens_per_sec"]),
-        ("serving_ttft_p50", s["ttft_p50_s"] * 1e6, s["ttft_p50_s"]),
-        ("serving_ttft_p99", s["ttft_p99_s"] * 1e6, s["ttft_p99_s"]),
-        ("serving_itl_p50", s["itl_p50_s"] * 1e6, s["itl_p50_s"]),
-        ("serving_itl_p99", s["itl_p99_s"] * 1e6, s["itl_p99_s"]),
+        ("serving_tokens_per_sec", 0.0, p["tokens_per_sec"]),
+        ("serving_tokens_per_sec_slotted", 0.0, s["tokens_per_sec"]),
+        ("serving_ttft_p50", p["ttft_p50_s"] * 1e6, p["ttft_p50_s"]),
+        ("serving_ttft_p99", p["ttft_p99_s"] * 1e6, p["ttft_p99_s"]),
+        ("serving_itl_p50", p["itl_p50_s"] * 1e6, p["itl_p50_s"]),
+        ("serving_itl_p99", p["itl_p99_s"] * 1e6, p["itl_p99_s"]),
+        ("serving_kv_bytes_peak_paged", 0.0, p["kv_bytes_peak"]),
+        ("serving_kv_bytes_slotted", 0.0, p["kv_bytes_slotted"]),
+        ("serving_kv_bytes_saved_ratio", 0.0, r["kv_bytes_saved_ratio"]),
     ]
 
 
@@ -67,15 +106,17 @@ def main():
     ap.add_argument("--batch", type=int, default=DEFAULTS["batch"])
     ap.add_argument("--prompt-len", type=int, default=DEFAULTS["prompt_len"])
     ap.add_argument("--max-new", type=int, default=DEFAULTS["max_new"])
+    ap.add_argument("--page-size", type=int, default=DEFAULTS["page_size"])
     ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
                                          / "BENCH_serving.json"))
     args = ap.parse_args()
-    s = _serve_once(args.arch, args.requests, args.batch, args.prompt_len,
-                    args.max_new)
+    r = _bench(arch=args.arch, requests=args.requests, batch=args.batch,
+               prompt_len=args.prompt_len, max_new=args.max_new,
+               page_size=args.page_size)
     record = {
         "arch": args.arch, "smoke": True, "requests": args.requests,
         "batch_slots": args.batch, "prompt_len": args.prompt_len,
-        "max_new": args.max_new, **s,
+        "max_new": args.max_new, "page_size": args.page_size, **r,
     }
     Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
     print(json.dumps(record, indent=2))

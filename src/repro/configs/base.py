@@ -222,6 +222,7 @@ MULTI_POD = MeshConfig(shape=(2, 16, 16), axis_names=("pod", "data", "model"))
 # ---------------------------------------------------------------------------
 
 SERVE_POLICIES = ("fcfs", "priority")
+KV_LAYOUTS = ("auto", "paged", "slotted")
 
 
 @dataclass(frozen=True)
@@ -231,6 +232,17 @@ class ServeConfig:
     The decode batch shape is fixed at ``max_batch`` slots so XLA compiles
     the batched decode exactly once; requests are inserted into / evicted
     from KV-cache slots individually (no batch re-prefill).
+
+    KV memory is page-granular for the attention (lm) family
+    (``kv_layout="auto"`` picks paged when the bundle supports it): pages of
+    ``page_size`` tokens are allocated lazily as a request's position grows
+    and returned on eviction, so cache bytes held track actual sequence
+    lengths instead of ``max_batch x max_seq_len``.  Recurrent families
+    (RG-LRU / RWKV: O(1) state per slot) and MLA / windowed attention stay
+    on the slotted pool.  ``num_pages`` provisions the shared pool
+    (0 = worst case ``max_batch * ceil(max_seq_len / page_size)`` + the
+    reserved trash page); under-provisioning oversubscribes memory — the
+    engine preempts the youngest request on page pressure.
     """
     max_batch: int = 8            # decode slots (fixed batched-decode shape)
     max_queue: int = 64           # admission control: reject beyond this
@@ -240,15 +252,29 @@ class ServeConfig:
     prefill_chunk: int = 2        # max prefills admitted per engine cycle
     decode_steps: int = 4         # decode steps per cycle between admissions
     eos_token: int = -1           # stop token (-1 disables early stop)
+    kv_layout: str = "auto"       # "auto" | "paged" | "slotted"
+    page_size: int = 16           # tokens per KV page (paged layout)
+    num_pages: int = 0            # shared page pool size (0 = worst case)
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_seq_len // self.page_size)
 
     def validate(self) -> None:
         assert self.policy in SERVE_POLICIES, self.policy
+        assert self.kv_layout in KV_LAYOUTS, self.kv_layout
         assert self.max_batch >= 1
         assert self.max_queue >= 1
         assert self.max_seq_len >= 2
         assert self.max_new_tokens >= 1
         assert self.prefill_chunk >= 1
         assert self.decode_steps >= 1
+        assert self.page_size >= 1
+        # a pool smaller than one slot's worth (+ trash page) deadlocks the
+        # engine: a lone max-length request could never be placed
+        assert self.num_pages == 0 or self.num_pages >= self.pages_per_slot + 1, (
+            f"num_pages={self.num_pages} cannot hold one max_seq_len request "
+            f"(needs >= {self.pages_per_slot + 1} incl. the trash page)")
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)

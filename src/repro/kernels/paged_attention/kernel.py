@@ -1,0 +1,118 @@
+"""Paged-attention decode TPU kernel (vLLM-style, scalar-prefetched pages).
+
+One decode step attends each slot's single query against K/V scattered
+across a global page pool.  The page table is a *scalar-prefetch* operand
+(``pltpu.PrefetchScalarGridSpec``): BlockSpec index maps read it to decide
+which physical page to DMA into VMEM for each grid step, so HBM traffic is
+``pages_held``, not ``slots x max_pages`` — the whole point of paging.
+
+Grid: ``(slots, KV, n_table)`` with the page dimension sequential
+("arbitrary"); the online-softmax state (m, l, acc) lives in VMEM scratch
+and carries across a slot's pages, exactly like the kv-block dimension of
+``flash_attention``.  Pages past a slot's length are skipped at grid level
+(``pl.when``) — their table entries point at the trash page (page 0) and
+cost no MXU cycles.
+
+Layouts (see ref.py): q [slots, KV, G, hd]; k/v pages [P, ps, KV, hd];
+page_table [slots, n_table] int32; lengths [slots] int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.common import NEG_INF, CompilerParams as _CompilerParams
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+                  n_table: int):
+    s = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[s]
+    base = p * page_size
+
+    # grid-level skip: page entirely past the slot's valid tokens
+    @pl.when(base < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # [G, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)            # [ps, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)            # [ps, hd]
+        sc = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [G, ps]
+        tok = base + jax.lax.broadcasted_iota(
+            jnp.int32, sc.shape, 1)                       # in-page positions
+        sc = jnp.where(tok < length, sc, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        pr = jnp.exp(sc - m_new)                          # [G, ps]
+        l_scr[...] = l_prev * corr + jnp.sum(pr, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(p == n_table - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pages, v_pages, page_table, lengths, *,
+                           interpret: bool = False):
+    """q: [slots, KV, G, hd]; k/v_pages: [P, ps, KV, hd];
+    page_table: [slots, n_table] int32; lengths: [slots] int32.
+
+    Returns [slots, KV, G, hd] in q.dtype.
+    """
+    slots, KV, G, hd = q.shape
+    _, ps, _, _ = k_pages.shape
+    n_table = page_table.shape[1]
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_paged_kernel, scale=scale, page_size=ps,
+                               n_table=n_table)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(slots, KV, n_table),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda s, h, p, pt, ln: (s, h, 0, 0)),
+            # physical page chosen by the prefetched table — the paged gather
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda s, h, p, pt, ln: (pt[s, p], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda s, h, p, pt, ln: (pt[s, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda s, h, p, pt, ln: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # m
+            pltpu.VMEM((G, 1), jnp.float32),    # l
+            pltpu.VMEM((G, hd), jnp.float32),   # acc
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, KV, G, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

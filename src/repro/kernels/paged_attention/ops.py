@@ -1,0 +1,32 @@
+"""jit'd public wrapper: paged-attention decode in the serving pool's layout.
+
+Dispatch mirrors ``flash_attention``: the traced jnp path (ref semantics,
+gather-all) is the portable default the serving engine runs everywhere; the
+Pallas kernel (``use_kernel=True``) is the TPU fast path whose HBM traffic
+scales with pages actually held.  Both share the head convention of
+``repro.models.attention`` (H reshaped to (KV, G))."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    use_kernel: bool = False, interpret: bool = False):
+    """q: [slots, H, hd]; k/v_pages: [P, ps, KV, hd]; page_table:
+    [slots, n_table] int32 (pad with 0, the trash page); lengths: [slots]
+    int32 (valid tokens per slot).  Returns [slots, H, hd] in q.dtype."""
+    slots, H, hd = q.shape
+    KV = k_pages.shape[2]
+    if not use_kernel:
+        return paged_attention_ref(q, k_pages, v_pages, page_table, lengths)
+    G = H // KV
+    out = paged_attention_kernel(q.reshape(slots, KV, G, hd), k_pages,
+                                 v_pages, page_table, lengths,
+                                 interpret=interpret)
+    return out.reshape(slots, H, hd)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the paged-attention decode kernel.
+
+Layouts (the serving pool's native shapes):
+  * ``q``           [slots, H, hd]        — one query token per decode slot
+  * ``k/v_pages``   [P, ps, KV, hd]       — global page pool (P pages of ps
+                                            tokens; page 0 is the reserved
+                                            trash page, never allocated)
+  * ``page_table``  [slots, n] int32      — per-slot page ids; entries past a
+                                            slot's held pages point at page 0
+  * ``lengths``     [slots] int32         — tokens valid per slot; token t of
+                                            slot s lives at page
+                                            ``page_table[s, t // ps]``,
+                                            offset ``t % ps``
+
+GQA head convention matches ``repro.models.attention``: head h = kv-head
+``h // G`` (reshape H -> (KV, G)).  Materializes the fully gathered
+[slots, n*ps] score matrix — correctness only; the Pallas kernel only ever
+touches pages a slot actually holds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Returns [slots, H, hd] in q.dtype."""
+    S, H, hd = q.shape
+    _, ps, KV, _ = k_pages.shape
+    n = page_table.shape[1]
+    G = H // KV
+    scale = hd ** -0.5
+    k = k_pages[page_table].reshape(S, n * ps, KV, hd)     # gather-all
+    v = v_pages[page_table].reshape(S, n * ps, KV, hd)
+    q_ = q.reshape(S, KV, G, hd)
+    s = jnp.einsum("skgh,stkh->skgt", q_.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(n * ps)[None, :] < lengths[:, None]  # [S, n*ps]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("skgt,stkh->skgh", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(S, H, hd).astype(q.dtype)

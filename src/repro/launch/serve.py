@@ -7,7 +7,11 @@
 Requests enter an admission queue and are prefilled into KV-cache *slots*
 individually (per-slot insertion/eviction — no batch re-prefill); decode
 runs over the fixed slot pool so XLA compiles the batched step exactly
-once.  Prompt lengths are jittered to exercise ragged continuous batching.
+once.  For the attention (lm) family KV memory is page-granular
+(``--kv-layout``/``--page-size``): pages allocate lazily with sequence
+length and free on eviction, so cache bytes track live tokens rather than
+``batch x max_seq_len``.  Prompt lengths are jittered to exercise ragged
+continuous batching.
 Pass ``--mesh DxM`` (e.g. ``2x1``) to serve data-parallel over slots and
 tensor-parallel within decode on a device mesh — selected by config, no
 code changes, per the paper's transparency principle.
@@ -33,6 +37,15 @@ def main():
     ap.add_argument("--policy", choices=("fcfs", "priority"), default="fcfs")
     ap.add_argument("--prefill-chunk", type=int, default=2)
     ap.add_argument("--decode-steps", type=int, default=4)
+    ap.add_argument("--kv-layout", choices=("auto", "paged", "slotted"),
+                    default="auto",
+                    help="KV-cache layout: page-granular (attention lm "
+                         "family) vs slot-granular preallocation")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="shared page pool size; 0 = worst case, less "
+                         "oversubscribes (engine preempts on pressure)")
     ap.add_argument("--mesh", default="",
                     help="DATAxMODEL device mesh, e.g. 2x1 (default: none)")
     ap.add_argument("--devices", type=int, default=0,
@@ -68,7 +81,9 @@ def main():
         max_batch=args.batch, max_queue=args.max_queue,
         max_seq_len=args.prompt_len + args.max_new,
         max_new_tokens=args.max_new, policy=args.policy,
-        prefill_chunk=args.prefill_chunk, decode_steps=args.decode_steps)
+        prefill_chunk=args.prefill_chunk, decode_steps=args.decode_steps,
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        num_pages=args.num_pages)
     mesh_cfg = None
     if mesh_shape is not None:
         mesh_cfg = MeshConfig(shape=mesh_shape, axis_names=("data", "model"))
@@ -99,6 +114,9 @@ def main():
               f"p99 {s['itl_p99_s']*1e3:8.1f} ms")
         print(f"  queue  max {s['queue_depth_max']}  "
               f"preemptions {s['preemptions']}  rejected {s['rejected']}")
+        layout = "paged" if engine.paged else "slotted"
+        print(f"  kv     {layout}  peak {s['kv_bytes_peak']/1e6:.2f} MB  "
+              f"(slotted pool would pin {s['kv_bytes_slotted']/1e6:.2f} MB)")
         for i, toks in enumerate(outs):
             print(f"  req {i}: {toks[:8]}{'...' if len(toks) > 8 else ''}")
 

@@ -75,6 +75,31 @@ def _split_heads(x, n, hd):
     return x.reshape(*x.shape[:-1], n, hd)
 
 
+def _project_qkv_rope(cfg, p, x, positions):
+    """Shared GQA front half: q/k/v projections (+bias), head split, rope.
+
+    x [B,S,D] -> q [B,S,H,hd], k/v [B,S,KV,hd] — used by both the slotted
+    (``attention_apply``) and paged (``paged_attention_apply``) paths so
+    projection changes can never diverge them.
+    """
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    cd = x.dtype
+    q = dot(x, p["wq"], cd)
+    k = dot(x, p["wk"], cd)
+    v = dot(x, p["wv"], cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = _split_heads(q, H, hd)
+    k = _split_heads(k, KV, hd)
+    v = _split_heads(v, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
 def _gqa_scores(q, k, scale):
     """q: [B,qb,KV,G,hd]  k: [B,kb,KV,hd]  ->  [B,KV,G,qb,kb] (fp32)."""
     return jnp.einsum(
@@ -270,6 +295,53 @@ def decode_attend(q, cache, *, window: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# Decode: paged KV cache (global page pool shared by all slots)
+# ---------------------------------------------------------------------------
+
+def paged_cache_update(kv, k_new, v_new, page_table, pos):
+    """Write one decode step's K/V into the shared page pool.
+
+    kv: {"k","v"}: [P, ps, KV, hd] (one layer's pages); k_new/v_new
+    [slots, 1, KV, hd]; page_table [slots, n] int32; pos [slots] int32 —
+    token t of slot s lands in page ``page_table[s, t // ps]`` at offset
+    ``t % ps``.  Slots without a request carry an all-trash table (page 0),
+    so their writes clobber only the reserved trash page.
+    """
+    ps = kv["k"].shape[1]
+    page = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    off = pos % ps
+    return {
+        "k": kv["k"].at[page, off].set(k_new[:, 0].astype(kv["k"].dtype)),
+        "v": kv["v"].at[page, off].set(v_new[:, 0].astype(kv["v"].dtype)),
+    }
+
+
+def paged_attention_apply(cfg, p, x, positions, kv, page_table, lengths, *,
+                          use_pallas: bool = False):
+    """One batched decode step of GQA self-attention over a paged pool.
+
+    x [slots, 1, D]; positions [slots, 1] (= lengths[:, None]); kv one
+    layer's pages.  Unlike ``attention_apply`` (vmapped per slot over a
+    private ring cache), this runs the whole slot batch against the shared
+    pool — full attention only (the contiguous page layout has no ring
+    wrap-around).  Returns (out [slots, 1, D], new_kv).
+    """
+    from repro.kernels.paged_attention import ops as pa_ops
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    cd = x.dtype
+
+    q, k, v = _project_qkv_rope(cfg, p, x, positions)
+    new_kv = paged_cache_update(kv, k, v, page_table, lengths)
+    out = pa_ops.paged_attention(q[:, 0], new_kv["k"], new_kv["v"],
+                                 page_table, lengths + 1,
+                                 use_kernel=use_pallas)
+    out = out[:, None].reshape(B, S, H * hd)
+    return dot(out, p["wo"], cd), new_kv
+
+
+# ---------------------------------------------------------------------------
 # Full GQA block apply (projections + rope + core/window/decode dispatch)
 # ---------------------------------------------------------------------------
 
@@ -280,21 +352,10 @@ def attention_apply(cfg, p, x, positions, *, cache=None, use_pallas: bool = Fals
     """
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
-    H, KV = cfg.num_heads, cfg.num_kv_heads
+    H = cfg.num_heads
     cd = x.dtype
 
-    q = dot(x, p["wq"], cd)
-    k = dot(x, p["wk"], cd)
-    v = dot(x, p["wv"], cd)
-    if cfg.qkv_bias:
-        q = q + p["bq"].astype(cd)
-        k = k + p["bk"].astype(cd)
-        v = v + p["bv"].astype(cd)
-    q = _split_heads(q, H, hd)
-    k = _split_heads(k, KV, hd)
-    v = _split_heads(v, KV, hd)
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = _project_qkv_rope(cfg, p, x, positions)
 
     window = cfg.window if cfg.attn_kind in ("swa", "local") else 0
     if cache is None:

@@ -46,6 +46,20 @@ class ModelBundle:
     # None for families the engine does not serve yet (encdec / vlm frontends
     # need per-request modality inputs).
     serve_prefill_fn: Optional[Callable] = None
+    # Paged decode contract (attention family only).  Signature:
+    #     paged_decode_fn(params, tokens, state, *, use_pallas=False)
+    #         -> (logits [slots, V], pages)
+    # (use_pallas selects the Pallas paged-attention kernel; the engine
+    # passes it per-backend — TPU kernel, CPU traced ref.)
+    # with state = {"pages": {"k","v"}: [L, P, ps, KV, hd], "page_table":
+    # [slots, n] int32, "pos": [slots] int32}.  The engine builds the page
+    # pool from ``init_decode_state(1, page_size)`` (k/v leaves = one page)
+    # and prefills with ``cache_len`` rounded up to a page multiple, so the
+    # contiguous prefill cache scatters page-by-page into the pool.  None for
+    # recurrent families (RG-LRU conv/hidden and RWKV wkv state are O(1) per
+    # slot — nothing to page) and for MLA / windowed attention (latent or
+    # ring-wrapped caches don't fit the contiguous page layout yet).
+    paged_decode_fn: Optional[Callable] = None
 
     def param_structs(self):
         return common.param_shape_structs(self.specs)
@@ -89,6 +103,8 @@ def _build_lm(cfg: ModelConfig) -> ModelBundle:
         serve_prefill_fn=lambda params, tokens, *, cache_len: transformer.lm_prefill(
             cfg, params, tokens,
             cache_len=transformer.decode_cache_len(cfg, cache_len)),
+        paged_decode_fn=(functools.partial(transformer.lm_paged_decode, cfg)
+                         if cfg.attn_kind == "full" else None),
     )
 
 

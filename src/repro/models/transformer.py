@@ -264,6 +264,58 @@ def lm_decode(cfg, params, tokens, caches):
     return logits[:, 0], new_caches
 
 
+def paged_decoder_layer_apply(cfg, p, x, positions, kv, page_table, lengths,
+                              use_pallas=False):
+    """Decode-step layer over a shared paged KV pool.  Returns (x, new_kv)."""
+    h = apply_norm(cfg, p["ln1"], x)
+    a, new_kv = attn.paged_attention_apply(cfg, p["attn"], h, positions, kv,
+                                           page_table, lengths,
+                                           use_pallas=use_pallas)
+    x = x + a
+    h = apply_norm(cfg, p["ln2"], x)
+    if cfg.moe is not None:
+        f, _ = moe_mod.moe_apply(cfg, p["ff"], h)
+    else:
+        f = mlp_mod.mlp_apply(cfg, p["ff"], h)
+    x = x + f
+    x = maybe_wsc(x, P(None, None, None))
+    return x, new_kv
+
+
+def lm_paged_decode(cfg, params, tokens, state, *, use_pallas: bool = False):
+    """One decode step for *all* serving slots against a paged KV pool.
+
+    Unlike ``lm_decode`` (one private ring cache per sequence, vmapped by
+    the engine), the pool is shared, so the whole slot batch runs as one
+    call.  tokens [slots, 1]; state:
+      * ``pages``      {"k","v"}: [L, P, ps, KV, hd] — global page pool
+      * ``page_table`` [slots, n] int32 — per-slot page ids (0 = trash)
+      * ``pos``        [slots] int32 — tokens already cached per slot
+        (= the position this step's token is written at)
+
+    Returns (logits [slots, V], new_pages).  Requires ``attn_kind ==
+    "full"`` — the contiguous page layout has no ring wrap-around, so
+    sliding-window/local and MLA families stay on the slotted pool.
+    """
+    params = cast_tree(params, cfg.compute_dtype)
+    cd = jnp.dtype(cfg.compute_dtype)
+    lengths = state["pos"]
+    positions = lengths[:, None]
+    x = embed_lookup(cfg, params, tokens, cd)
+
+    def body(x, layer_in):
+        lp, kv = layer_in
+        x, new_kv = paged_decoder_layer_apply(
+            cfg, lp, x, positions, kv, state["page_table"], lengths,
+            use_pallas=use_pallas)
+        return x, new_kv
+
+    x, new_pages = jax.lax.scan(body, x, (params["layers"], state["pages"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params, x)
+    return logits[:, 0], new_pages
+
+
 def decode_cache_len(cfg, seq_len: int) -> int:
     """Ring-buffer length: bounded by the attention window when subquadratic."""
     if cfg.attn_kind in ("swa", "local") and cfg.window:

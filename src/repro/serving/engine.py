@@ -22,6 +22,16 @@ Event loop (one ``step()`` = one cycle):
   4. completion  — finished slots (token budget or EOS) are evicted
                    individually; their neighbours never notice.
 
+KV memory is page-granular for the attention (lm) family (``PagedKVCachePool``
++ the paged-attention kernel family): pages are allocated lazily as each
+request's position crosses page boundaries and freed on eviction, so cache
+bytes held track actual sequence lengths instead of ``max_batch x
+max_seq_len``, and ``num_pages`` may oversubscribe — on page pressure the
+engine preempts the youngest request (resume re-prefills; emitted tokens are
+kept, so greedy output is unchanged).  Recurrent families (RG-LRU / RWKV:
+O(1) state per slot) and MLA / windowed attention fall back to the slotted
+pool; ``ServeConfig.kv_layout`` forces either layout.
+
 Greedy (argmax) decoding — chosen so batched serving is *token-identical*
 to an unbatched sequential decode of each request, the serving analogue of
 the paper's Fig. 7 equivalence claim (tested in tests/test_serving.py).
@@ -45,6 +55,7 @@ from repro.configs.base import MeshConfig, ModelConfig, ServeConfig
 from repro.models import common, registry
 from repro.serving.kvcache import SlotKVCachePool
 from repro.serving.metrics import ServingMetrics
+from repro.serving.paged import PagedKVCachePool
 from repro.serving.scheduler import Request, Scheduler
 
 P = jax.sharding.PartitionSpec
@@ -87,12 +98,30 @@ class ServingEngine:
             params = jax.device_put(params, param_sh)
         self.params = params
 
-        # -- slot pool ------------------------------------------------------
-        self.pool = SlotKVCachePool(
-            self.cfg.max_batch,
-            lambda: self.bundle.init_decode_state(1, self.cfg.max_seq_len),
-            mesh=self.mesh, dp_axes=dp_axes, dp_total=dp_total,
-            model_size=model_size)
+        # -- KV pool: page-granular when the family supports it -------------
+        # (kv_layout="auto": attention lm family pages; recurrent families'
+        # O(1) state and MLA/windowed caches stay slot-granular)
+        self.paged = (self.bundle.paged_decode_fn is not None
+                      and self.cfg.kv_layout != "slotted")
+        if self.cfg.kv_layout == "paged" and not self.paged:
+            raise ValueError(
+                f"{model_cfg.name} ({model_cfg.family}/{model_cfg.attn_kind})"
+                " has no paged decode path; recurrent, MLA, and windowed-"
+                "attention families use the slotted pool (kv_layout='auto')")
+        if self.paged:
+            self.pool = PagedKVCachePool(
+                self.cfg.max_batch, self.cfg.page_size, self.cfg.max_seq_len,
+                lambda: self.bundle.init_decode_state(1, self.cfg.page_size),
+                num_pages=self.cfg.num_pages, mesh=self.mesh,
+                model_size=model_size)
+            self._cache_len = self.pool.padded_len   # page-multiple prefill
+        else:
+            self.pool = SlotKVCachePool(
+                self.cfg.max_batch,
+                lambda: self.bundle.init_decode_state(1, self.cfg.max_seq_len),
+                mesh=self.mesh, dp_axes=dp_axes, dp_total=dp_total,
+                model_size=model_size)
+            self._cache_len = self.cfg.max_seq_len
 
         self.scheduler = Scheduler(self.cfg)
         self.metrics = ServingMetrics(clock)
@@ -107,6 +136,7 @@ class ServingEngine:
                                 static_argnames=("cache_len",))
 
         decode_fn = self.bundle.decode_fn
+        paged_decode_fn = self.bundle.paged_decode_fn
 
         def _decode_step(params, toks, pool_state):
             """toks [slots,1,1] + pool -> (greedy next token [slots], pool)."""
@@ -114,6 +144,19 @@ class ServingEngine:
                 params, toks, pool_state)
             nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
             return nxt, new_state
+
+        # backend-selected like core/allreduce: the Pallas paged-attention
+        # kernel on TPU (HBM traffic ~ pages held), traced ref gather on CPU
+        paged_kernel = jax.default_backend() == "tpu"
+
+        def _decode_step_paged(params, toks, pages, table, pos):
+            """toks [slots,1] against the shared page pool (one batched call
+            — no vmap: all slots gather from the same pages)."""
+            logits, new_pages = paged_decode_fn(
+                params, toks, {"pages": pages, "page_table": table,
+                               "pos": pos}, use_pallas=paged_kernel)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_pages
 
         if self.mesh is not None:
             slots = self.cfg.max_batch
@@ -123,13 +166,24 @@ class ServingEngine:
             def ns(spec):
                 return jax.sharding.NamedSharding(self.mesh, spec)
 
-            self._decode = jax.jit(
-                _decode_step,
-                in_shardings=(param_sh,
-                              ns(P(tok_axis, None, None)),
-                              self.pool.shardings),
-                out_shardings=(ns(P()), self.pool.shardings),
-                donate_argnums=(2,))
+            if self.paged:
+                self._decode = jax.jit(
+                    _decode_step_paged,
+                    in_shardings=(param_sh, ns(P(None, None)),
+                                  self.pool.shardings,
+                                  ns(P(None, None)), ns(P(None))),
+                    out_shardings=(ns(P()), self.pool.shardings),
+                    donate_argnums=(2,))
+            else:
+                self._decode = jax.jit(
+                    _decode_step,
+                    in_shardings=(param_sh,
+                                  ns(P(tok_axis, None, None)),
+                                  self.pool.shardings),
+                    out_shardings=(ns(P()), self.pool.shardings),
+                    donate_argnums=(2,))
+        elif self.paged:
+            self._decode = jax.jit(_decode_step_paged, donate_argnums=(2,))
         else:
             self._decode = jax.jit(_decode_step, donate_argnums=(2,))
 
@@ -174,7 +228,10 @@ class ServingEngine:
     def _emit(self, req: Request, token: int, stream: Optional[StreamFn]):
         first = not req.tokens
         req.tokens.append(token)
-        if first and not req.preempted:
+        if first:
+            # a resumed preemptee keeps its tokens, so ``first`` is only
+            # true on the genuine first emission (even if the request was
+            # bounced at admission before ever running)
             self.metrics.record_first_token(req.rid)
         else:
             self.metrics.record_token(req.rid)
@@ -197,37 +254,100 @@ class ServingEngine:
         prompt = req.resume_prompt()
         toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
         logits, state = self._prefill(self.params, toks,
-                                      cache_len=self.cfg.max_seq_len)
+                                      cache_len=self._cache_len)
         self.metrics.record_prefill(len(prompt))
-        slot = self.pool.insert(req.rid, state)
-        assert slot is not None, "admission with no free slot"
+        if self.paged:
+            slot = self.pool.insert(req.rid, state, n_tokens=len(prompt))
+        else:
+            slot = self.pool.insert(req.rid, state)
+        if slot is None:
+            raise RuntimeError("admission with no free slot")
         token = int(jnp.argmax(logits[0]))
         self._last_tokens[slot] = token
         if self._emit(req, token, stream):
             self._complete(slot, req)
 
+    def _preempt(self, slot: int):
+        """Evict a running request and put it back at the queue head; its
+        emitted tokens fold into the resume prompt (greedy decode, so the
+        eventual output is unchanged)."""
+        victim = self.requests[self.pool.owner[slot]]
+        self.pool.evict(slot)
+        self.scheduler.requeue(victim)
+        self.metrics.record_preemption(victim.rid)
+
+    def _grow_pages(self):
+        """Paged pool: lazily allocate the page each slot's next token needs;
+        on page pressure, preempt the lowest-priority, youngest *running*
+        request until the rest fit — even a non-starving victim is evicted,
+        since its freed pages rebalance to the earlier arrivals.  Recency is
+        judged by rid (monotone submission order): ``arrival_seq`` goes
+        negative on requeue, so it cannot rank original arrivals."""
+        while True:
+            starved = self.pool.ensure_decode_capacity()
+            if not starved:
+                return
+            self._preempt(max(
+                self.pool.active_slots,
+                key=lambda s: (-self.requests[self.pool.owner[s]].priority,
+                               self.pool.owner[s])))
+
     def step(self, stream: Optional[StreamFn] = None) -> bool:
         """One engine cycle; returns True while work remains."""
         cfg = self.cfg
-        # 1. preemption (priority policy only)
-        if (cfg.policy == "priority" and self.pool.free_slots == 0
-                and self.scheduler.depth()):
-            running = {s: self.requests[r] for s, r in self.pool.owner.items()}
-            for slot, victim in self.scheduler.preemption(running):
-                self.pool.evict(slot)
-                self.scheduler.requeue(victim)
-                self.metrics.record_preemption()
+        # 1. preemption (priority policy only): fires when admission is
+        # blocked — no free slot, or (paged) too few free pages for the
+        # most urgent waiter's prompt
+        if cfg.policy == "priority" and self.scheduler.depth():
+            head = self.scheduler.peek()
+            blocked = (self.pool.free_slots == 0
+                       or (self.paged and not self.pool.can_admit(
+                           len(head.resume_prompt()))))
+            if blocked:
+                running = {s: self.requests[r]
+                           for s, r in self.pool.owner.items()}
+                for slot, _ in self.scheduler.preemption(running):
+                    self._preempt(slot)
         # 2. admission: prefill into free slots, per-slot insertion
-        for req in self.scheduler.next_prefills(self.pool.free_slots):
+        pending = self.scheduler.next_prefills(self.pool.free_slots)
+        for i, req in enumerate(pending):
+            if (self.paged
+                    and not self.pool.can_admit(len(req.resume_prompt()))):
+                # slot free but pages aren't: wait for running work to
+                # finish rather than burn a prefill that cannot be placed.
+                # EVERY not-yet-admitted popped request goes back (reversed,
+                # so the head of the line ends up most negative = first) —
+                # head-of-line blocking, never a silent drop.
+                for r in reversed(pending[i:]):
+                    self.scheduler.push_front(r)
+                break
             self._admit(req, stream)
         self.metrics.sample_queue_depth(self.scheduler.depth())
+        self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
+                                     self.pool.kv_bytes_slotted())
         # 3. batched decode over the fixed pool
         for _ in range(cfg.decode_steps):
             if not self.pool.owner:
                 break
-            toks = jnp.asarray(self._last_tokens.reshape(-1, 1, 1))
-            nxt, self.pool.state = self._decode(self.params, toks,
-                                                self.pool.state)
+            if self.paged:
+                self._grow_pages()
+                if not self.pool.owner:
+                    break
+                # held pages peak right after growth (completion evictions
+                # come later in this iteration) — sample here so the
+                # kv_bytes_peak metric sees the true high-water mark
+                self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
+                                             self.pool.kv_bytes_slotted())
+                table, pos = self.pool.decode_view()
+                toks = jnp.asarray(self._last_tokens[:, None])
+                nxt, self.pool.pages = self._decode(self.params, toks,
+                                                    self.pool.pages, table,
+                                                    pos)
+                self.pool.advance()
+            else:
+                toks = jnp.asarray(self._last_tokens.reshape(-1, 1, 1))
+                nxt, self.pool.state = self._decode(self.params, toks,
+                                                    self.pool.state)
             nxt = np.asarray(nxt)
             self._last_tokens = nxt.copy()
             # 4. completion swap-out
@@ -261,7 +381,8 @@ class ServingEngine:
             while self.scheduler.depth() >= self.cfg.max_queue:
                 self.step(stream)
             rid = self.submit(p, max_new_tokens)
-            assert rid is not None, "queue admitted past max_queue"
+            if rid is None:
+                raise RuntimeError("queue admitted past max_queue")
             rids.append(rid)
         out = self.run(stream)
         return [out[r] for r in rids]

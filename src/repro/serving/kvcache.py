@@ -170,3 +170,29 @@ class SlotKVCachePool:
 
     def read(self, slot: int):
         return self._read(self.state, jnp.asarray(slot, jnp.int32))
+
+    # -- telemetry (parity with PagedKVCachePool) --------------------------
+
+    def kv_bytes_held(self) -> int:
+        """Slot-granular pools hold their full preallocation for the whole
+        process lifetime — that constant is exactly what paging lifts.
+        Counts cache payload only (pos/index bookkeeping excluded) so the
+        number is directly comparable to the paged pool's page bytes."""
+        total = 0
+
+        def add(path, leaf):
+            nonlocal total
+            name = None
+            for p in reversed(path):
+                if isinstance(p, jax.tree_util.DictKey):
+                    name = p.key
+                    break
+            if name not in ("pos", "index"):
+                total += leaf.nbytes
+            return leaf
+
+        jax.tree_util.tree_map_with_path(add, self.state)
+        return total
+
+    def kv_bytes_slotted(self) -> int:
+        return self.kv_bytes_held()

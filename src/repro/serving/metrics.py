@@ -10,17 +10,24 @@ is injectable so tests can drive deterministic timelines.
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Callable, Dict, List, Optional
 
 
 def percentile(xs: List[float], p: float) -> float:
-    """Nearest-rank percentile without numpy (metrics must stay import-light)."""
+    """Nearest-rank percentile without numpy (metrics must stay import-light).
+
+    Standard ceil-based nearest rank: the smallest value with at least
+    ``p%`` of the sample at or below it.  (An earlier version rounded the
+    rank with Python's banker's rounding — ``round(0.5) == 0`` — biasing
+    p50/p99 low on small samples.)
+    """
     if not xs:
         return 0.0
     s = sorted(xs)
-    k = max(0, min(len(s) - 1, int(round((p / 100.0) * (len(s) - 1)))))
-    return s[k]
+    k = max(math.ceil((p / 100.0) * len(s)), 1) - 1
+    return s[min(k, len(s) - 1)]
 
 
 class ServingMetrics:
@@ -41,6 +48,8 @@ class ServingMetrics:
         self.ttft: List[float] = []
         self.itl: List[float] = []                 # inter-token latencies
         self.queue_depth: List[int] = []           # sampled once per cycle
+        self.kv_bytes: List[int] = []              # sampled once per cycle
+        self.kv_bytes_slotted = 0                  # slot-pool equivalent
         self.preemptions = 0
         self.rejected = 0
         self.completed = 0
@@ -89,11 +98,25 @@ class ServingMetrics:
         self._submit_t.pop(rid, None)
         self._last_token_t.pop(rid, None)
 
-    def record_preemption(self) -> None:
+    def record_preemption(self, rid: Optional[int] = None) -> None:
+        """A running request was evicted.  Dropping its last-token timestamp
+        keeps eviction + re-queue + re-prefill time *out* of inter-token
+        latency: the first token after resume sets a fresh baseline instead
+        of recording the whole preemption gap as one giant ITL sample."""
         self.preemptions += 1
+        if rid is not None:
+            self._last_token_t.pop(rid, None)
 
     def sample_queue_depth(self, depth: int) -> None:
         self.queue_depth.append(depth)
+
+    def sample_kv_bytes(self, held: int, slotted_equiv: int) -> None:
+        """KV bytes currently held by the pool vs what a slot-granular pool
+        would statically preallocate.  Sampled once per admission cycle and
+        (paged) after each decode-step page growth, so the peak is the true
+        high-water mark, not the per-cycle snapshot."""
+        self.kv_bytes.append(held)
+        self.kv_bytes_slotted = slotted_equiv
 
     # -- export ------------------------------------------------------------
 
@@ -120,4 +143,8 @@ class ServingMetrics:
                                  if self.queue_depth else 0.0),
             "preemptions": self.preemptions,
             "rejected": self.rejected,
+            "kv_bytes_peak": max(self.kv_bytes, default=0),
+            "kv_bytes_mean": (sum(self.kv_bytes) / len(self.kv_bytes)
+                              if self.kv_bytes else 0.0),
+            "kv_bytes_slotted": self.kv_bytes_slotted,
         }

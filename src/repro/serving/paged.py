@@ -1,0 +1,241 @@
+"""Page-granular KV-cache pool (vLLM-style) for continuous-batching decode.
+
+Where ``SlotKVCachePool`` preallocates ``max_seq_len`` of K/V per slot —
+cache memory set by the worst-case sequence — this pool owns one *global*
+page pool per layer (``[L, P, page_size, KV, hd]``), a free-page allocator,
+and a per-slot page table.  Pages are allocated lazily as a request's
+position crosses page boundaries and returned on eviction, so the bytes
+*held* track the tokens actually cached, and ``num_pages`` can provision
+less than ``max_batch x max_seq_len`` (oversubscription; the engine
+preempts on page pressure).
+
+Page 0 is a reserved **trash page**: never allocated, it absorbs the
+writes of slots without a request (their page tables are all-zero) and of
+insert padding, so the batched decode keeps its fixed shape without
+masking any scatter.
+
+Device state is three pieces, all fixed-shape (decode compiles once):
+  * ``pages``   {"k","v"}: [L, P, ps, KV, hd]  — donated through decode
+  * page table  [slots, pages_per_slot] int32  — host-owned (numpy),
+    re-uploaded per decode step (tiny; allocation is host-side bookkeeping)
+  * ``pos``     [slots] int32                  — tokens cached per slot
+
+Token *t* of a slot lives at page ``table[slot, t // ps]``, offset
+``t % ps`` — contiguous, no ring wrap-around, which is why only
+``attn_kind == "full"`` families page (see registry.paged_decode_fn).
+
+Eviction hygiene: freed pages go back to the allocator without device-side
+blanking — a page is only reachable through a table that points at it, the
+next tenant's insert overwrites every slot it reads (the in-page tail past
+``pos`` is masked by length), so stale K/V can never influence another
+request.  The aliasing property (no page in two tables) is tested.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+P_ = jax.sharding.PartitionSpec
+
+
+def paged_pspecs(pool_structs, *, model_size: int = 1):
+    """PartitionSpec tree for the page pool [L, P, ps, KV, hd]: KV-head dim
+    -> "model" when divisible (else head_dim); pages replicate — any slot's
+    pages live anywhere, so there is no data-axis to shard them over."""
+
+    def rule(leaf):
+        spec = [None] * leaf.ndim
+        if model_size > 1 and leaf.ndim == 5:
+            if leaf.shape[3] % model_size == 0:
+                spec[3] = "model"
+            elif leaf.shape[4] % model_size == 0:
+                spec[4] = "model"
+        return P_(*spec)
+
+    return jax.tree.map(rule, pool_structs)
+
+
+class PagedKVCachePool:
+    """Global page pool + free-page allocator + per-slot page tables.
+
+    ``blank_page_fn()`` must return ``ModelBundle.init_decode_state(1,
+    page_size)`` — its "k"/"v" leaves ([L, 1, ps, KV, hd]) are the
+    one-page template the pool tiles ``num_pages`` times.  Prefill states
+    handed to ``insert`` must be sized ``cache_len == padded_len``
+    (``pages_per_slot * page_size``) so they scatter page-by-page.
+    """
+
+    def __init__(self, num_slots: int, page_size: int, max_seq_len: int,
+                 blank_page_fn, *, num_pages: int = 0, mesh=None,
+                 model_size: int = 1):
+        assert num_slots >= 1 and page_size >= 1
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.max_seq_len = max_seq_len
+        self.pages_per_slot = -(-max_seq_len // page_size)
+        self.padded_len = self.pages_per_slot * page_size
+        worst = num_slots * self.pages_per_slot + 1          # +1 trash page
+        self.num_pages = num_pages or worst
+        if self.num_pages < self.pages_per_slot + 1:
+            raise ValueError(
+                f"num_pages={self.num_pages} cannot hold one request "
+                f"(pages_per_slot={self.pages_per_slot} + trash page)")
+        self.mesh = mesh
+
+        blank = blank_page_fn()
+        if not all(k in blank for k in ("k", "v")):
+            raise ValueError("paged pool needs a k/v attention cache; "
+                             "got leaves " + str(sorted(blank)))
+        one = {"k": blank["k"], "v": blank["v"]}             # [L,1,ps,KV,hd]
+        P = self.num_pages
+
+        def grow(x):
+            return jnp.broadcast_to(
+                x[:, 0][:, None], (x.shape[0], P) + x.shape[2:]).copy()
+
+        if mesh is not None:
+            structs = jax.eval_shape(lambda t: jax.tree.map(grow, t), one)
+            self.pspecs = paged_pspecs(structs, model_size=model_size)
+            self.shardings = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), self.pspecs)
+            out_sh = {"out_shardings": self.shardings}
+        else:
+            self.pspecs = None
+            self.shardings = None
+            out_sh = {}
+
+        def _insert(pages, one_state, ids):
+            """Scatter a contiguous prefill cache into pages ``ids``.
+
+            one_state k/v: [L, 1, padded_len, KV, hd]; ids
+            [pages_per_slot] int32 — entries past the prompt's pages point
+            at the trash page and receive the (blank) tail chunks.
+            """
+            def put(pool, x):
+                xr = x[:, 0].reshape((x.shape[0], self.pages_per_slot,
+                                      page_size) + x.shape[3:])
+                return pool.at[:, ids].set(xr.astype(pool.dtype))
+            return {"k": put(pages["k"], one_state["k"]),
+                    "v": put(pages["v"], one_state["v"])}
+
+        self._insert = jax.jit(_insert, donate_argnums=(0,), **out_sh)
+        self.pages = jax.jit(lambda t: jax.tree.map(grow, t), **out_sh)(one)
+
+        # bytes of one page across layers and k+v (for telemetry)
+        self.page_bytes = sum(
+            leaf.nbytes // P for leaf in jax.tree.leaves(self.pages))
+
+        # -- host bookkeeping ---------------------------------------------
+        self._free_slots: List[int] = list(range(num_slots))
+        self._free_pages: List[int] = list(range(1, P))      # 0 = trash
+        self.owner: Dict[int, int] = {}                      # slot -> rid
+        self.held: Dict[int, List[int]] = {}                 # slot -> pages
+        self.tables = np.zeros((num_slots, self.pages_per_slot), np.int32)
+        self.pos = np.zeros((num_slots,), np.int32)
+        self.pages_allocated = 0                             # lifetime counters
+        self.pages_freed = 0
+        self.peak_pages_held = 0
+
+    # -- host bookkeeping --------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self.owner)
+
+    @property
+    def pages_held(self) -> int:
+        return sum(len(p) for p in self.held.values())
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Is there a slot and enough free pages for an n_tokens prefill?"""
+        need = -(-n_tokens // self.page_size)
+        return bool(self._free_slots) and len(self._free_pages) >= need
+
+    def _take_page(self, slot: int) -> Optional[int]:
+        if not self._free_pages:
+            return None
+        pid = self._free_pages.pop(0)
+        self.held[slot].append(pid)
+        self.tables[slot, len(self.held[slot]) - 1] = pid
+        self.pages_allocated += 1
+        return pid
+
+    # -- engine API --------------------------------------------------------
+
+    def insert(self, rid: int, one_state, n_tokens: int) -> Optional[int]:
+        """Place a prefilled cache (cache_len == padded_len) into a free
+        slot, allocating ceil(n_tokens / page_size) pages.  None when slots
+        or pages are exhausted (caller re-queues the request)."""
+        if not self.can_admit(n_tokens):
+            return None
+        slot = self._free_slots.pop(0)
+        assert slot not in self.owner, f"slot {slot} double-assigned"
+        self.owner[slot] = rid
+        self.held[slot] = []
+        self.tables[slot] = 0
+        for _ in range(-(-n_tokens // self.page_size)):
+            self._take_page(slot)
+        self.pos[slot] = n_tokens
+        one_kv = {"k": one_state["k"], "v": one_state["v"]}
+        self.pages = self._insert(self.pages, one_kv,
+                                  jnp.asarray(self.tables[slot]))
+        self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
+        return slot
+
+    def evict(self, slot: int) -> int:
+        """Free a slot: its pages return to the allocator (no device
+        blanking needed — see module docstring on hygiene)."""
+        rid = self.owner.pop(slot)
+        freed = self.held.pop(slot)
+        self.pages_freed += len(freed)
+        self._free_pages.extend(freed)
+        self._free_pages.sort()
+        self.tables[slot] = 0
+        self.pos[slot] = 0
+        self._free_slots.append(slot)
+        self._free_slots.sort()
+        return rid
+
+    def ensure_decode_capacity(self) -> List[int]:
+        """Lazily allocate so every active slot can write position ``pos``
+        (the next decode token).  Returns the slots that could not be
+        extended — the engine preempts to relieve the pressure."""
+        starved = []
+        for slot in self.active_slots:
+            need = int(self.pos[slot]) // self.page_size + 1
+            while len(self.held[slot]) < need:
+                if self._take_page(slot) is None:
+                    starved.append(slot)
+                    break
+        self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
+        return starved
+
+    def decode_view(self) -> Tuple[jax.Array, jax.Array]:
+        """(page_table, pos) device operands for one decode step."""
+        return jnp.asarray(self.tables), jnp.asarray(self.pos)
+
+    def advance(self) -> None:
+        """One decode step happened: every active slot cached one token."""
+        for slot in self.owner:
+            self.pos[slot] += 1
+
+    # -- telemetry ---------------------------------------------------------
+
+    def kv_bytes_held(self) -> int:
+        return self.pages_held * self.page_bytes
+
+    def kv_bytes_capacity(self) -> int:
+        return (self.num_pages - 1) * self.page_bytes
+
+    def kv_bytes_slotted(self) -> int:
+        """K/V bytes a slot-granular pool would statically preallocate for
+        the same config (max_seq_len tokens per slot, no page padding)."""
+        return self.num_slots * self.max_seq_len * (self.page_bytes
+                                                    // self.page_size)

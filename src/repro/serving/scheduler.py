@@ -63,6 +63,12 @@ class Scheduler:
         self.cfg = cfg
         self.waiting: List[Request] = []
         self._seq = itertools.count()
+        # requeue sequence: monotone *decrementing* so every re-queued
+        # request sorts before fresh arrivals AND no two requeues collide
+        # (the old ``-1 - preempted`` scheme collided two once-preempted
+        # requests at -2 and let a twice-preempted one jump an earlier
+        # once-preempted one)
+        self._requeue_seq = itertools.count(-1, -1)
 
     # -- admission ---------------------------------------------------------
 
@@ -89,6 +95,10 @@ class Scheduler:
     def _sorted_waiting(self) -> List[Request]:
         return sorted(self.waiting, key=self._rank)
 
+    def peek(self) -> Optional[Request]:
+        """Most urgent waiting request without popping it (None if empty)."""
+        return self._sorted_waiting()[0] if self.waiting else None
+
     # -- batching ----------------------------------------------------------
 
     def next_prefills(self, free_slots: int) -> List[Request]:
@@ -104,8 +114,9 @@ class Scheduler:
     def preemption(self, running: Dict[int, Request]) -> List[Tuple[int, Request]]:
         """(slot, victim) pairs to evict for strictly-higher-priority waiters.
 
-        Only meaningful under the ``priority`` policy and only when no free
-        slot exists (the engine calls it after admission).  At most one
+        Only meaningful under the ``priority`` policy and only when
+        admission is blocked — no free slot, or (paged pool) too few free
+        pages for the most urgent waiter.  At most one
         victim per waiting challenger, and never more victims than
         ``prefill_chunk`` — a freed slot the next admission round cannot
         refill would idle while its victim needlessly loses decode progress.
@@ -136,8 +147,18 @@ class Scheduler:
         """Return a preempted request to the queue (front of its rank class).
 
         Preempted requests bypass ``max_queue`` — they were already admitted
-        once; bouncing them would drop accepted work.
+        once; bouncing them would drop accepted work.  Victims of one
+        preemption round arrive here least-urgent-first (``preemption``'s
+        order), so the decrementing counter hands the most urgent victim the
+        most negative seq: within a rank class, re-queued requests resume in
+        their original arrival order.
         """
         req.preempted += 1
-        req.arrival_seq = -1 - req.preempted  # before any fresh arrival
+        self.push_front(req)
+
+    def push_front(self, req: Request) -> None:
+        """Put a popped-but-not-admitted request back at the queue head
+        (no preemption bookkeeping) — e.g. when the paged pool briefly has
+        a slot but not the pages for its prompt."""
+        req.arrival_seq = next(self._requeue_seq)
         self.waiting.append(req)

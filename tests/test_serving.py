@@ -8,6 +8,8 @@ Three layers of guarantees:
     unbatched sequential decode of each request (the serving analogue of
     the paper's Fig. 7 equivalence test), on one device and under a mesh.
 """
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,8 +18,9 @@ import pytest
 from repro.configs import MeshConfig, ServeConfig, get_config
 from repro.configs.base import ShapeConfig
 from repro.models import registry
-from repro.serving import (Request, Scheduler, ServingEngine, ServingMetrics,
-                           SlotKVCachePool)
+from repro.serving import (PagedKVCachePool, Request, Scheduler,
+                           ServingEngine, ServingMetrics, SlotKVCachePool)
+from repro.serving.metrics import percentile
 
 
 def _req(rid, plen=4, max_new=4, priority=0, deadline=None):
@@ -108,6 +111,43 @@ def test_scheduler_requeued_preemptee_goes_first():
     assert victim.resume_prompt() == victim.prompt + (7, 8)
 
 
+def test_scheduler_requeue_counter_no_collision_keeps_order():
+    """Regression: ``arrival_seq = -1 - preempted`` collided two
+    once-preempted requests at -2 (sort ties broke arbitrarily) and let a
+    twice-preempted request leapfrog an earlier once-preempted one."""
+    s = Scheduler(ServeConfig(prefill_chunk=8))
+    a, b = _req(0), _req(1)
+    s.submit(a)
+    s.submit(b)
+    s.next_prefills(free_slots=8)                  # both running
+    # one preemption round evicts least-urgent (latest arrival) first
+    s.requeue(b)
+    s.requeue(a)
+    assert a.arrival_seq != b.arrival_seq          # collided at -2 before
+    s.submit(_req(2))
+    assert [r.rid for r in s.next_prefills(free_slots=8)] == [0, 1, 2]
+    # the counter is strictly monotone across rounds: preemption count no
+    # longer decides rank (the old scheme pinned seq at -1 - preempted, so
+    # a twice-preempted request always outranked every once-preempted one)
+    s.requeue(b)
+    seq1 = b.arrival_seq
+    (popped,) = s.next_prefills(free_slots=1)
+    assert popped is b
+    s.requeue(b)
+    assert b.arrival_seq < seq1
+    assert b.preempted == 3 and b.arrival_seq == -4   # 4th requeue overall
+
+
+def test_scheduler_push_front_skips_preemption_bookkeeping():
+    s = Scheduler(ServeConfig(prefill_chunk=8))
+    s.submit(_req(0))
+    (bounced,) = s.next_prefills(free_slots=1)
+    s.push_front(bounced)                          # popped but not admitted
+    assert bounced.preempted == 0
+    s.submit(_req(1))
+    assert [r.rid for r in s.next_prefills(free_slots=8)] == [0, 1]
+
+
 # ---------------------------------------------------------------------------
 # KV slot pool
 # ---------------------------------------------------------------------------
@@ -152,8 +192,121 @@ def test_pool_insert_evict_roundtrip(dense_setup):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV pool
+# ---------------------------------------------------------------------------
+
+def test_paged_pool_allocator_properties(dense_setup):
+    """Pages freed == pages allocated, no page aliasing across slots, the
+    trash page is never handed out, and pages grow lazily with ``pos``."""
+    cfg, bundle, params = dense_setup
+    pool = PagedKVCachePool(3, 8, 32, lambda: bundle.init_decode_state(1, 8))
+    assert pool.padded_len == 32 and pool.num_pages == 3 * 4 + 1
+    prefill = jax.jit(bundle.serve_prefill_fn, static_argnames=("cache_len",))
+
+    def admit(rid, plen):
+        toks = jnp.asarray(np.arange(1, plen + 1, dtype=np.int32)[None])
+        _, st = prefill(params, toks, cache_len=pool.padded_len)
+        return pool.insert(rid, st, n_tokens=plen)
+
+    s0 = admit(0, 5)                        # 1 page
+    s1 = admit(1, 17)                       # 3 pages
+    assert len(pool.held[s0]) == 1 and len(pool.held[s1]) == 3
+    assert 0 not in pool.held[s0] + pool.held[s1]          # trash reserved
+    assert not set(pool.held[s0]) & set(pool.held[s1])     # no aliasing
+    assert pool.kv_bytes_held() == 4 * pool.page_bytes
+    assert pool.kv_bytes_held() < pool.kv_bytes_slotted()
+    # lazy growth: slot 0 needs a second page only once pos crosses 8
+    for expect_pages in (1, 1, 1, 2):
+        assert pool.ensure_decode_capacity() == []
+        assert len(pool.held[s0]) == expect_pages
+        pool.advance()
+    assert int(pool.pos[s0]) == 9
+    assert pool.pages_allocated == 1 + 3 + 1
+    # eviction returns every page and zeroes the host view
+    pool.evict(s0)
+    pool.evict(s1)
+    assert pool.pages_held == 0
+    assert pool.pages_freed == pool.pages_allocated == 5
+    assert (pool.tables == 0).all() and (pool.pos == 0).all()
+    assert pool.free_slots == 3
+
+
+def test_paged_pool_exhaustion_reports_starved(dense_setup):
+    cfg, bundle, params = dense_setup
+    # 3 usable pages (+ trash) for two slots of up to 2 pages each
+    pool = PagedKVCachePool(2, 8, 16, lambda: bundle.init_decode_state(1, 8),
+                            num_pages=4)
+    prefill = jax.jit(bundle.serve_prefill_fn, static_argnames=("cache_len",))
+    toks = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    _, st = prefill(params, toks, cache_len=pool.padded_len)
+    assert pool.insert(0, st, n_tokens=8) is not None   # 1 page each
+    assert pool.insert(1, st, n_tokens=8) is not None
+    assert pool.can_admit(8) is False       # 1 page left, no slot anyway
+    # both slots sit on a page boundary (pos == 8): each wants a 2nd page,
+    # but only one page remains — slot 1 starves
+    starved = pool.ensure_decode_capacity()
+    assert starved == [1] and len(pool.held[0]) == 2
+    pool.evict(0)                           # freeing one unblocks the other
+    assert pool.ensure_decode_capacity() == []
+    assert len(pool.held[1]) == 2
+
+
+def test_paged_pool_rejects_undersized(dense_setup):
+    cfg, bundle, _ = dense_setup
+    with pytest.raises(ValueError, match="cannot hold one request"):
+        PagedKVCachePool(2, 8, 32, lambda: bundle.init_decode_state(1, 8),
+                         num_pages=3)
+
+
+def test_serve_config_validates_paged_knobs():
+    with pytest.raises(AssertionError):
+        ServeConfig(kv_layout="ragged").validate()
+    with pytest.raises(AssertionError):
+        ServeConfig(page_size=0).validate()
+    with pytest.raises(AssertionError):
+        ServeConfig(max_seq_len=64, page_size=8, num_pages=4).validate()
+    ServeConfig(max_seq_len=64, page_size=8, num_pages=9).validate()
+    ServeConfig().validate()
+
+
+# ---------------------------------------------------------------------------
 # Metrics
 # ---------------------------------------------------------------------------
+
+def test_metrics_preemption_clears_itl_baseline():
+    """Regression: the victim's last-token timestamp survived eviction, so
+    its first token after re-prefill recorded eviction + queueing time as
+    one giant inter-token latency sample."""
+    t = [0.0]
+    m = ServingMetrics(clock=lambda: t[0])
+    m.record_submit(0)
+    t[0] = 1.0
+    m.record_first_token(0)
+    t[0] = 1.5
+    m.record_token(0)                       # ITL 0.5
+    m.record_preemption(0)                  # evicted: baseline dropped
+    t[0] = 9.0
+    m.record_token(0)                       # resume: NO 7.5s sample
+    t[0] = 9.5
+    m.record_token(0)                       # ITL 0.5
+    assert m.preemptions == 1
+    assert m.itl == [0.5, 0.5]
+    # the argless variant still counts (no rid to clear)
+    m.record_preemption()
+    assert m.preemptions == 2
+
+
+def test_percentile_ceil_nearest_rank():
+    """Regression: ``round(0.5) == 0`` (banker's rounding) biased the
+    nearest-rank percentile low/high on small samples."""
+    assert percentile([1, 2, 3, 4], 50) == 2    # banker's rank gave 3
+    assert percentile([1, 2], 50) == 1
+    assert percentile([1, 2, 3], 50) == 2
+    assert percentile(list(range(1, 101)), 99) == 99
+    assert percentile(list(range(1, 101)), 100) == 100
+    assert percentile([7], 99) == 7
+    assert percentile([], 50) == 0.0
+
 
 def test_metrics_deterministic_clock():
     t = [0.0]
@@ -212,10 +365,11 @@ def test_engine_matches_sequential_decode_families(arch):
         assert got == _sequential_decode(cfg, params, p, 4, scfg.max_seq_len)
 
 
-def test_engine_mesh_matches_single_device(dense_setup):
+@pytest.mark.parametrize("layout", ["paged", "slotted"])
+def test_engine_mesh_matches_single_device(dense_setup, layout):
     cfg, _, params = dense_setup
     scfg = ServeConfig(max_batch=4, max_seq_len=40, max_new_tokens=4,
-                       decode_steps=2)
+                       decode_steps=2, kv_layout=layout, page_size=8)
     rng = np.random.default_rng(2)
     prompts = _prompts(rng, cfg.vocab_size, [7, 11, 6, 9, 8])
     # conftest forces 8 host devices: 2-way data (slots) x 2-way model (TP)
@@ -224,6 +378,123 @@ def test_engine_mesh_matches_single_device(dense_setup):
                              mesh_cfg=mesh_cfg).generate(prompts, 4)
     out_single = ServingEngine(cfg, scfg, params=params).generate(prompts, 4)
     assert out_mesh == out_single
+
+
+def test_engine_paged_matches_slotted(dense_setup):
+    """Tentpole equivalence: the paged pool + paged decode emits exactly the
+    slotted pool's greedy tokens, while holding KV for the tokens actually
+    cached instead of the full ``max_batch x max_seq_len`` wall."""
+    cfg, _, params = dense_setup
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, cfg.vocab_size, [7, 12, 5, 9])
+    base = ServeConfig(max_batch=2, max_seq_len=40, max_new_tokens=5,
+                       prefill_chunk=2, decode_steps=2, page_size=8)
+    ep = ServingEngine(cfg, base.replace(kv_layout="paged"), params=params)
+    assert ep.paged
+    out_p = ep.generate(prompts, 5)
+    es = ServingEngine(cfg, base.replace(kv_layout="slotted"), params=params)
+    assert not es.paged
+    assert out_p == es.generate(prompts, 5)
+    sp, ss = ep.metrics.summary(), es.metrics.summary()
+    # pages held scale with live tokens; the slotted pool pins its ceiling
+    assert 0 < sp["kv_bytes_peak"] < sp["kv_bytes_slotted"]
+    assert ss["kv_bytes_peak"] == ss["kv_bytes_slotted"]
+    assert ep.pool.pages_allocated == ep.pool.pages_freed
+    assert ep.pool.pages_held == 0
+
+
+def test_engine_paged_page_pressure_preempts_and_recovers(dense_setup):
+    """An under-provisioned page pool (oversubscription) forces preemption
+    on decode-time growth; resumed requests still emit identical tokens."""
+    cfg, _, params = dense_setup
+    rng = np.random.default_rng(11)
+    prompts = _prompts(rng, cfg.vocab_size, [14, 15])
+    scfg = ServeConfig(max_batch=2, max_seq_len=32, max_new_tokens=12,
+                       decode_steps=2, kv_layout="paged", page_size=4,
+                       num_pages=12)       # worst case would need 17
+    eng = ServingEngine(cfg, scfg, params=params)
+    outs = eng.generate(prompts, 12)
+    assert eng.metrics.preemptions >= 1
+    assert eng.metrics.summary()["completed"] == 2
+    for p, got in zip(prompts, outs):
+        assert got == _sequential_decode(cfg, params, p, 12,
+                                         eng.pool.padded_len)
+
+
+def test_engine_paged_admission_bounce_drops_no_request(dense_setup):
+    """Regression: when pages (not slots) gate admission, every popped-but-
+    unplaceable request must return to the queue — a bounced prefill chunk
+    once abandoned its tail requests entirely (neither queued nor pooled)."""
+    cfg, _, params = dense_setup
+    scfg = ServeConfig(max_batch=3, max_seq_len=16, max_new_tokens=5,
+                       prefill_chunk=2, decode_steps=1, kv_layout="paged",
+                       page_size=4, num_pages=5)     # 4 usable pages
+    eng = ServingEngine(cfg, scfg, params=params)
+    rng = np.random.default_rng(13)
+    # r0 takes 3 of 4 pages; the [r1, r2] chunk then bounces on r1
+    prompts = _prompts(rng, cfg.vocab_size, [11, 8, 4])
+    outs = eng.generate(prompts, 5)
+    assert eng.metrics.summary()["completed"] == 3
+    assert len(eng.results) == 3 and not eng.busy
+    for p, got in zip(prompts, outs):
+        assert got == _sequential_decode(cfg, params, p, 5,
+                                         eng.pool.padded_len)
+
+
+def test_engine_paged_priority_preempts_on_page_pressure(dense_setup):
+    """Regression: priority preemption used to require free_slots == 0, so
+    under the paged layout a high-priority waiter blocked on *pages* (slots
+    free) would wait out the low-priority request instead of preempting."""
+    cfg, _, params = dense_setup
+    scfg = ServeConfig(max_batch=2, max_seq_len=16, max_new_tokens=4,
+                       policy="priority", prefill_chunk=1, decode_steps=1,
+                       kv_layout="paged", page_size=4, num_pages=5)
+    eng = ServingEngine(cfg, scfg, params=params)
+    rng = np.random.default_rng(17)
+    low = eng.submit(list(rng.integers(0, cfg.vocab_size, (11,))),
+                     max_new_tokens=4, priority=0)
+    eng.step()                     # low holds 3 of 4 pages; a slot is free
+    assert eng.pool.free_slots == 1
+    high = eng.submit(list(rng.integers(0, cfg.vocab_size, (8,))),
+                      max_new_tokens=4, priority=5)
+    out = eng.run()
+    assert eng.metrics.preemptions >= 1
+    assert eng.requests[low].preempted >= 1
+    assert len(out[high]) == 4 and len(out[low]) == 4
+    assert eng.metrics.summary()["completed"] == 2
+
+
+def test_engine_kv_layout_paged_rejected_for_recurrent():
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    with pytest.raises(ValueError, match="no paged decode"):
+        ServingEngine(cfg, ServeConfig(max_batch=1, max_seq_len=16,
+                                       kv_layout="paged"))
+    # "auto" quietly falls back to the slotted pool
+    eng = ServingEngine(cfg, ServeConfig(max_batch=1, max_seq_len=16))
+    assert not eng.paged
+
+
+def test_engine_preemption_itl_excludes_gap(dense_setup):
+    """End-to-end ITL regression: with a ticking clock, the victim's resume
+    must not record the whole eviction->re-prefill span as one sample."""
+    cfg, _, params = dense_setup
+    scfg = ServeConfig(max_batch=1, max_seq_len=40, max_new_tokens=8,
+                       policy="priority", decode_steps=1, prefill_chunk=1)
+    ticks = itertools.count()
+    eng = ServingEngine(cfg, scfg, params=params,
+                        clock=lambda: float(next(ticks)))
+    rng = np.random.default_rng(3)
+    eng.submit(list(rng.integers(0, cfg.vocab_size, (6,))),
+               max_new_tokens=8, priority=0)
+    eng.step()                                 # low occupies the only slot
+    eng.submit(list(rng.integers(0, cfg.vocab_size, (5,))),
+               max_new_tokens=3, priority=5)
+    eng.run()
+    assert eng.metrics.preemptions >= 1
+    # every now() call ticks once; adjacent same-request tokens are 1-2
+    # ticks apart, while the preemption gap spans the high-priority
+    # request's whole lifetime (>= 5 ticks) — it must not appear in itl
+    assert eng.metrics.itl and max(eng.metrics.itl) <= 3.0
 
 
 def test_engine_priority_preemption_end_to_end(dense_setup):
