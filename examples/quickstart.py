@@ -1,55 +1,40 @@
-"""Quickstart: the paper's Fig. 3 experience in JAX.
+"""Quickstart: the paper's Fig. 3 experience, one Session for everything.
 
-The "user script" below is purely sequential — it loads data, picks a model
-and an optimizer, and calls step().  The MaTEx-JAX runtime makes it data-
-parallel (broadcast init + layer-wise gradient all-reduce) without any
-distribution code appearing here.
+The "user script" below is purely sequential — pick a model, train it, ask
+it for tokens.  ``repro.api`` is the runtime: it injects broadcast init,
+gradient all-reduce, sharded data ingestion (training) and continuous
+batching + KV-cache management (generation).  The ``mesh="4x2"`` string is
+the *entire* distribution configuration: delete it and the identical
+script runs on one device; grow it and the same script runs on a pod.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
-import numpy as np
-
-from repro.configs import get_config
-from repro.configs.base import (MeshConfig, OptimizerConfig, RunConfig,
-                                ShapeConfig)
-from repro.core.transparent import TransparentTrainer
-from repro.data.pipeline import make_input_pipeline
-from repro.data.readers import synthetic_tokens
-from repro.launch.mesh import build_mesh
-from repro.models import registry
+from repro import api
 
 
 def main():
     # ----- user code (sequential, no distribution constructs) --------------
-    cfg = get_config("stablelm-1.6b", smoke=True)     # any of the 10 archs
-    bundle = registry.build(cfg)
-    dataset = synthetic_tokens(cfg.vocab_size, seq_len=32, num_samples=512)
-    optimizer = OptimizerConfig(name="adam", lr=1e-3)
+    session = api.load("stablelm-1.6b", smoke=True, mesh="4x2")
+    print(session)
 
-    # ----- the runtime (what MaTEx patched into TensorFlow) ----------------
-    mesh_cfg = MeshConfig(shape=(4, 2), axis_names=("data", "model"),
-                          allreduce="layerwise")
-    mesh = build_mesh(mesh_cfg)
-    run = RunConfig(model=cfg, shape=ShapeConfig("qs", "train", 32, 16),
-                    mesh=mesh_cfg, optimizer=optimizer)
-    trainer = TransparentTrainer(run, bundle.loss_fn, bundle.specs, mesh=mesh)
-    batches, pf = make_input_pipeline(dataset, global_batch=16, mesh=mesh,
-                                      dp_axes=("data",))
+    result = session.train(steps=30, seq_len=32, global_batch=16,
+                           log_every=5)
+    print(f"trained {result.step} steps: loss {result.losses[0]:.4f} -> "
+          f"{result.loss:.4f}")
 
-    state = trainer.init(seed=0)
-    print(f"devices={len(jax.devices())}  mesh={mesh_cfg.shape} "
-          f"(data x model)  strategy={mesh_cfg.allreduce}")
-    for i, batch in zip(range(30), batches):
-        state, metrics = trainer.step(state, batch)
-        if (i + 1) % 5 == 0:
-            print(f"step {int(metrics['step']):3d}  "
-                  f"loss {float(metrics['loss']):.4f}")
-    pf.close()
-    print("done — the model trained data-parallel; the script stayed serial.")
+    # one-shot generation from the trained weights, same Session
+    tokens = session.generate([3, 1, 4, 1, 5, 9, 2, 6], max_new=12)
+    print(f"generated: {tokens}")
+
+    # a closed batch through the continuous-batching engine
+    outs = session.serve([[1, 2, 3], [4, 5, 6, 7], [8, 9]], max_new=6)
+    for i, toks in enumerate(outs):
+        print(f"  req {i}: {toks}")
+    print("done — trained data-parallel and served continuous-batch; "
+          "the script stayed serial.")
 
 
 if __name__ == "__main__":

@@ -1,25 +1,30 @@
-"""Serving example: the continuous-batching engine via the serve CLI
+"""Serving example: the continuous-batching engine through ``repro.api``
 (admission queue -> per-slot KV insertion -> fixed-shape batched decode ->
 streamed greedy generation; see src/repro/serving/).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
-import os
-import subprocess
-import sys
-from pathlib import Path
+import numpy as np
 
-ROOT = Path(__file__).resolve().parents[1]
+from repro import api
 
 
 def main():
-    cmd = [sys.executable, "-m", "repro.launch.serve",
-           "--arch", "qwen2.5-14b", "--smoke",
-           "--requests", "6", "--batch", "3",
-           "--prompt-len", "12", "--max-new", "8"]
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(ROOT / "src")
-    raise SystemExit(subprocess.run(cmd, env=env).returncode)
+    session = api.load("qwen2.5-14b", smoke=True, require=("serve",))
+    rng = np.random.default_rng(0)
+    vocab = session.model.vocab_size
+    prompts = [list(rng.integers(0, vocab, (int(n),)))
+               for n in rng.integers(6, 13, size=6)]
+
+    outs = session.serve(
+        prompts, max_new=8, max_batch=3,
+        stream=lambda rid, tok, done: print(
+            f"  req {rid} -> {tok}{'  [done]' if done else ''}", flush=True))
+    s = session.engine.metrics.summary()
+    print(f"served {s['completed']}/{len(prompts)} requests, "
+          f"{s['tokens_out']} tokens ({s['tokens_per_sec']:.1f} tok/s)")
+    for i, toks in enumerate(outs):
+        print(f"  req {i}: {toks}")
 
 
 if __name__ == "__main__":

@@ -1,36 +1,29 @@
-"""End-to-end driver example: train a ~100M-param LM for a few hundred steps
-through the full stack (sharded data pipeline, transparent DP, checkpointing,
-straggler monitor) on 8 placeholder devices.
+"""End-to-end training example: a ~100M-param LM through the full stack
+(sharded data pipeline, transparent DP, checkpointing, straggler monitor)
+on 8 placeholder devices — all through ``repro.api``.
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
-
-This wraps the production launcher (repro.launch.train) — the same driver
-that runs full configs on a real pod.
 """
-import subprocess
-import sys
-from pathlib import Path
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-ROOT = Path(__file__).resolve().parents[1]
+import sys
+
+from repro import api
 
 
 def main():
-    steps = "200"
+    steps = 200
     if "--steps" in sys.argv:
-        steps = sys.argv[sys.argv.index("--steps") + 1]
-    # ~100M-param config: stablelm-1.6b geometry shrunk to 12 layers x 768
-    cmd = [sys.executable, "-m", "repro.launch.train",
-           "--arch", "examples-lm-100m", "--steps", steps,
-           "--seq-len", "128", "--global-batch", "16",
-           "--dp", "4", "--tp", "2", "--allreduce", "bucketed",
-           "--ckpt-dir", "/tmp/matexjax_100m", "--ckpt-every", "50",
-           "--devices", "8"]
-    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
-    import os
-    env.update({k: v for k, v in os.environ.items()
-                if k not in ("XLA_FLAGS",)})
-    env["PYTHONPATH"] = str(ROOT / "src")
-    raise SystemExit(subprocess.run(cmd, env=env).returncode)
+        steps = int(sys.argv[sys.argv.index("--steps") + 1])
+    session = api.load("examples-lm-100m", mesh="4x2", allreduce="bucketed")
+    result = session.train(steps=steps, seq_len=128, global_batch=16,
+                           ckpt_dir="/tmp/matexjax_100m", ckpt_every=50,
+                           log_every=10)
+    s = result.straggler
+    print(f"done: {result.step} steps, loss {result.loss:.4f}, "
+          f"p50 {s.get('p50_s', 0.0)*1e3:.1f} ms/step, "
+          f"total {result.elapsed_s:.1f}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+"""``repro.api`` — the user-transparent facade (the only supported
+entrypoint for user scripts).
+
+    from repro import api
+
+    session = api.load("qwen2.5-14b", smoke=True, mesh="2x2")
+    session.train(steps=100)                       # transparent DP training
+    session.generate([3, 1, 4, 1, 5], max_new=16)  # continuous-batch decode
+
+The script stays sequential; the Session owns meshes, shardings, configs,
+registry bundles, trainers, engines and checkpoints — distribution is
+selected by the ``mesh=`` config alone, per the paper's thesis.
+"""
+from repro.api.session import (CapabilityError, Session, TrainResult, load,
+                               parse_mesh)
+
+__all__ = ["CapabilityError", "Session", "TrainResult", "load", "parse_mesh"]

@@ -256,25 +256,54 @@ class ServeConfig:
     page_size: int = 16           # tokens per KV page (paged layout)
     num_pages: int = 0            # shared page pool size (0 = worst case)
 
+    _INT_KNOBS = ("max_batch", "max_queue", "max_seq_len", "max_new_tokens",
+                  "prefill_chunk", "decode_steps", "page_size", "num_pages")
+
+    def __post_init__(self):
+        # normalize numpy integer knobs (e.g. max_batch=arr.shape[0]) so
+        # equality/hashing used by engine caches sees plain ints
+        import numbers
+        for knob in self._INT_KNOBS:
+            v = getattr(self, knob)
+            if isinstance(v, numbers.Integral) and not isinstance(v, int):
+                object.__setattr__(self, knob, int(v))
+        # fail at construction, not deep inside PagedKVCachePool / the
+        # engine loop: every ServeConfig in the system is valid by existence
+        self.validate()
+
     @property
     def pages_per_slot(self) -> int:
         return -(-self.max_seq_len // self.page_size)
 
     def validate(self) -> None:
-        assert self.policy in SERVE_POLICIES, self.policy
-        assert self.kv_layout in KV_LAYOUTS, self.kv_layout
-        assert self.max_batch >= 1
-        assert self.max_queue >= 1
-        assert self.max_seq_len >= 2
-        assert self.max_new_tokens >= 1
-        assert self.prefill_chunk >= 1
-        assert self.decode_steps >= 1
-        assert self.page_size >= 1
+        if self.policy not in SERVE_POLICIES:
+            raise ValueError(
+                f"policy={self.policy!r} not in {SERVE_POLICIES}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(
+                f"kv_layout={self.kv_layout!r} not in {KV_LAYOUTS}")
+        for knob, least in (("max_batch", 1), ("max_queue", 1),
+                            ("max_seq_len", 2), ("max_new_tokens", 1),
+                            ("prefill_chunk", 1), ("decode_steps", 1),
+                            ("page_size", 1), ("num_pages", 0)):
+            v = getattr(self, knob)
+            if not isinstance(v, int) or isinstance(v, bool) or v < least:
+                raise ValueError(f"{knob}={v!r} must be an int >= {least}")
+        # (max_new_tokens is only the *default* per-request budget; the
+        # engine checks prompt+max_new <= max_seq_len per submit, so it may
+        # legitimately exceed max_seq_len here)
+        if self.page_size > self.max_seq_len:
+            raise ValueError(
+                f"page_size={self.page_size} exceeds max_seq_len="
+                f"{self.max_seq_len}: a single page would never fill — "
+                "shrink page_size (the pool rounds capacity up to pages)")
         # a pool smaller than one slot's worth (+ trash page) deadlocks the
         # engine: a lone max-length request could never be placed
-        assert self.num_pages == 0 or self.num_pages >= self.pages_per_slot + 1, (
-            f"num_pages={self.num_pages} cannot hold one max_seq_len request "
-            f"(needs >= {self.pages_per_slot + 1} incl. the trash page)")
+        if self.num_pages and self.num_pages < self.pages_per_slot + 1:
+            raise ValueError(
+                f"num_pages={self.num_pages} cannot hold one max_seq_len "
+                f"request (needs >= {self.pages_per_slot + 1} pages: "
+                f"{self.pages_per_slot} per slot + the reserved trash page)")
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)

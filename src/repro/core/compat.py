@@ -1,0 +1,105 @@
+"""Version-tolerant jax API aliases (the shard_map analogue of the kernels'
+TPUCompilerParams alias).
+
+``jax.shard_map`` (new-style: ``check_vma`` / ``axis_names`` kwargs) only
+exists on newer jax; on 0.4.x the same machine lives at
+``jax.experimental.shard_map.shard_map`` with the older ``check_rep`` /
+``auto`` spelling — and its SPMD partitioner cannot lower ``axis_index`` /
+``psum_scatter`` / ``all_gather`` inside *partial-auto* regions (the
+trainer's replicated mode: manual DP axes, auto model axis).  This module
+presents the new signature on both and provides psum-based fallbacks for
+the collectives old jax cannot partition.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# captured at import time: conftest may later alias jax.shard_map to the
+# wrapper below, so a live hasattr() probe would recurse
+_NATIVE_SHARD_MAP = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+              axis_names=None):
+    """New-style ``jax.shard_map`` signature on any supported jax version.
+
+    ``axis_names``: the *manual* mesh axes (None/empty = all manual);
+    the complement stays auto (GSPMD partitions it, e.g. tensor-parallel
+    "model").  Translated to the old ``check_rep`` / ``auto`` spelling on
+    jax 0.4.x.
+    """
+    if _NATIVE_SHARD_MAP is not None:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return _NATIVE_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma,
+                                 **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma), auto=auto)
+
+
+def partial_auto_ok() -> bool:
+    """True when partial-auto shard_map regions fully work (new jax).
+
+    On jax 0.4.x the SPMD partitioner cannot handle partial-auto regions
+    containing ``axis_index`` (UNIMPLEMENTED: PartitionId), ``psum_scatter``
+    / ``all_gather`` (fatal IsManualSubgroup check), or — critically —
+    ``lax.scan`` over auto-axis-sharded operands (the model's layer stack):
+    all of these abort or error.  Callers must then either go fully manual
+    (possible when every mesh axis is a DP axis, i.e. no tensor
+    parallelism) or fall back to the pure-GSPMD auto lowering."""
+    return _NATIVE_SHARD_MAP is not None
+
+
+# backwards-compatible alias (collectives were the first discovered gap)
+partial_auto_collectives_ok = partial_auto_ok
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on new jax but a
+    one-element list of dicts on 0.4.x; normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def psum_scatter_vec(vec, axes: Tuple[str, ...], rank, shard_size: int):
+    """Composed tiled ``psum_scatter`` of a flat vector over ``axes``;
+    ``rank`` is this replica's linear DP rank (a traced scalar).
+
+    Old jax: emulated as full psum + local dynamic slice — numerically
+    identical (each output element is the same cross-replica sum), the wire
+    pattern just degrades from RS to AR.
+    """
+    if partial_auto_collectives_ok():
+        for a in axes:                  # sequential scatter composes the sum
+            vec = jax.lax.psum_scatter(vec, a, scatter_dimension=0,
+                                       tiled=True)
+        return vec
+    vec = jax.lax.psum(vec, tuple(axes))
+    return jax.lax.dynamic_slice(vec, (rank * shard_size,), (shard_size,))
+
+
+def all_gather_vec(shard, axes: Tuple[str, ...], rank, total: int):
+    """Composed tiled ``all_gather`` of per-rank flat shards over ``axes``
+    (inverse of :func:`psum_scatter_vec`).
+
+    Old jax: emulated as place-own-shard + psum (every other contribution
+    is zero), again identical in value."""
+    if partial_auto_collectives_ok():
+        for a in reversed(axes):
+            shard = jax.lax.all_gather(shard, a, axis=0, tiled=True)
+        return shard
+    full = jnp.zeros((total,), shard.dtype)
+    full = jax.lax.dynamic_update_slice(full, shard,
+                                        (rank * shard.shape[0],))
+    return jax.lax.psum(full, tuple(axes))

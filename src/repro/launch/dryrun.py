@@ -4,6 +4,14 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
 production mesh and record memory / cost / collective analyses.
 
+This is the one driver that does NOT construct a ``repro.api.Session``: it
+never executes a step — it lowers the same building blocks a Session owns
+(registry bundles, ``TransparentTrainer.from_bundle``, the serve decode
+contracts) against 512 placeholder devices to predict production memory /
+cost.  User-facing train/serve entrypoints live behind ``repro.api`` and
+``launch/cli.py``; the ``--mesh`` flag here selects the *production* preset
+(single: 16x16, multi: 2x16x16), not the free-form ``DxM`` spec.
+
 The two lines above MUST stay first: jax locks the device count on first
 initialization, and the production meshes need 512 placeholder CPU devices.
 Smoke tests and benchmarks do NOT import this module (they see 1 device).
@@ -138,8 +146,7 @@ def lower_cell(arch: str, shape_name: str, mesh_name: str, mode: str,
         run = RunConfig(model=cfg, shape=shape, mesh=mesh_cfg,
                         optimizer=OptimizerConfig(name="adam"),
                         microbatch=int(ov.get("microbatch", 2)))
-        trainer = TransparentTrainer(run, bundle.loss_fn, bundle.specs,
-                                     mesh=mesh)
+        trainer = TransparentTrainer.from_bundle(run, bundle, mesh=mesh)
         return trainer.lower_step(bundle.train_input_specs(shape)), mesh, cfg
 
     mesh_cfg = _mesh_cfg(mesh_name, rules_override=rules_override)
@@ -192,8 +199,9 @@ def analyze_cell(arch: str, shape_name: str, mesh_name: str, mode: str,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
+    from repro.core.compat import cost_analysis
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     stats = analyze_module(hlo)
     shape = get_shape(shape_name)

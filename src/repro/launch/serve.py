@@ -1,32 +1,28 @@
-"""Serving CLI: thin driver over the continuous-batching engine
-(``repro.serving``).
+"""Serving CLI: a thin adapter over ``repro.api`` — flags in, a
+``Session.serve`` call out.  The Session owns the continuous-batching
+engine (``repro.serving``): admission queue, per-slot KV insertion /
+eviction, fixed-shape batched decode, paged-vs-slotted KV layout chosen by
+the bundle's declared capabilities.
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen2.5-14b --smoke --requests 8 --prompt-len 16 --max-new 12
 
-Requests enter an admission queue and are prefilled into KV-cache *slots*
-individually (per-slot insertion/eviction — no batch re-prefill); decode
-runs over the fixed slot pool so XLA compiles the batched step exactly
-once.  For the attention (lm) family KV memory is page-granular
-(``--kv-layout``/``--page-size``): pages allocate lazily with sequence
-length and free on eviction, so cache bytes track live tokens rather than
-``batch x max_seq_len``.  Prompt lengths are jittered to exercise ragged
-continuous batching.
 Pass ``--mesh DxM`` (e.g. ``2x1``) to serve data-parallel over slots and
 tensor-parallel within decode on a device mesh — selected by config, no
-code changes, per the paper's transparency principle.
+code changes, per the paper's transparency principle.  Prompt lengths are
+jittered to exercise ragged continuous batching.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
+
+from repro.launch import cli
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default="qwen2.5-14b")
-    ap.add_argument("--smoke", action="store_true")
+    cli.add_session_flags(ap)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4,
                     help="decode slots (fixed batched-decode shape)")
@@ -41,58 +37,28 @@ def main():
                     default="auto",
                     help="KV-cache layout: page-granular (attention lm "
                          "family) vs slot-granular preallocation")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (paged layout; default 16, "
+                         "auto-shrunk for short runs)")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="shared page pool size; 0 = worst case, less "
                          "oversubscribes (engine preempts on pressure)")
-    ap.add_argument("--mesh", default="",
-                    help="DATAxMODEL device mesh, e.g. 2x1 (default: none)")
-    ap.add_argument("--devices", type=int, default=0,
-                    help="force N placeholder CPU devices (0 = mesh size "
-                         "when --mesh is set and jax is not yet imported)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are emitted")
     ap.add_argument("--json", action="store_true",
                     help="emit the metrics summary as JSON")
     args = ap.parse_args()
 
-    mesh_shape = None
-    if args.mesh:
-        try:
-            mesh_shape = tuple(int(x) for x in args.mesh.lower().split("x"))
-            assert len(mesh_shape) == 2
-        except (ValueError, AssertionError):
-            ap.error(f"--mesh expects DATAxMODEL (e.g. 2x1), got {args.mesh!r}")
-    # must happen before the first jax import: CPU hosts need placeholder
-    # devices to build the mesh (same bootstrap as launch/train.py --devices)
-    n_dev = args.devices or (
-        mesh_shape[0] * mesh_shape[1] if mesh_shape else 0)
-    if n_dev > 1 and "XLA_FLAGS" not in os.environ:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={n_dev}")
+    # require the serve capability at load time: a family the engine cannot
+    # serve fails in one line here, not mid-run
+    session = cli.make_session(args, require=("serve",))
 
     import numpy as np
-    from repro.configs import MeshConfig, ServeConfig, get_config
-    from repro.serving import ServingEngine
-
-    cfg = get_config(args.arch, smoke=args.smoke)
-    serve_cfg = ServeConfig(
-        max_batch=args.batch, max_queue=args.max_queue,
-        max_seq_len=args.prompt_len + args.max_new,
-        max_new_tokens=args.max_new, policy=args.policy,
-        prefill_chunk=args.prefill_chunk, decode_steps=args.decode_steps,
-        kv_layout=args.kv_layout, page_size=args.page_size,
-        num_pages=args.num_pages)
-    mesh_cfg = None
-    if mesh_shape is not None:
-        mesh_cfg = MeshConfig(shape=mesh_shape, axis_names=("data", "model"))
-
-    engine = ServingEngine(cfg, serve_cfg, mesh_cfg=mesh_cfg)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     lengths = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1,
                            size=args.requests)
-    prompts = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lengths]
+    vocab = session.model.vocab_size
+    prompts = [list(rng.integers(0, vocab, (int(l),))) for l in lengths]
 
     stream = None
     if args.stream:
@@ -100,7 +66,18 @@ def main():
             print(f"  req {rid} -> {tok}{'  [done]' if done else ''}",
                   flush=True)
 
-    outs = engine.generate(prompts, args.max_new, stream=stream)
+    outs = session.serve(
+        prompts, max_new=args.max_new, stream=stream,
+        max_batch=args.batch, max_queue=args.max_queue,
+        max_seq_len=args.prompt_len + args.max_new, policy=args.policy,
+        prefill_chunk=args.prefill_chunk, decode_steps=args.decode_steps,
+        kv_layout=args.kv_layout,
+        # shrink only the *default* page size for short runs; an explicit
+        # --page-size that doesn't fit should fail ServeConfig validation
+        page_size=(min(16, args.prompt_len + args.max_new)
+                   if args.page_size is None else args.page_size),
+        num_pages=args.num_pages)
+    engine = session.engine
     s = engine.metrics.summary()
     if args.json:
         print(json.dumps(s, indent=2))

@@ -1,112 +1,53 @@
-"""End-to-end training driver.
+"""Training CLI: a thin adapter over ``repro.api`` (the one supported
+entrypoint — the Session owns the trainer, data pipeline, checkpoints and
+mesh lifecycle; this file only turns flags into a ``Session.train`` call).
 
     PYTHONPATH=src python -m repro.launch.train \
-        --arch stablelm-1.6b --smoke --steps 100 --dp 4 --tp 2 \
+        --arch stablelm-1.6b --smoke --steps 100 --mesh 4x2 \
         --allreduce layerwise --ckpt-dir /tmp/ckpt
 
-Wires together every substrate layer: rank-sharded data (repro.data), the
-transparent DP runtime (repro.core), optimizers, checkpoint/restart and the
-straggler monitor.  On the CPU container use --smoke (reduced configs);
-on a real pod the same driver runs the full configs.
+The user-visible script is sequential, per the paper's thesis: the mesh /
+allreduce / dp-mode flags select the distribution, they never change the
+training code path.  On the CPU container use --smoke (reduced configs); on
+a real pod the same driver runs the full configs.
 """
 from __future__ import annotations
 
 import argparse
-import os
-import time
+
+from repro.launch import cli
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b")
-    ap.add_argument("--smoke", action="store_true")
+    ap = argparse.ArgumentParser(description=__doc__)
+    cli.add_session_flags(ap, arch_default="stablelm-1.6b")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=8)
-    ap.add_argument("--dp", type=int, default=0, help="0 = all devices / tp")
-    ap.add_argument("--tp", type=int, default=1)
-    ap.add_argument("--dp-mode", default="replicated",
+    ap.add_argument("--dp-mode", default=None,
                     choices=["replicated", "fsdp"])
-    ap.add_argument("--allreduce", default="layerwise")
+    ap.add_argument("--allreduce", default=None)
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--devices", type=int, default=0,
-                    help="force N placeholder CPU devices (demo runs)")
     args = ap.parse_args()
 
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}")
-    import jax
-    import jax.numpy as jnp
-    from repro.checkpoint.checkpoint import latest_step, save_checkpoint
-    from repro.checkpoint.elastic import restore_elastic
-    from repro.checkpoint.failures import StragglerMonitor
-    from repro.configs import get_config
-    from repro.configs.base import (MeshConfig, OptimizerConfig, RunConfig,
-                                    ShapeConfig)
-    from repro.core.transparent import TransparentTrainer
-    from repro.data.pipeline import make_input_pipeline
-    from repro.data.readers import synthetic_tokens
-    from repro.launch.mesh import build_mesh
-    from repro.models import registry
-
-    cfg = get_config(args.arch, smoke=args.smoke)
-    bundle = registry.build(cfg)
-    n_dev = len(jax.devices())
-    dp = args.dp or max(n_dev // args.tp, 1)
-    mesh_cfg = MeshConfig(shape=(dp, args.tp), axis_names=("data", "model"),
-                          dp_mode=args.dp_mode, allreduce=args.allreduce)
-    run = RunConfig(
-        model=cfg,
-        shape=ShapeConfig("cli", "train", args.seq_len, args.global_batch),
-        mesh=mesh_cfg,
+    session = cli.make_session(args, dp_mode=args.dp_mode,
+                               allreduce=args.allreduce)
+    from repro.configs.base import OptimizerConfig
+    result = session.train(
+        steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch,
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
-        microbatch=args.microbatch)
-    mesh = build_mesh(mesh_cfg)
-    trainer = TransparentTrainer(run, bundle.loss_fn, bundle.specs, mesh=mesh)
-
-    ds = synthetic_tokens(cfg.vocab_size, args.seq_len,
-                          num_samples=args.global_batch * 64,
-                          rank=jax.process_index(),
-                          world=max(jax.process_count(), 1))
-    it, pf = make_input_pipeline(ds, args.global_batch, mesh, ("data",))
-
-    start = 0
-    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        state, start = restore_elastic(args.ckpt_dir, trainer)
-        print(f"resumed from step {start}")
-    else:
-        state = trainer.init(0)
-    monitor = StragglerMonitor()
-
-    print(f"arch={cfg.name} devices={n_dev} mesh={mesh_cfg.shape} "
-          f"dp_mode={args.dp_mode} allreduce={args.allreduce}")
-    t_start = time.time()
-    step = start
-    for batch in it:
-        t0 = time.time()
-        state, m = trainer.step(state, batch)
-        straggler = monitor.record(time.time() - t0)
-        step = int(m["step"])
-        if step % 10 == 0 or step == start + 1:
-            print(f"step {step:5d}  loss {float(m['loss']):.4f}  "
-                  f"gnorm {float(m['grad_norm']):.3f}"
-                  + ("  [straggler]" if straggler else ""), flush=True)
-        if args.ckpt_dir and step % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, state, step, blocking=False)
-        if step >= start + args.steps:
-            break
-    pf.close()
-    if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, state, step, blocking=True)
-    s = monitor.summary()
-    print(f"done: {step} steps, p50 {s['p50_s']*1e3:.1f} ms/step, "
-          f"total {time.time()-t_start:.1f}s")
+        microbatch=args.microbatch, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, resume=args.resume, log_every=10)
+    s = result.straggler
+    print(f"done: {result.step} steps, loss {result.loss:.4f}, "
+          f"p50 {s.get('p50_s', 0.0)*1e3:.1f} ms/step, "
+          f"total {result.elapsed_s:.1f}s")
 
 
 if __name__ == "__main__":

@@ -8,12 +8,20 @@ A ``ModelBundle`` exposes, per architecture:
   * ``*_input_specs(shape)``  — ShapeDtypeStruct stand-ins per assignment
     (modality frontends are stubs: whisper gets frame embeddings, pixtral
     gets patch embeddings)
+
+Decode-path contracts are *typed*: ``TrainStepContract``, ``ServeContract``
+and ``PagedServeContract`` below are the Protocols a family implements, and
+``ModelBundle.capabilities()`` reports which of them it declares.  Runtime
+consumers (``repro.serving``, ``repro.api``) dispatch on the declared
+capability set — never on ``is None`` probes against individual fields — so
+an unsupported workload fails with one clear error at session-load time.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import (Any, Callable, Dict, FrozenSet, Optional, Protocol,
+                    Tuple, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -26,40 +34,94 @@ from repro.models import common, transformer, rglru, rwkv6, whisper, pixtral
 S_ = jax.ShapeDtypeStruct
 
 
+# ---------------------------------------------------------------------------
+# Decode-path contracts (typed Protocols; see ModelBundle.capabilities)
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class TrainStepContract(Protocol):
+    """Sequential training semantics: ``loss_fn(params, batch) -> scalar``.
+
+    ``batch`` matches ``train_input_specs``; the runtime injects broadcast
+    and all-reduce around it (``TransparentTrainer``)."""
+
+    def __call__(self, params, batch) -> jax.Array: ...
+
+
+@runtime_checkable
+class ServeContract(Protocol):
+    """Engine-facing prefill: ``(params, tokens, *, cache_len) -> (last_logits,
+    state)``.
+
+    ``state`` must match ``init_decode_state(batch, cache_len)`` leaf-for-
+    leaf so the engine can insert it into its slot pool without reshaping.
+    Paired with ``decode_fn`` for the slotted decode path."""
+
+    def __call__(self, params, tokens, *, cache_len: int) -> Tuple[Any, Any]: ...
+
+
+@runtime_checkable
+class PagedServeContract(Protocol):
+    """Paged batched decode against the shared page pool:
+    ``(params, tokens, state, *, use_pallas=False) -> (logits [slots, V],
+    pages)`` with ``state = {"pages": {"k","v"}: [L, P, ps, KV, hd],
+    "page_table": [slots, n] int32, "pos": [slots] int32}``.
+
+    The engine builds the pool from ``init_decode_state(1, page_size)`` and
+    prefills with ``cache_len`` rounded up to a page multiple, so the
+    contiguous prefill cache scatters page-by-page into the pool.
+    ``use_pallas`` selects the Pallas paged-attention kernel (TPU) vs the
+    traced jnp reference (CPU)."""
+
+    def __call__(self, params, tokens, state, *,
+                 use_pallas: bool = False) -> Tuple[Any, Any]: ...
+
+
+#: capability names a bundle may declare (see ModelBundle.capabilities)
+CAPABILITIES = ("train", "serve", "paged_serve")
+
+
 @dataclass
 class ModelBundle:
     cfg: ModelConfig
     specs: Any
-    loss_fn: Callable                     # (params, batch) -> scalar loss
+    loss_fn: TrainStepContract            # (params, batch) -> scalar loss
     prefill_fn: Optional[Callable]        # (params, **inputs) -> (logits, state)
     decode_fn: Optional[Callable]         # (params, tokens, state) -> (logits, state)
     train_input_specs: Callable           # (ShapeConfig) -> dict of SDS
     prefill_input_specs: Callable
     decode_state_specs: Callable          # (ShapeConfig) -> state SDS tree
     init_decode_state: Callable           # (batch, seq_len) -> state arrays
-    # Serving decode-path contract (repro.serving): prefill that emits a
-    # decode state sized for an engine-owned KV slot of capacity ``cache_len``
-    # (token budget = prompt + generated).  Signature:
-    #     serve_prefill_fn(params, tokens, *, cache_len) -> (last_logits, state)
-    # ``state`` must match ``init_decode_state(batch, cache_len)`` leaf-for-
-    # leaf so the engine can insert it into its slot pool without reshaping.
-    # None for families the engine does not serve yet (encdec / vlm frontends
-    # need per-request modality inputs).
-    serve_prefill_fn: Optional[Callable] = None
-    # Paged decode contract (attention family only).  Signature:
-    #     paged_decode_fn(params, tokens, state, *, use_pallas=False)
-    #         -> (logits [slots, V], pages)
-    # (use_pallas selects the Pallas paged-attention kernel; the engine
-    # passes it per-backend — TPU kernel, CPU traced ref.)
-    # with state = {"pages": {"k","v"}: [L, P, ps, KV, hd], "page_table":
-    # [slots, n] int32, "pos": [slots] int32}.  The engine builds the page
-    # pool from ``init_decode_state(1, page_size)`` (k/v leaves = one page)
-    # and prefills with ``cache_len`` rounded up to a page multiple, so the
-    # contiguous prefill cache scatters page-by-page into the pool.  None for
-    # recurrent families (RG-LRU conv/hidden and RWKV wkv state are O(1) per
-    # slot — nothing to page) and for MLA / windowed attention (latent or
-    # ring-wrapped caches don't fit the contiguous page layout yet).
-    paged_decode_fn: Optional[Callable] = None
+    # Serving decode-path contract (repro.serving): a ``ServeContract``
+    # prefill that emits a decode state sized for an engine-owned KV slot of
+    # capacity ``cache_len`` (token budget = prompt + generated).  None for
+    # families the engine does not serve yet (encdec / vlm frontends need
+    # per-request modality inputs).
+    serve_prefill_fn: Optional[ServeContract] = None
+    # Paged decode contract (``PagedServeContract``; attention family only).
+    # None for recurrent families (RG-LRU conv/hidden and RWKV wkv state are
+    # O(1) per slot — nothing to page) and for MLA / windowed attention
+    # (latent or ring-wrapped caches don't fit the contiguous page layout
+    # yet).
+    paged_decode_fn: Optional[PagedServeContract] = None
+
+    def capabilities(self) -> FrozenSet[str]:
+        """Declared decode-path contracts (subset of ``CAPABILITIES``).
+
+        ``"train"``        — ``loss_fn`` implements ``TrainStepContract``;
+        ``"serve"``        — ``serve_prefill_fn`` (``ServeContract``) +
+                             ``decode_fn`` drive the slotted engine path;
+        ``"paged_serve"``  — ``paged_decode_fn`` (``PagedServeContract``)
+                             additionally drives the paged KV pool.
+        """
+        caps = set()
+        if self.loss_fn is not None:
+            caps.add("train")
+        if self.serve_prefill_fn is not None and self.decode_fn is not None:
+            caps.add("serve")
+        if self.paged_decode_fn is not None:
+            caps.add("paged_serve")
+        return frozenset(caps)
 
     def param_structs(self):
         return common.param_shape_structs(self.specs)

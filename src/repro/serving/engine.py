@@ -1,11 +1,13 @@
 """Continuous-batching serving engine.
 
-The user supplies a model config (whose registry bundle defines
-``serve_prefill_fn``/``decode_fn``); the engine supplies everything the
-paper's transparency principle says the runtime should own: request
-admission, slot-level KV-cache management, prefill/decode interleaving, and
-mesh sharding.  A sequential "one request at a time" mental model in, heavy
-traffic out.
+The user supplies a model config (whose registry bundle declares the
+``ServeContract`` / ``PagedServeContract`` decode paths — the engine
+dispatches on ``bundle.capabilities()``, never on ``is None`` probes); the
+engine supplies everything the paper's transparency principle says the
+runtime should own: request admission, slot-level KV-cache management,
+prefill/decode interleaving, and mesh sharding.  A sequential "one request
+at a time" mental model in, heavy traffic out.  User scripts reach this
+through ``repro.api``'s ``Session.serve`` / ``Session.generate``.
 
 Event loop (one ``step()`` = one cycle):
 
@@ -70,13 +72,14 @@ class ServingEngine:
                  params=None, mesh_cfg: Optional[MeshConfig] = None,
                  seed: int = 0, clock=None):
         self.model_cfg = model_cfg
+        # (ServeConfig self-validates at construction — no re-check here)
         self.cfg = serve_cfg or ServeConfig()
-        self.cfg.validate()
         self.bundle = registry.build(model_cfg)
-        if self.bundle.serve_prefill_fn is None:
+        caps = self.bundle.capabilities()
+        if "serve" not in caps:
             raise ValueError(
                 f"{model_cfg.name} ({model_cfg.family}) has no serving "
-                "decode-path contract (serve_prefill_fn); encdec/vlm "
+                "decode-path contract (ServeContract); encdec/vlm "
                 "frontends need per-request modality inputs — see ROADMAP")
 
         # -- mesh placement (config-selected, transparent to callers) -----
@@ -98,16 +101,17 @@ class ServingEngine:
             params = jax.device_put(params, param_sh)
         self.params = params
 
-        # -- KV pool: page-granular when the family supports it -------------
+        # -- KV pool: page-granular when the family declares the capability -
         # (kv_layout="auto": attention lm family pages; recurrent families'
         # O(1) state and MLA/windowed caches stay slot-granular)
-        self.paged = (self.bundle.paged_decode_fn is not None
+        self.paged = ("paged_serve" in caps
                       and self.cfg.kv_layout != "slotted")
         if self.cfg.kv_layout == "paged" and not self.paged:
             raise ValueError(
                 f"{model_cfg.name} ({model_cfg.family}/{model_cfg.attn_kind})"
-                " has no paged decode path; recurrent, MLA, and windowed-"
-                "attention families use the slotted pool (kv_layout='auto')")
+                " has no paged decode path (PagedServeContract); recurrent, "
+                "MLA, and windowed-attention families use the slotted pool "
+                "(kv_layout='auto')")
         if self.paged:
             self.pool = PagedKVCachePool(
                 self.cfg.max_batch, self.cfg.page_size, self.cfg.max_seq_len,

@@ -3,14 +3,30 @@
 Must run before any jax import.  The production dry-run (512 devices) sets
 its own flag in its own process (launch/dryrun.py); benchmarks run with the
 default single device.
+
+Also makes the suite runnable without PYTHONPATH=src (falls back to the
+src/ layout when ``repro`` isn't installed, e.g. before ``pip install -e .``)
+and aliases ``jax.shard_map`` to the version-tolerant wrapper on jax
+versions that predate it (tests exercise the new-style signature).
 """
 import os
+import sys
+from pathlib import Path
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+try:
+    import repro  # noqa: F401  (installed via pip install -e . ?)
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax  # noqa: E402  (initialize after the flag)
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+if not hasattr(jax, "shard_map"):
+    from repro.core.compat import shard_map as _compat_shard_map
+    jax.shard_map = _compat_shard_map
 
 
 @pytest.fixture(scope="session")

@@ -258,13 +258,22 @@ def test_paged_pool_rejects_undersized(dense_setup):
                          num_pages=3)
 
 
-def test_serve_config_validates_paged_knobs():
-    with pytest.raises(AssertionError):
-        ServeConfig(kv_layout="ragged").validate()
-    with pytest.raises(AssertionError):
-        ServeConfig(page_size=0).validate()
-    with pytest.raises(AssertionError):
-        ServeConfig(max_seq_len=64, page_size=8, num_pages=4).validate()
+def test_serve_config_validates_at_construction():
+    """Bad knob combinations fail with a clear ValueError the moment the
+    config exists — not deep inside PagedKVCachePool or the engine loop."""
+    with pytest.raises(ValueError, match="kv_layout"):
+        ServeConfig(kv_layout="ragged")
+    with pytest.raises(ValueError, match="policy"):
+        ServeConfig(policy="edf")
+    with pytest.raises(ValueError, match="page_size"):
+        ServeConfig(page_size=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_batch=0)
+    # page_size/num_pages/max_seq_len consistency
+    with pytest.raises(ValueError, match="trash page"):
+        ServeConfig(max_seq_len=64, page_size=8, num_pages=4)
+    with pytest.raises(ValueError, match="page would never fill"):
+        ServeConfig(max_seq_len=8, page_size=16)
     ServeConfig(max_seq_len=64, page_size=8, num_pages=9).validate()
     ServeConfig().validate()
 

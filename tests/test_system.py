@@ -86,13 +86,13 @@ def test_dryrun_cell_on_test_mesh():
                     mesh=MeshConfig(shape=(2, 2, 2),
                                     axis_names=("pod", "data", "model"),
                                     allreduce="layerwise"))
-    trainer = TransparentTrainer(run, bundle.loss_fn, bundle.specs, mesh=mesh)
+    trainer = TransparentTrainer.from_bundle(run, bundle, mesh=mesh)
     lowered = trainer.lower_step(bundle.train_input_specs(run.shape))
     compiled = lowered.compile()
     ma = compiled.memory_analysis()
     assert ma.temp_size_in_bytes > 0
-    ca = compiled.cost_analysis()
-    assert ca.get("flops", 0) > 0
+    from repro.core.compat import cost_analysis
+    assert cost_analysis(compiled).get("flops", 0) > 0
     from repro.roofline.hlo_parse import analyze_module
     stats = analyze_module(compiled.as_text())
     assert stats.dot_flops > 0
