@@ -325,8 +325,11 @@ class Session:
         auto.update(overrides)
         seq = auto.get("max_seq_len", ServeConfig.max_seq_len)
         if "page_size" not in auto and ServeConfig.page_size > seq:
-            # auto-sized short batches: shrink pages rather than error
-            auto["page_size"] = seq
+            # auto-sized short batches: shrink pages rather than error —
+            # floor_pow2 keeps the default enable_prefix_cache (block
+            # hashing at page granularity) valid
+            from repro.configs.base import floor_pow2
+            auto["page_size"] = floor_pow2(seq)
         return ServeConfig(**auto)
 
     def _engine_for(self, serve_cfg: ServeConfig):
@@ -355,8 +358,10 @@ class Session:
 
         Pass a full ``serve_cfg`` for total control, or individual
         ``ServeConfig`` field overrides as keyword arguments
-        (``policy="priority"``, ``kv_layout="paged"``, ...).  Greedy decode
-        is token-identical to serving each prompt alone.
+        (``policy="priority"``, ``kv_layout="paged"``,
+        ``enable_prefix_cache=False``, ``prefill_chunk_tokens=256``, ...).
+        Greedy decode is token-identical to serving each prompt alone —
+        including when a prompt's prefix is served from cached pages.
         """
         self._require("serve")
         prompts = [list(map(int, p)) for p in requests]

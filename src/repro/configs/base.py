@@ -225,6 +225,14 @@ SERVE_POLICIES = ("fcfs", "priority")
 KV_LAYOUTS = ("auto", "paged", "slotted")
 
 
+def floor_pow2(n: int) -> int:
+    """Largest power of two <= n (n >= 1).  The auto-sizing rule every
+    page-size default goes through, so it always satisfies the
+    ``enable_prefix_cache`` power-of-two validation below."""
+    assert n >= 1, n
+    return 1 << (n.bit_length() - 1)
+
+
 @dataclass(frozen=True)
 class ServeConfig:
     """Knobs for the continuous-batching serving engine.
@@ -243,26 +251,74 @@ class ServeConfig:
     (0 = worst case ``max_batch * ceil(max_seq_len / page_size)`` + the
     reserved trash page); under-provisioning oversubscribes memory — the
     engine preempts the youngest request on page pressure.
+
+    Prefill-path knobs (engine-level optimization pass, see
+    ``serving/engine.py``):
+
+    * ``enable_prefix_cache`` — paged layout only: requests whose prompt
+      shares a page-aligned prefix with previously served prompts map the
+      cached pages read-only (copy-on-write on a partially reused last
+      page) and prefill just the uncached suffix.  Requires a power-of-two
+      ``page_size`` (block hashing chunks prompts at page granularity).
+    * ``prefill_bucket`` — pad prefill lengths to powers of two with masked
+      tails so the per-prompt-length jit cache stays O(log max_seq_len)
+      instead of one XLA entry per distinct ``(prompt_len, cache_len)``.
+    * ``prefill_chunk_tokens`` — split prefills longer than this into
+      chunks run one per engine cycle, interleaved with decode steps, so a
+      long prompt no longer stalls running streams' inter-token latency
+      (0 = never split).  Paged layout only; the slotted path keeps
+      bucketing but prefills whole prompts.
+    * ``max_prefills_per_step`` — admission bound: how many *requests* may
+      start prefilling per engine cycle (formerly ``prefill_chunk``, which
+      remains as a deprecated constructor alias).
     """
     max_batch: int = 8            # decode slots (fixed batched-decode shape)
     max_queue: int = 64           # admission control: reject beyond this
     max_seq_len: int = 256        # per-slot KV-cache capacity (prompt + new)
     max_new_tokens: int = 32      # default generation budget per request
     policy: str = "fcfs"          # "fcfs" | "priority" (priority can preempt)
-    prefill_chunk: int = 2        # max prefills admitted per engine cycle
+    # request admissions per engine cycle (None = default 2; the sentinel
+    # lets the deprecated alias detect an explicitly-passed value even when
+    # it equals the default)
+    max_prefills_per_step: Optional[int] = None
     decode_steps: int = 4         # decode steps per cycle between admissions
     eos_token: int = -1           # stop token (-1 disables early stop)
     kv_layout: str = "auto"       # "auto" | "paged" | "slotted"
     page_size: int = 16           # tokens per KV page (paged layout)
     num_pages: int = 0            # shared page pool size (0 = worst case)
+    enable_prefix_cache: bool = True   # share prompt-prefix pages (paged)
+    prefill_bucket: bool = True        # power-of-two prefill length buckets
+    prefill_chunk_tokens: int = 0      # chunked prefill size (0 = whole)
+    # deprecated alias for max_prefills_per_step (folded in __post_init__)
+    prefill_chunk: Optional[int] = None
 
     _INT_KNOBS = ("max_batch", "max_queue", "max_seq_len", "max_new_tokens",
-                  "prefill_chunk", "decode_steps", "page_size", "num_pages")
+                  "max_prefills_per_step", "decode_steps", "page_size",
+                  "num_pages", "prefill_chunk_tokens")
 
     def __post_init__(self):
         # normalize numpy integer knobs (e.g. max_batch=arr.shape[0]) so
         # equality/hashing used by engine caches sees plain ints
         import numbers
+        if self.prefill_chunk is not None:
+            import warnings
+            if self.max_prefills_per_step is not None \
+                    and self.max_prefills_per_step != self.prefill_chunk:
+                raise ValueError(
+                    f"conflicting knobs: max_prefills_per_step="
+                    f"{self.max_prefills_per_step} and its deprecated alias "
+                    f"prefill_chunk={self.prefill_chunk} — pass only "
+                    "max_prefills_per_step")
+            warnings.warn(
+                "ServeConfig.prefill_chunk is deprecated; it bounds request "
+                "admissions per cycle and is now max_prefills_per_step "
+                "(prefill_chunk_tokens is the *token* chunking knob)",
+                DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "max_prefills_per_step",
+                               self.prefill_chunk)
+            object.__setattr__(self, "prefill_chunk", None)
+        if self.max_prefills_per_step is None:
+            object.__setattr__(self, "max_prefills_per_step", 2)
         for knob in self._INT_KNOBS:
             v = getattr(self, knob)
             if isinstance(v, numbers.Integral) and not isinstance(v, int):
@@ -284,11 +340,24 @@ class ServeConfig:
                 f"kv_layout={self.kv_layout!r} not in {KV_LAYOUTS}")
         for knob, least in (("max_batch", 1), ("max_queue", 1),
                             ("max_seq_len", 2), ("max_new_tokens", 1),
-                            ("prefill_chunk", 1), ("decode_steps", 1),
-                            ("page_size", 1), ("num_pages", 0)):
+                            ("max_prefills_per_step", 1), ("decode_steps", 1),
+                            ("page_size", 1), ("num_pages", 0),
+                            ("prefill_chunk_tokens", 0)):
             v = getattr(self, knob)
             if not isinstance(v, int) or isinstance(v, bool) or v < least:
                 raise ValueError(f"{knob}={v!r} must be an int >= {least}")
+        for knob in ("enable_prefix_cache", "prefill_bucket"):
+            if not isinstance(getattr(self, knob), bool):
+                raise ValueError(f"{knob}={getattr(self, knob)!r} must be "
+                                 "a bool")
+        # slotted never pages, so page_size is inert there; "auto" may
+        # resolve to paged, so it must satisfy the block-hashing constraint
+        if self.enable_prefix_cache and self.kv_layout != "slotted" \
+                and self.page_size & (self.page_size - 1):
+            raise ValueError(
+                f"page_size={self.page_size} must be a power of two when "
+                "enable_prefix_cache=True (prefix blocks are hashed at page "
+                "granularity)")
         # (max_new_tokens is only the *default* per-request budget; the
         # engine checks prompt+max_new <= max_seq_len per submit, so it may
         # legitimately exceed max_seq_len here)

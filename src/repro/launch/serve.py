@@ -17,6 +17,7 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.configs.base import floor_pow2
 from repro.launch import cli
 
 
@@ -31,7 +32,18 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-queue", type=int, default=64)
     ap.add_argument("--policy", choices=("fcfs", "priority"), default="fcfs")
-    ap.add_argument("--prefill-chunk", type=int, default=2)
+    ap.add_argument("--max-prefills-per-step", "--prefill-chunk", type=int,
+                    default=2, dest="max_prefills_per_step",
+                    help="request admissions per engine cycle "
+                         "(--prefill-chunk is the deprecated spelling)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="split prefills longer than this into per-cycle "
+                         "chunks interleaved with decode (0 = whole prompt)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prefix-cache page sharing (paged layout)")
+    ap.add_argument("--no-prefill-bucket", action="store_true",
+                    help="disable power-of-two prefill length bucketing "
+                         "(compiles one prefill per distinct prompt length)")
     ap.add_argument("--decode-steps", type=int, default=4)
     ap.add_argument("--kv-layout", choices=("auto", "paged", "slotted"),
                     default="auto",
@@ -66,15 +78,21 @@ def main():
             print(f"  req {rid} -> {tok}{'  [done]' if done else ''}",
                   flush=True)
 
+    seq_cap = args.prompt_len + args.max_new
     outs = session.serve(
         prompts, max_new=args.max_new, stream=stream,
         max_batch=args.batch, max_queue=args.max_queue,
-        max_seq_len=args.prompt_len + args.max_new, policy=args.policy,
-        prefill_chunk=args.prefill_chunk, decode_steps=args.decode_steps,
+        max_seq_len=seq_cap, policy=args.policy,
+        max_prefills_per_step=args.max_prefills_per_step,
+        prefill_chunk_tokens=args.prefill_chunk_tokens,
+        enable_prefix_cache=not args.no_prefix_cache,
+        prefill_bucket=not args.no_prefill_bucket,
+        decode_steps=args.decode_steps,
         kv_layout=args.kv_layout,
-        # shrink only the *default* page size for short runs; an explicit
+        # shrink only the *default* page size for short runs (power of two,
+        # so the prefix cache's block hashing stays valid); an explicit
         # --page-size that doesn't fit should fail ServeConfig validation
-        page_size=(min(16, args.prompt_len + args.max_new)
+        page_size=(min(16, floor_pow2(seq_cap))
                    if args.page_size is None else args.page_size),
         num_pages=args.num_pages)
     engine = session.engine
@@ -94,6 +112,10 @@ def main():
         layout = "paged" if engine.paged else "slotted"
         print(f"  kv     {layout}  peak {s['kv_bytes_peak']/1e6:.2f} MB  "
               f"(slotted pool would pin {s['kv_bytes_slotted']/1e6:.2f} MB)")
+        print(f"  prefill  {s['prefill_tokens']} tokens run, "
+              f"{s['prefill_tokens_saved']} served from prefix cache "
+              f"(hit rate {s['prefix_hit_rate']:.2f}), "
+              f"{s['compile_count']} compiles")
         for i, toks in enumerate(outs):
             print(f"  req {i}: {toks[:8]}{'...' if len(toks) > 8 else ''}")
 

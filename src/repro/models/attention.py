@@ -316,6 +316,68 @@ def paged_cache_update(kv, k_new, v_new, page_table, pos):
     }
 
 
+def paged_prefill_write(kv, k_new, v_new, page_ids, start, n_valid):
+    """Write one prefill chunk's K/V into the shared page pool.
+
+    kv: {"k","v"}: [P, ps, KV, hd] (one layer's pages); k_new/v_new
+    [1, S, KV, hd] (S = padded bucket length); page_ids [n] int32 — one
+    request's page-table row; start / n_valid traced scalars.  Token i of
+    the chunk holds absolute position ``start + i`` and lands in page
+    ``page_ids[(start + i) // ps]`` at offset ``(start + i) % ps``; bucket
+    padding (i >= n_valid) is routed to the reserved trash page 0 so the
+    fixed bucket shape never scatters garbage into held pages.
+    """
+    ps = kv["k"].shape[1]
+    S = k_new.shape[1]
+    i = jnp.arange(S)
+    pos = start + i
+    blk = jnp.clip(pos // ps, 0, page_ids.shape[0] - 1)
+    page = jnp.where(i < n_valid, page_ids[blk], 0)
+    off = pos % ps
+    return {
+        "k": kv["k"].at[page, off].set(k_new[0].astype(kv["k"].dtype)),
+        "v": kv["v"].at[page, off].set(v_new[0].astype(kv["v"].dtype)),
+    }
+
+
+def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid):
+    """Prefill-chunk GQA self-attention directly against the page pool.
+
+    x [1, S, D] — one request's chunk, padded to a power-of-two bucket;
+    positions = start + arange(S); page_ids [n] the request's page-table
+    row.  The chunk's K/V are written into the pool first (pages covering
+    the cached prefix are *never* written: the chunk starts at ``start`` >=
+    prefix length, and padding writes hit the trash page), then the chunk's
+    queries attend causally over everything cached so far — shared prefix
+    pages, earlier chunks, and the chunk itself — via a gather of the
+    request's pages.  Returns (out [1, S, D], new_kv).
+
+    Requires ``attn_kind == "full"`` (same contiguous-page constraint as
+    ``paged_attention_apply``).
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    cd = x.dtype
+    ps = kv["k"].shape[1]
+    n = page_ids.shape[0]
+
+    q, k, v = _project_qkv_rope(cfg, p, x, positions)
+    new_kv = paged_prefill_write(kv, k, v, page_ids, start, n_valid)
+    # gather this request's pages into a contiguous [1, n*ps] view; absolute
+    # key positions are the identity, validity = written-so-far bound (trash
+    # entries in the table tail sit past the bound, so they are never seen)
+    kk = new_kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
+    vv = new_kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
+    k_pos = jnp.arange(n * ps)
+    kv_valid = (k_pos < start + n_valid)[None, :]
+    out = attention_core(q, kk.astype(cd), vv.astype(cd), positions, k_pos,
+                         causal=True, q_block=cfg.attn_q_block,
+                         kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
+    out = out.reshape(B, S, H * hd)
+    return dot(out, p["wo"], cd), new_kv
+
+
 def paged_attention_apply(cfg, p, x, positions, kv, page_table, lengths, *,
                           use_pallas: bool = False):
     """One batched decode step of GQA self-attention over a paged pool.

@@ -55,7 +55,13 @@ class ServeContract(Protocol):
 
     ``state`` must match ``init_decode_state(batch, cache_len)`` leaf-for-
     leaf so the engine can insert it into its slot pool without reshaping.
-    Paired with ``decode_fn`` for the slotted decode path."""
+    Paired with ``decode_fn`` for the slotted decode path.
+
+    Families that additionally declare ``"bucketed_prefill"`` accept a
+    traced ``n_valid`` keyword: ``tokens`` is then a padded power-of-two
+    bucket whose tail past ``n_valid`` is masked out of the cache and the
+    logits — the engine's compile-count bound under ragged prompt
+    lengths."""
 
     def __call__(self, params, tokens, *, cache_len: int) -> Tuple[Any, Any]: ...
 
@@ -77,8 +83,29 @@ class PagedServeContract(Protocol):
                  use_pallas: bool = False) -> Tuple[Any, Any]: ...
 
 
+@runtime_checkable
+class PagedPrefillContract(Protocol):
+    """Chunked prefill straight into the page pool (the prefix-cache path):
+    ``(params, tokens, state, *, use_pallas=False) -> (logits [1, V],
+    pages)`` with ``state = {"pages": {"k","v"}: [L, P, ps, KV, hd],
+    "page_table": [n] int32, "start": scalar, "n_valid": scalar}``.
+
+    ``tokens`` [1, S] is one request's uncached suffix chunk padded to a
+    power-of-two bucket; ``start`` is how many tokens (shared prefix pages +
+    earlier chunks) are already cached, ``n_valid`` how many of the chunk's
+    tokens are real.  The function writes the chunk's K/V into the pool and
+    attends causally over prefix + chunk, so the engine can admit a request
+    whose prompt prefix is already cached without re-running its FLOPs.
+    Declaring this contract is what flips on the engine's ``prefix_serve``
+    capability (see ``ServeConfig.enable_prefix_cache``)."""
+
+    def __call__(self, params, tokens, state, *,
+                 use_pallas: bool = False) -> Tuple[Any, Any]: ...
+
+
 #: capability names a bundle may declare (see ModelBundle.capabilities)
-CAPABILITIES = ("train", "serve", "paged_serve")
+CAPABILITIES = ("train", "serve", "paged_serve", "prefix_serve",
+                "bucketed_prefill")
 
 
 @dataclass
@@ -104,23 +131,41 @@ class ModelBundle:
     # (latent or ring-wrapped caches don't fit the contiguous page layout
     # yet).
     paged_decode_fn: Optional[PagedServeContract] = None
+    # Paged prefill contract (``PagedPrefillContract``): chunked prefill
+    # into the page pool, the mechanism behind prefix caching and chunked
+    # prefill.  Same family gate as paged_decode_fn.
+    paged_prefill_fn: Optional[PagedPrefillContract] = None
+    # True when serve_prefill_fn accepts a traced ``n_valid`` (masked bucket
+    # tail) — recurrent families advance their state token-by-token, so tail
+    # padding would corrupt it and they keep exact-length prefills.
+    masked_prefill: bool = False
 
     def capabilities(self) -> FrozenSet[str]:
         """Declared decode-path contracts (subset of ``CAPABILITIES``).
 
-        ``"train"``        — ``loss_fn`` implements ``TrainStepContract``;
-        ``"serve"``        — ``serve_prefill_fn`` (``ServeContract``) +
-                             ``decode_fn`` drive the slotted engine path;
-        ``"paged_serve"``  — ``paged_decode_fn`` (``PagedServeContract``)
-                             additionally drives the paged KV pool.
+        ``"train"``            — ``loss_fn`` implements ``TrainStepContract``;
+        ``"serve"``            — ``serve_prefill_fn`` (``ServeContract``) +
+                                 ``decode_fn`` drive the slotted engine path;
+        ``"paged_serve"``      — ``paged_decode_fn`` (``PagedServeContract``)
+                                 additionally drives the paged KV pool;
+        ``"prefix_serve"``     — ``paged_prefill_fn``
+                                 (``PagedPrefillContract``) enables prefix-
+                                 cache page sharing + chunked prefill;
+        ``"bucketed_prefill"`` — serve_prefill_fn takes ``n_valid`` (the
+                                 engine may pad prompts to power-of-two
+                                 buckets with masked tails).
         """
         caps = set()
         if self.loss_fn is not None:
             caps.add("train")
         if self.serve_prefill_fn is not None and self.decode_fn is not None:
             caps.add("serve")
+            if self.masked_prefill:
+                caps.add("bucketed_prefill")
         if self.paged_decode_fn is not None:
             caps.add("paged_serve")
+            if self.paged_prefill_fn is not None:
+                caps.add("prefix_serve")
         return frozenset(caps)
 
     def param_structs(self):
@@ -162,11 +207,20 @@ def _build_lm(cfg: ModelConfig) -> ModelBundle:
             cfg, shape.global_batch, shape.seq_len),
         init_decode_state=functools.partial(
             lambda cfg, b, s: transformer.init_decode_caches(cfg, b, s), cfg),
-        serve_prefill_fn=lambda params, tokens, *, cache_len: transformer.lm_prefill(
-            cfg, params, tokens,
-            cache_len=transformer.decode_cache_len(cfg, cache_len)),
+        serve_prefill_fn=lambda params, tokens, *, cache_len, n_valid=None:
+            transformer.lm_prefill(
+                cfg, params, tokens,
+                cache_len=transformer.decode_cache_len(cfg, cache_len),
+                n_valid=n_valid),
         paged_decode_fn=(functools.partial(transformer.lm_paged_decode, cfg)
                          if cfg.attn_kind == "full" else None),
+        paged_prefill_fn=(functools.partial(transformer.lm_paged_prefill, cfg)
+                          if cfg.attn_kind == "full" else None),
+        # masked bucket tails need the prefill cache to hold the whole
+        # bucket (no ring wrap): true for full attention and MLA; sliding-
+        # window ring caches (window < bucket) would let padding wrap onto
+        # valid slots, so swa/local keep exact-length prefills
+        masked_prefill=cfg.attn_kind in ("full", "mla"),
     )
 
 

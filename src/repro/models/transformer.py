@@ -110,8 +110,15 @@ def lm_head(cfg, params, x):
 # ---------------------------------------------------------------------------
 
 def lm_forward(cfg, params, tokens, *, collect_cache: bool = False,
-               cache_len: int = 0, use_pallas: bool = False):
-    """tokens [B,S] -> (logits [B,S,V], caches_or_None, aux)."""
+               cache_len: int = 0, use_pallas: bool = False, n_valid=None):
+    """tokens [B,S] -> (logits [B,S,V], caches_or_None, aux).
+
+    ``n_valid`` (traced scalar, cache-collection path only) marks a masked
+    bucket tail: tokens at positions >= n_valid are padding — their cache
+    slots carry pos = -1 (decode never attends them) and the cache index is
+    n_valid, so one compiled shape serves every prompt length in a bucket.
+    Causality already keeps tail padding out of the valid tokens' outputs.
+    """
     cd = jnp.dtype(cfg.compute_dtype)
     B, S = tokens.shape
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -145,7 +152,8 @@ def lm_forward(cfg, params, tokens, *, collect_cache: bool = False,
                 ckv = rms_norm(ckv, lp["attn"]["kv_norm"], cfg.norm_eps)
                 krope = attn.apply_rope(
                     krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
-                cache_y = _fill_latent_cache(ckv, krope, positions, cache_len)
+                cache_y = _fill_latent_cache(ckv, krope, positions, cache_len,
+                                             n_valid)
             else:
                 a, new_c = attn.attention_apply(cfg, lp["attn"], h, positions,
                                                 use_pallas=use_pallas)
@@ -161,7 +169,7 @@ def lm_forward(cfg, params, tokens, *, collect_cache: bool = False,
                 k = k.reshape(B, S, kv, hd)
                 v = v.reshape(B, S, kv, hd)
                 k = attn.apply_rope(k, positions, cfg.rope_theta)
-                cache_y = _fill_kv_cache(k, v, positions, cache_len)
+                cache_y = _fill_kv_cache(k, v, positions, cache_len, n_valid)
             x = x + a
             h2 = apply_norm(cfg, lp["ln2"], x)
             if cfg.moe is not None:
@@ -177,8 +185,13 @@ def lm_forward(cfg, params, tokens, *, collect_cache: bool = False,
     return x, caches, aux
 
 
-def _fill_kv_cache(k, v, positions, cache_len: int):
-    """Build a ring cache from prefill k/v (keep the last cache_len tokens)."""
+def _fill_kv_cache(k, v, positions, cache_len: int, n_valid=None):
+    """Build a ring cache from prefill k/v (keep the last cache_len tokens).
+
+    With ``n_valid`` (masked bucket tail; requires S <= cache_len so padding
+    cannot ring-wrap onto valid slots) padding entries carry pos = -1 and
+    ``index`` = n_valid — decode masks them exactly like never-written slots.
+    """
     B, S, KV, hd = k.shape
     L = min(cache_len, S) if cache_len else S
     ks = k[:, S - L:]
@@ -188,21 +201,32 @@ def _fill_kv_cache(k, v, positions, cache_len: int):
     Lc = cache_len or S
     ck = jnp.zeros((B, Lc, KV, hd), k.dtype).at[:, slots].set(ks)
     cv = jnp.zeros((B, Lc, KV, hd), v.dtype).at[:, slots].set(vs)
-    cpos = jnp.full((Lc,), -1, jnp.int32).at[slots].set(pos)
-    return {"k": ck, "v": cv, "pos": cpos,
-            "index": jnp.asarray(S, jnp.int32)}
+    if n_valid is None:
+        cpos = jnp.full((Lc,), -1, jnp.int32).at[slots].set(pos)
+        index = jnp.asarray(S, jnp.int32)
+    else:
+        cpos = jnp.full((Lc,), -1, jnp.int32).at[slots].set(
+            jnp.where(pos < n_valid, pos, -1))
+        index = jnp.asarray(n_valid, jnp.int32)
+    return {"k": ck, "v": cv, "pos": cpos, "index": index}
 
 
-def _fill_latent_cache(ckv, krope, positions, cache_len: int):
+def _fill_latent_cache(ckv, krope, positions, cache_len: int, n_valid=None):
     B, S, R = ckv.shape
     Lc = cache_len or S
     L = min(Lc, S)
-    slots = positions[S - L:] % Lc
+    pos = positions[S - L:]
+    slots = pos % Lc
     c1 = jnp.zeros((B, Lc, R), ckv.dtype).at[:, slots].set(ckv[:, S - L:])
     c2 = jnp.zeros((B, Lc, krope.shape[-1]), krope.dtype).at[:, slots].set(krope[:, S - L:])
-    cpos = jnp.full((Lc,), -1, jnp.int32).at[slots].set(positions[S - L:])
-    return {"ckv": c1, "krope": c2, "pos": cpos,
-            "index": jnp.asarray(S, jnp.int32)}
+    if n_valid is None:
+        cpos = jnp.full((Lc,), -1, jnp.int32).at[slots].set(pos)
+        index = jnp.asarray(S, jnp.int32)
+    else:
+        cpos = jnp.full((Lc,), -1, jnp.int32).at[slots].set(
+            jnp.where(pos < n_valid, pos, -1))
+        index = jnp.asarray(n_valid, jnp.int32)
+    return {"ckv": c1, "krope": c2, "pos": cpos, "index": index}
 
 
 # ---------------------------------------------------------------------------
@@ -232,14 +256,74 @@ def lm_loss(cfg, params, batch, *, use_pallas: bool = False):
 
 
 def lm_prefill(cfg, params, tokens, *, cache_len: int = 0,
-               use_pallas: bool = False):
-    """tokens [B,S] -> (last_logits [B,V], caches)."""
+               use_pallas: bool = False, n_valid=None):
+    """tokens [B,S] -> (last_logits [B,V], caches).
+
+    ``n_valid`` (traced): S is a padded power-of-two bucket and only the
+    first n_valid tokens are real — the cache masks the tail and the
+    returned logits are the n_valid-th token's, so one compiled shape
+    serves every prompt length that rounds up to the same bucket.
+    """
     params = cast_tree(params, cfg.compute_dtype)
     x, caches, _ = lm_forward(cfg, params, tokens, collect_cache=True,
                               cache_len=cache_len or tokens.shape[1],
-                              use_pallas=use_pallas)
-    logits = lm_head(cfg, params, x[:, -1:])
+                              use_pallas=use_pallas, n_valid=n_valid)
+    if n_valid is None:
+        last = x[:, -1:]
+    else:
+        last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(n_valid, jnp.int32) - 1, 1, axis=1)
+    logits = lm_head(cfg, params, last)
     return logits[:, 0], caches
+
+
+def lm_paged_prefill(cfg, params, tokens, state, *, use_pallas: bool = False):
+    """Prefill one request's (suffix) chunk straight into the paged pool.
+
+    tokens [1, S] — S is a padded power-of-two bucket; state:
+      * ``pages``      {"k","v"}: [L, P, ps, KV, hd] — global page pool
+      * ``page_table`` [n] int32 — this request's page-table row
+      * ``start``      traced scalar — tokens already cached (shared prefix
+        pages + earlier chunks); the chunk holds positions start..start+S-1
+      * ``n_valid``    traced scalar — real tokens in the chunk (the bucket
+        tail past it is masked and written to the trash page)
+
+    Returns (logits [1, V] of the last *valid* token, new_pages).  One
+    compiled shape per bucket covers every (prompt_len, prefix_len, chunk)
+    combination — the dispatch that used to jit per prompt length.
+    ``use_pallas`` is accepted for contract symmetry; the chunk path always
+    runs the traced gather (the Pallas paged kernel is decode-only).
+    """
+    del use_pallas
+    params = cast_tree(params, cfg.compute_dtype)
+    cd = jnp.dtype(cfg.compute_dtype)
+    S = tokens.shape[1]
+    start = jnp.asarray(state["start"], jnp.int32)
+    n_valid = jnp.asarray(state["n_valid"], jnp.int32)
+    positions = start + jnp.arange(S, dtype=jnp.int32)
+    x = embed_lookup(cfg, params, tokens, cd)
+
+    def body(x, layer_in):
+        lp, kv = layer_in
+        h = apply_norm(cfg, lp["ln1"], x)
+        a, new_kv = attn.paged_prefill_apply(cfg, lp["attn"], h, positions,
+                                             kv, state["page_table"], start,
+                                             n_valid)
+        x = x + a
+        h = apply_norm(cfg, lp["ln2"], x)
+        if cfg.moe is not None:
+            f, _ = moe_mod.moe_apply(cfg, lp["ff"], h)
+        else:
+            f = mlp_mod.mlp_apply(cfg, lp["ff"], h)
+        x = x + f
+        x = maybe_wsc(x, P(None, None, None))
+        return x, new_kv
+
+    x, new_pages = jax.lax.scan(body, x, (params["layers"], state["pages"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = lm_head(cfg, params, last)
+    return logits[:, 0], new_pages
 
 
 def lm_decode(cfg, params, tokens, caches):

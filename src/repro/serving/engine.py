@@ -1,28 +1,41 @@
 """Continuous-batching serving engine.
 
 The user supplies a model config (whose registry bundle declares the
-``ServeContract`` / ``PagedServeContract`` decode paths — the engine
-dispatches on ``bundle.capabilities()``, never on ``is None`` probes); the
-engine supplies everything the paper's transparency principle says the
-runtime should own: request admission, slot-level KV-cache management,
-prefill/decode interleaving, and mesh sharding.  A sequential "one request
-at a time" mental model in, heavy traffic out.  User scripts reach this
-through ``repro.api``'s ``Session.serve`` / ``Session.generate``.
+``ServeContract`` / ``PagedServeContract`` / ``PagedPrefillContract`` decode
+paths — the engine dispatches on ``bundle.capabilities()``, never on
+``is None`` probes); the engine supplies everything the paper's transparency
+principle says the runtime should own: request admission, slot-level
+KV-cache management, prefix-cache page sharing, prefill/decode interleaving,
+and mesh sharding.  A sequential "one request at a time" mental model in,
+heavy traffic out.  User scripts reach this through ``repro.api``'s
+``Session.serve`` / ``Session.generate``.
 
 Event loop (one ``step()`` = one cycle):
 
   1. preemption  — under the ``priority`` policy, evict low-priority slots
                    for strictly-higher-priority waiters (state re-prefilled
                    on resume; emitted tokens are kept).
-  2. admission   — prefill up to ``prefill_chunk`` waiting requests
-                   (batch-of-1 prefills, jitted per prompt length) and
-                   insert each resulting state into a free KV slot.
-  3. decode      — ``decode_steps`` batched decode steps over the *fixed*
+  2. admission   — start up to ``max_prefills_per_step`` waiting requests.
+                   On the paged path a request first maps every page of its
+                   prompt that the prefix cache already holds (read-only,
+                   refcounted; copy-on-write when a partially reused page
+                   must be written) — only the uncached suffix is prefilled.
+  3. chunked prefill — each admitted-but-unfinished request runs one
+                   ``prefill_chunk_tokens``-sized chunk of its suffix per
+                   cycle, so a long prompt's prefill interleaves with decode
+                   instead of stalling running streams' inter-token latency.
+  4. decode      — ``decode_steps`` batched decode steps over the *fixed*
                    slot pool: decode compiles exactly once because the
-                   batch shape never changes; per-slot ``pos``/``index``
-                   leaves let slots run at ragged sequence positions.
-  4. completion  — finished slots (token budget or EOS) are evicted
+                   batch shape never changes; slots still prefilling are
+                   masked to the trash page for the step.
+  5. completion  — finished slots (token budget or EOS) are evicted
                    individually; their neighbours never notice.
+
+Prefill compiles are bounded: prompt/chunk lengths are padded to power-of-
+two buckets with masked tails (``ServeConfig.prefill_bucket``), so the jit
+cache holds O(log max_seq_len) entries instead of one per distinct prompt
+length (``metrics.compile_count`` tracks traces).  Recurrent families
+(whose state a masked tail would corrupt) keep exact-length prefills.
 
 KV memory is page-granular for the attention (lm) family (``PagedKVCachePool``
 + the paged-attention kernel family): pages are allocated lazily as each
@@ -30,13 +43,16 @@ request's position crosses page boundaries and freed on eviction, so cache
 bytes held track actual sequence lengths instead of ``max_batch x
 max_seq_len``, and ``num_pages`` may oversubscribe — on page pressure the
 engine preempts the youngest request (resume re-prefills; emitted tokens are
-kept, so greedy output is unchanged).  Recurrent families (RG-LRU / RWKV:
-O(1) state per slot) and MLA / windowed attention fall back to the slotted
-pool; ``ServeConfig.kv_layout`` forces either layout.
+kept, so greedy output is unchanged — and typically re-prefills *from the
+prefix cache*, since its own blocks were committed on first admission).
+Recurrent families (RG-LRU / RWKV: O(1) state per slot) and MLA / windowed
+attention fall back to the slotted pool; ``ServeConfig.kv_layout`` forces
+either layout.
 
 Greedy (argmax) decoding — chosen so batched serving is *token-identical*
 to an unbatched sequential decode of each request, the serving analogue of
-the paper's Fig. 7 equivalence claim (tested in tests/test_serving.py).
+the paper's Fig. 7 equivalence claim (tested in tests/test_serving.py and,
+for prefix hits, tests/test_prefix_cache.py).
 
 Mesh transparency: pass a ``MeshConfig`` and the engine places parameters
 via the same logical-axis rules as ``TransparentTrainer`` (tensor-parallel
@@ -47,7 +63,7 @@ the deployment.
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +80,28 @@ P = jax.sharding.PartitionSpec
 
 # stream callback: (request_id, token, done) -> None
 StreamFn = Callable[[int, int, bool], None]
+
+#: smallest prefill bucket — below this the pad overhead beats the compile
+_MIN_BUCKET = 16
+
+
+def bucket_len(n: int, cap: int, *, floor: int = _MIN_BUCKET) -> int:
+    """Smallest power-of-two >= n (floored at ``floor``), clamped to the
+    cache capacity ``cap`` — the final bucket is the capacity itself, so
+    every admissible length lands in O(log cap) distinct shapes."""
+    assert 1 <= n <= cap, (n, cap)
+    return min(max(floor, 1 << (n - 1).bit_length()), cap)
+
+
+class _PrefillJob:
+    """Host-side progress of one request's chunked suffix prefill."""
+
+    __slots__ = ("req", "prompt", "done")
+
+    def __init__(self, req: Request, prompt: Tuple[int, ...], done: int):
+        self.req = req
+        self.prompt = prompt
+        self.done = done                  # tokens already cached
 
 
 class ServingEngine:
@@ -112,12 +150,20 @@ class ServingEngine:
                 " has no paged decode path (PagedServeContract); recurrent, "
                 "MLA, and windowed-attention families use the slotted pool "
                 "(kv_layout='auto')")
+        # prefix-cache page sharing + chunked prefill need the paged
+        # prefill contract (engine writes pages in place, no state scatter)
+        self._prefix_path = self.paged and "prefix_serve" in caps
+        # masked-tail power-of-two bucketing of whole-prompt prefills
+        self._bucket_slotted = (self.cfg.prefill_bucket
+                                and "bucketed_prefill" in caps)
         if self.paged:
             self.pool = PagedKVCachePool(
                 self.cfg.max_batch, self.cfg.page_size, self.cfg.max_seq_len,
                 lambda: self.bundle.init_decode_state(1, self.cfg.page_size),
                 num_pages=self.cfg.num_pages, mesh=self.mesh,
-                model_size=model_size)
+                model_size=model_size,
+                enable_prefix_cache=(self.cfg.enable_prefix_cache
+                                     and self._prefix_path))
             self._cache_len = self.pool.padded_len   # page-multiple prefill
         else:
             self.pool = SlotKVCachePool(
@@ -133,14 +179,28 @@ class ServingEngine:
         self.results: Dict[int, List[int]] = {}
         self._rid = itertools.count()
         self._last_tokens = np.zeros((self.cfg.max_batch,), np.int32)
+        self._prefilling: Dict[int, _PrefillJob] = {}   # slot -> job
+        self.prefill_compiles = 0         # lifetime (metrics.reset survives)
 
         # -- compiled entry points -----------------------------------------
-        # prefill: one jit object; XLA caches per (prompt_len, cache_len)
-        self._prefill = jax.jit(self.bundle.serve_prefill_fn,
+        # prefill compiles are counted at trace time: a wrapper bump runs
+        # once per new jit cache entry, which is exactly the XLA compile
+        # count the bucketing is there to bound
+        def _counted(fn):
+            def wrapped(*a, **k):
+                self.prefill_compiles += 1
+                self.metrics.record_prefill_compile()
+                return fn(*a, **k)
+            return wrapped
+
+        # whole-prompt prefill: one jit object; XLA caches per
+        # (bucket_len | prompt_len, cache_len) pair
+        self._prefill = jax.jit(_counted(self.bundle.serve_prefill_fn),
                                 static_argnames=("cache_len",))
 
         decode_fn = self.bundle.decode_fn
         paged_decode_fn = self.bundle.paged_decode_fn
+        paged_prefill_fn = self.bundle.paged_prefill_fn
 
         def _decode_step(params, toks, pool_state):
             """toks [slots,1,1] + pool -> (greedy next token [slots], pool)."""
@@ -162,6 +222,13 @@ class ServingEngine:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, new_pages
 
+        def _prefill_chunk(params, toks, pages, table, start, n_valid):
+            """One request's suffix chunk straight into the page pool
+            (pages donated; the scalar/table operands are tiny uploads)."""
+            return paged_prefill_fn(params, toks,
+                                    {"pages": pages, "page_table": table,
+                                     "start": start, "n_valid": n_valid})
+
         if self.mesh is not None:
             slots = self.cfg.max_batch
             tok_axis = (tuple(dp_axes) if dp_total > 1
@@ -178,6 +245,15 @@ class ServingEngine:
                                   ns(P(None, None)), ns(P(None))),
                     out_shardings=(ns(P()), self.pool.shardings),
                     donate_argnums=(2,))
+                if self._prefix_path:
+                    self._paged_prefill = jax.jit(
+                        _counted(_prefill_chunk),
+                        in_shardings=(param_sh, ns(P(None, None)),
+                                      self.pool.shardings, ns(P(None)),
+                                      ns(P()), ns(P())),
+                        out_shardings=(ns(P(None, None)),
+                                       self.pool.shardings),
+                        donate_argnums=(2,))
             else:
                 self._decode = jax.jit(
                     _decode_step,
@@ -188,6 +264,9 @@ class ServingEngine:
                     donate_argnums=(2,))
         elif self.paged:
             self._decode = jax.jit(_decode_step_paged, donate_argnums=(2,))
+            if self._prefix_path:
+                self._paged_prefill = jax.jit(_counted(_prefill_chunk),
+                                              donate_argnums=(2,))
         else:
             self._decode = jax.jit(_decode_step, donate_argnums=(2,))
 
@@ -254,11 +333,54 @@ class ServingEngine:
         self.results[req.rid] = req.tokens
         self.metrics.record_completion(req.rid)
 
-    def _admit(self, req: Request, stream: Optional[StreamFn]):
+    def _can_admit(self, prompt) -> bool:
+        """Would the paged pool take this prompt right now (slot + pages,
+        net of prefix-cache hits)?  Used by the priority policy's
+        blocked-admission check only — actual admission goes straight
+        through ``_admit``/``alloc_prefix`` (no double planning)."""
+        return self.pool.can_admit_prompt(prompt) if self._prefix_path \
+            else self.pool.can_admit(len(prompt))
+
+    def _bucketed_prompt(self, prompt, cap: int):
+        """(tokens [1, S], n_valid_or_None): pad to a power-of-two bucket
+        when the family supports masked tails, else the exact length."""
+        n = len(prompt)
+        if not self._bucket_slotted:
+            return jnp.asarray(np.asarray(prompt, np.int32)[None, :]), None
+        toks = np.zeros((1, bucket_len(n, cap)), np.int32)
+        toks[0, :n] = prompt
+        return jnp.asarray(toks), n
+
+    def _admit(self, req: Request, stream: Optional[StreamFn]) -> bool:
+        """Place one request; False when the pool cannot take it right now
+        (paged page shortage — the caller re-queues it, never drops it).
+        The pool is the single admission authority: no pre-check re-plans
+        the prompt, so each admission attempt hashes its blocks once."""
         prompt = req.resume_prompt()
-        toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
-        logits, state = self._prefill(self.params, toks,
-                                      cache_len=self._cache_len)
+        if self._prefix_path:
+            # map cached prefix pages read-only; suffix prefills in chunks
+            # (the first chunk runs this same cycle in _advance_prefills)
+            out = self.pool.alloc_prefix(req.rid, prompt)
+            if out is None:
+                return False
+            slot, cached = out
+            if cached:
+                self.metrics.record_prefix_hit(cached)
+            self._prefilling[slot] = _PrefillJob(req, prompt, cached)
+            return True
+        if self.paged and not self.pool.can_admit(len(prompt)):
+            # slot free but pages aren't: don't burn a prefill that
+            # cannot be placed
+            return False
+        toks, n_valid = self._bucketed_prompt(prompt, self._cache_len)
+        if n_valid is None:
+            logits, state = self._prefill(self.params, toks,
+                                          cache_len=self._cache_len)
+        else:
+            logits, state = self._prefill(self.params, toks,
+                                          cache_len=self._cache_len,
+                                          n_valid=jnp.asarray(n_valid,
+                                                              jnp.int32))
         self.metrics.record_prefill(len(prompt))
         if self.paged:
             slot = self.pool.insert(req.rid, state, n_tokens=len(prompt))
@@ -270,12 +392,47 @@ class ServingEngine:
         self._last_tokens[slot] = token
         if self._emit(req, token, stream):
             self._complete(slot, req)
+        return True
+
+    def _advance_prefills(self, stream: Optional[StreamFn]):
+        """Run one suffix chunk per prefilling slot (chunked prefill): each
+        cycle a long prompt advances ``prefill_chunk_tokens`` tokens while
+        every already-running stream keeps decoding in the same cycle."""
+        for slot in sorted(self._prefilling):
+            job = self._prefilling[slot]
+            remaining = len(job.prompt) - job.done
+            chunk = (min(remaining, self.cfg.prefill_chunk_tokens)
+                     if self.cfg.prefill_chunk_tokens else remaining)
+            width = (bucket_len(chunk, self.pool.padded_len)
+                     if self.cfg.prefill_bucket else chunk)
+            toks = np.zeros((1, width), np.int32)
+            toks[0, :chunk] = job.prompt[job.done:job.done + chunk]
+            logits, self.pool.pages = self._paged_prefill(
+                self.params, jnp.asarray(toks), self.pool.pages,
+                jnp.asarray(self.pool.tables[slot]),
+                jnp.asarray(job.done, jnp.int32),
+                jnp.asarray(chunk, jnp.int32))
+            self.metrics.record_prefill(chunk)
+            job.done += chunk
+            # register fully-written blocks right away: requests admitted
+            # while this one still chunks can already share its prefix
+            self.pool.commit_prefix(slot, job.prompt[:job.done])
+            if job.done < len(job.prompt):
+                continue
+            del self._prefilling[slot]
+            token = int(jnp.argmax(logits[0]))
+            self._last_tokens[slot] = token
+            if self._emit(job.req, token, stream):
+                self._complete(slot, job.req)
 
     def _preempt(self, slot: int):
         """Evict a running request and put it back at the queue head; its
         emitted tokens fold into the resume prompt (greedy decode, so the
-        eventual output is unchanged)."""
+        eventual output is unchanged).  A victim caught mid-prefill simply
+        restarts its suffix on resume (its shared prefix pages stay cached,
+        so the lost work is the uncommitted chunks only)."""
         victim = self.requests[self.pool.owner[slot]]
+        self._prefilling.pop(slot, None)
         self.pool.evict(slot)
         self.scheduler.requeue(victim)
         self.metrics.record_preemption(victim.rid)
@@ -288,7 +445,8 @@ class ServingEngine:
         judged by rid (monotone submission order): ``arrival_seq`` goes
         negative on requeue, so it cannot rank original arrivals."""
         while True:
-            starved = self.pool.ensure_decode_capacity()
+            starved = self.pool.ensure_decode_capacity(
+                skip=self._prefilling.keys())
             if not starved:
                 return
             self._preempt(max(
@@ -296,66 +454,72 @@ class ServingEngine:
                 key=lambda s: (-self.requests[self.pool.owner[s]].priority,
                                self.pool.owner[s])))
 
+    def _decodable(self) -> bool:
+        return any(s not in self._prefilling for s in self.pool.owner)
+
     def step(self, stream: Optional[StreamFn] = None) -> bool:
         """One engine cycle; returns True while work remains."""
         cfg = self.cfg
         # 1. preemption (priority policy only): fires when admission is
         # blocked — no free slot, or (paged) too few free pages for the
-        # most urgent waiter's prompt
+        # most urgent waiter's prompt (prefix-cache hits shrink that need)
         if cfg.policy == "priority" and self.scheduler.depth():
             head = self.scheduler.peek()
             blocked = (self.pool.free_slots == 0
-                       or (self.paged and not self.pool.can_admit(
-                           len(head.resume_prompt()))))
+                       or (self.paged
+                           and not self._can_admit(head.resume_prompt())))
             if blocked:
                 running = {s: self.requests[r]
                            for s, r in self.pool.owner.items()}
                 for slot, _ in self.scheduler.preemption(running):
                     self._preempt(slot)
-        # 2. admission: prefill into free slots, per-slot insertion
+        # 2. admission: map prefix pages / prefill into free slots.  When
+        # the pool declines (slot free but pages aren't), wait for running
+        # work to finish: EVERY not-yet-admitted popped request goes back
+        # (reversed, so the head of the line ends up most negative = first)
+        # — head-of-line blocking, never a silent drop.
         pending = self.scheduler.next_prefills(self.pool.free_slots)
         for i, req in enumerate(pending):
-            if (self.paged
-                    and not self.pool.can_admit(len(req.resume_prompt()))):
-                # slot free but pages aren't: wait for running work to
-                # finish rather than burn a prefill that cannot be placed.
-                # EVERY not-yet-admitted popped request goes back (reversed,
-                # so the head of the line ends up most negative = first) —
-                # head-of-line blocking, never a silent drop.
+            if not self._admit(req, stream):
                 for r in reversed(pending[i:]):
                     self.scheduler.push_front(r)
                 break
-            self._admit(req, stream)
+        # 2b. chunked prefill: one chunk per mid-prefill slot per cycle
+        if self._prefilling:
+            self._advance_prefills(stream)
         self.metrics.sample_queue_depth(self.scheduler.depth())
         self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
                                      self.pool.kv_bytes_slotted())
         # 3. batched decode over the fixed pool
         for _ in range(cfg.decode_steps):
-            if not self.pool.owner:
+            if not self._decodable():
                 break
             if self.paged:
                 self._grow_pages()
-                if not self.pool.owner:
+                if not self._decodable():
                     break
                 # held pages peak right after growth (completion evictions
                 # come later in this iteration) — sample here so the
                 # kv_bytes_peak metric sees the true high-water mark
                 self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
                                              self.pool.kv_bytes_slotted())
-                table, pos = self.pool.decode_view()
+                table, pos = self.pool.decode_view(
+                    mask_slots=tuple(self._prefilling))
                 toks = jnp.asarray(self._last_tokens[:, None])
                 nxt, self.pool.pages = self._decode(self.params, toks,
                                                     self.pool.pages, table,
                                                     pos)
-                self.pool.advance()
+                self.pool.advance(skip=self._prefilling.keys())
             else:
                 toks = jnp.asarray(self._last_tokens.reshape(-1, 1, 1))
                 nxt, self.pool.state = self._decode(self.params, toks,
                                                     self.pool.state)
             nxt = np.asarray(nxt)
             self._last_tokens = nxt.copy()
-            # 4. completion swap-out
+            # 4. completion swap-out (mid-prefill slots have no token yet)
             for slot, rid in sorted(self.pool.owner.items()):
+                if slot in self._prefilling:
+                    continue
                 req = self.requests[rid]
                 if self._emit(req, int(nxt[slot]), stream):
                     self._complete(slot, req)

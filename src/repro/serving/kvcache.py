@@ -14,6 +14,13 @@ All device ops compile exactly once:
   * ``read``    — gather slot *i* back out (tests / debugging)
   * ``reset``   — restore slot *i* to the blank state (eviction hygiene)
 
+The slotted path participates in prefill *bucketing* only (engine-side:
+prompts padded to power-of-two buckets with masked tails bound the jit
+cache; the inserted state's shape is keyed by ``cache_len`` alone, so
+bucketing never changes what lands here).  Prefix-cache page sharing and
+chunked prefill are paged-pool features — a slot-granular state has no
+page indirection to share or to fill incrementally.
+
 Free-slot bookkeeping is host-side; the engine maps slot -> request.
 
 Mesh transparency: ``pool_pspecs`` derives a PartitionSpec tree for the pool

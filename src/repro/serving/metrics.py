@@ -55,6 +55,8 @@ class ServingMetrics:
         self.completed = 0
         self.tokens_out = 0
         self.prefill_tokens = 0
+        self.prefix_hit_tokens = 0                 # served from cached pages
+        self.prefill_compiles = 0                  # distinct prefill traces
         self._t_start: Optional[float] = None
         self._t_end: Optional[float] = None
 
@@ -73,7 +75,20 @@ class ServingMetrics:
         self.rejected += 1
 
     def record_prefill(self, n_prompt_tokens: int) -> None:
+        """Prompt tokens actually *run* through prefill (bucket padding and
+        prefix-cache hits excluded — this is the FLOPs-proportional count)."""
         self.prefill_tokens += n_prompt_tokens
+
+    def record_prefix_hit(self, n_tokens: int) -> None:
+        """Prompt tokens served from shared cached pages instead of being
+        re-prefilled (the prefix cache's compute saving)."""
+        self.prefix_hit_tokens += n_tokens
+
+    def record_prefill_compile(self) -> None:
+        """The engine traced a new prefill shape (one XLA compile).  With
+        power-of-two bucketing this stays O(log max_seq_len); unbounded
+        growth here is the per-prompt-length jit explosion."""
+        self.prefill_compiles += 1
 
     def record_first_token(self, rid: int) -> None:
         t = self.now()
@@ -127,10 +142,15 @@ class ServingMetrics:
 
     def summary(self) -> Dict[str, float]:
         dt = self.elapsed()
+        prompt_tokens = self.prefill_tokens + self.prefix_hit_tokens
         return {
             "completed": self.completed,
             "tokens_out": self.tokens_out,
             "prefill_tokens": self.prefill_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens / prompt_tokens
+                                if prompt_tokens else 0.0),
+            "prefill_tokens_saved": self.prefix_hit_tokens,
+            "compile_count": self.prefill_compiles,
             "elapsed_s": dt,
             "tokens_per_sec": (self.tokens_out / dt) if dt > 0 else 0.0,
             "ttft_mean_s": sum(self.ttft) / len(self.ttft) if self.ttft else 0.0,

@@ -10,9 +10,25 @@ less than ``max_batch x max_seq_len`` (oversubscription; the engine
 preempts on page pressure).
 
 Page 0 is a reserved **trash page**: never allocated, it absorbs the
-writes of slots without a request (their page tables are all-zero) and of
-insert padding, so the batched decode keeps its fixed shape without
-masking any scatter.
+writes of slots without a request (their page tables are all-zero), of
+insert padding, and of masked prefill-bucket tails, so the batched decode
+and bucketed prefill keep their fixed shapes without masking any scatter.
+
+**Prefix caching** (``enable_prefix_cache``): every page holds a
+*reference count* and, once its request's prefill commits, full
+page-aligned prompt blocks are registered in a hash-trie index —
+``chain_hash(block_0..i) -> page``.  A new request walks the index with
+its own prompt blocks and maps every hit read-only (refcount++): those
+positions are never re-prefilled and their pages never duplicated.  The
+engine's prefill chunks start past the shared prefix and decode writes at
+``pos >= prompt_len``, so a shared page is immutable by construction; the
+one exception — a prompt *fully* covered by cached blocks, whose final
+token must still run to produce logits — reuses the last block's page
+**copy-on-write**: the page is device-copied into a private page, and only
+the copy is written.  When a page's refcount drops to zero it is *not*
+blanked: it parks in an LRU of reusable cached pages and is reclaimed (and
+de-indexed) only when the allocator runs dry — memory pressure evicts
+cold prefixes, never live ones.
 
 Device state is three pieces, all fixed-shape (decode compiles once):
   * ``pages``   {"k","v"}: [L, P, ps, KV, hd]  — donated through decode
@@ -26,13 +42,15 @@ Token *t* of a slot lives at page ``table[slot, t // ps]``, offset
 
 Eviction hygiene: freed pages go back to the allocator without device-side
 blanking — a page is only reachable through a table that points at it, the
-next tenant's insert overwrites every slot it reads (the in-page tail past
-``pos`` is masked by length), so stale K/V can never influence another
-request.  The aliasing property (no page in two tables) is tested.
+next tenant's insert/prefill overwrites every position it reads (the
+in-page tail past ``pos`` is masked by length), so stale K/V can never
+influence another request.  The aliasing property (no *private* page in
+two tables; shared pages only ever read) is tested.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,19 +76,48 @@ def paged_pspecs(pool_structs, *, model_size: int = 1):
     return jax.tree.map(rule, pool_structs)
 
 
+def chain_blocks(tokens: Sequence[int], page_size: int, *,
+                 start_block: int = 0, parent: Optional[int] = None):
+    """Yield ``(block_idx, block_tokens, parent_hash, chain_hash)`` for each
+    full ``page_size``-token block of ``tokens`` from ``start_block`` on.
+
+    ``h_i = hash((h_{i-1}, block_i))``, seeded with ``page_size`` — a
+    block's hash commits to the whole prefix, so two chains collide only
+    when every leading block matches.  Deterministic within a process (int
+    tuples; no PYTHONHASHSEED salt).  ``hash()`` is non-cryptographic, so
+    the index additionally stores ``(parent_hash, block_tokens)`` per entry
+    and every match is verified against them — a collision degrades to a
+    cache miss, never to serving another prompt's K/V.  This generator is
+    the ONLY place the chain step lives: lookup (``_plan``), registration
+    (``commit_prefix``) and the test helper all walk through it, so the two
+    sides of the index cannot drift."""
+    h = page_size if parent is None else parent
+    for i in range(start_block, len(tokens) // page_size):
+        blk = tuple(tokens[i * page_size:(i + 1) * page_size])
+        p, h = h, hash((h, blk))
+        yield i, blk, p, h
+
+
+def block_hashes(tokens: Sequence[int], page_size: int) -> List[int]:
+    """Chain hashes of the full blocks of ``tokens`` (see chain_blocks)."""
+    return [h for _, _, _, h in chain_blocks(tokens, page_size)]
+
+
 class PagedKVCachePool:
-    """Global page pool + free-page allocator + per-slot page tables.
+    """Global page pool + refcounted allocator + prefix index + page tables.
 
     ``blank_page_fn()`` must return ``ModelBundle.init_decode_state(1,
     page_size)`` — its "k"/"v" leaves ([L, 1, ps, KV, hd]) are the
     one-page template the pool tiles ``num_pages`` times.  Prefill states
     handed to ``insert`` must be sized ``cache_len == padded_len``
-    (``pages_per_slot * page_size``) so they scatter page-by-page.
+    (``pages_per_slot * page_size``) so they scatter page-by-page; the
+    prefix-cache path (``alloc_prefix`` + the engine's paged prefill)
+    bypasses ``insert`` and writes pages in place.
     """
 
     def __init__(self, num_slots: int, page_size: int, max_seq_len: int,
                  blank_page_fn, *, num_pages: int = 0, mesh=None,
-                 model_size: int = 1):
+                 model_size: int = 1, enable_prefix_cache: bool = False):
         assert num_slots >= 1 and page_size >= 1
         self.num_slots = num_slots
         self.page_size = page_size
@@ -84,6 +131,7 @@ class PagedKVCachePool:
                 f"num_pages={self.num_pages} cannot hold one request "
                 f"(pages_per_slot={self.pages_per_slot} + trash page)")
         self.mesh = mesh
+        self.enable_prefix_cache = enable_prefix_cache
 
         blank = blank_page_fn()
         if not all(k in blank for k in ("k", "v")):
@@ -121,8 +169,20 @@ class PagedKVCachePool:
             return {"k": put(pages["k"], one_state["k"]),
                     "v": put(pages["v"], one_state["v"])}
 
+        def _copy(pages, dst, src):
+            """Copy-on-write: duplicate page ``src`` into ``dst`` (every
+            layer, k and v) so the new tenant can overwrite its tail."""
+            return {"k": pages["k"].at[:, dst].set(pages["k"][:, src]),
+                    "v": pages["v"].at[:, dst].set(pages["v"][:, src])}
+
         self._insert = jax.jit(_insert, donate_argnums=(0,), **out_sh)
+        self._copy = jax.jit(_copy, donate_argnums=(0,), **out_sh)
         self.pages = jax.jit(lambda t: jax.tree.map(grow, t), **out_sh)(one)
+        if enable_prefix_cache:
+            # compile the COW copy now (trash -> trash no-op): the first
+            # fully-cached-prompt admission must not stall on a jit trace
+            self.pages = self._copy(self.pages, jnp.asarray(0, jnp.int32),
+                                    jnp.asarray(0, jnp.int32))
 
         # bytes of one page across layers and k+v (for telemetry)
         self.page_bytes = sum(
@@ -131,13 +191,31 @@ class PagedKVCachePool:
         # -- host bookkeeping ---------------------------------------------
         self._free_slots: List[int] = list(range(num_slots))
         self._free_pages: List[int] = list(range(1, P))      # 0 = trash
+        self.refcount = np.zeros((P,), np.int32)             # per-page
         self.owner: Dict[int, int] = {}                      # slot -> rid
         self.held: Dict[int, List[int]] = {}                 # slot -> pages
         self.tables = np.zeros((num_slots, self.pages_per_slot), np.int32)
         self.pos = np.zeros((num_slots,), np.int32)
+        # prefix index: chain hash -> (page, parent_hash, block_tokens) —
+        # the latter two verify every hit (hash collisions degrade to
+        # misses); reverse map page -> chain hash; per-slot commit cursor
+        # (next block index, parent hash) so chunked commits hash each
+        # token once; and the LRU of refcount-0 pages still indexed
+        self._index: Dict[int, Tuple[int, int, Tuple[int, ...]]] = {}
+        self._block_of_page: Dict[int, int] = {}
+        self._commit_cursor: Dict[int, Tuple[int, int]] = {}
+        self._cached_lru: "OrderedDict[int, None]" = OrderedDict()
+        # one-entry plan memo keyed on index version: the engine's
+        # blocked-admission probe and the admission itself (often the same
+        # prompt, same cycle) walk the chain hash once between index changes
+        self._index_version = 0
+        self._plan_memo: Optional[Tuple[int, Tuple[int, ...], tuple]] = None
         self.pages_allocated = 0                             # lifetime counters
         self.pages_freed = 0
         self.peak_pages_held = 0
+        self.prefix_hit_pages = 0                            # shared mappings
+        self.cow_copies = 0
+        self.cached_pages_evicted = 0                        # LRU reclaims
 
     # -- host bookkeeping --------------------------------------------------
 
@@ -151,28 +229,217 @@ class PagedKVCachePool:
 
     @property
     def pages_held(self) -> int:
-        return sum(len(p) for p in self.held.values())
+        """Pages referenced by at least one live slot (shared pages count
+        once — that is the point of sharing them)."""
+        return int((self.refcount > 0).sum())
+
+    @property
+    def cached_pages(self) -> int:
+        """Refcount-0 pages parked in the prefix-cache LRU (reclaimable)."""
+        return len(self._cached_lru)
+
+    def _page_budget(self) -> int:
+        """Pages the allocator can hand out right now: content-free pages
+        plus reclaimable cached ones."""
+        return len(self._free_pages) + len(self._cached_lru)
 
     def can_admit(self, n_tokens: int) -> bool:
-        """Is there a slot and enough free pages for an n_tokens prefill?"""
+        """Is there a slot and enough free pages for an n_tokens prefill
+        (ignoring any prefix sharing — see ``can_admit_prompt``)?"""
         need = -(-n_tokens // self.page_size)
-        return bool(self._free_slots) and len(self._free_pages) >= need
+        return bool(self._free_slots) and self._page_budget() >= need
 
-    def _take_page(self, slot: int) -> Optional[int]:
-        if not self._free_pages:
+    def can_admit_prompt(self, prompt: Sequence[int]) -> bool:
+        """``can_admit`` minus the pages a prefix-cache hit would share."""
+        if not self._free_slots:
+            return False
+        shared, cow_src, _, _ = self._plan(prompt)
+        need = -(-len(prompt) // self.page_size) - len(shared)
+        return self._alloc_budget(shared, cow_src) >= need
+
+    def _alloc_budget(self, shared: List[int], cow_src: Optional[int]) -> int:
+        """Allocatable pages for one admission: the global budget minus LRU
+        pages this very admission will map/pin (they stop being
+        reclaimable the moment they are re-referenced)."""
+        pinned = sum(1 for p in shared + ([cow_src] if cow_src is not None
+                                          else []) if p in self._cached_lru)
+        return self._page_budget() - pinned
+
+    def _alloc_page(self, slot: int) -> Optional[int]:
+        """Hand a private page to ``slot``: content-free pages first, then
+        reclaim the least-recently-used cached page (de-indexing it)."""
+        if self._free_pages:
+            pid = self._free_pages.pop(0)
+        elif self._cached_lru:
+            pid, _ = self._cached_lru.popitem(last=False)
+            h = self._block_of_page.pop(pid)
+            entry = self._index.get(h)
+            if entry is not None and entry[0] == pid:
+                del self._index[h]
+            self._index_version += 1
+            self.cached_pages_evicted += 1
+        else:
             return None
-        pid = self._free_pages.pop(0)
+        self.refcount[pid] = 1
         self.held[slot].append(pid)
         self.tables[slot, len(self.held[slot]) - 1] = pid
         self.pages_allocated += 1
         return pid
 
+    # kept name: lazy decode growth and the non-sharing insert path use it
+    _take_page = _alloc_page
+
+    def _retain_page(self, pid: int) -> None:
+        """refcount++; a 0 -> 1 transition pulls the page out of the LRU and
+        counts as an allocation, keeping ``pages_allocated == pages_freed``
+        a drain invariant even when cached pages cycle through reuse."""
+        if self.refcount[pid] == 0:
+            self._cached_lru.pop(pid, None)
+            self.pages_allocated += 1
+        self.refcount[pid] += 1
+
+    def _map_shared(self, slot: int, pid: int) -> None:
+        """Map an indexed page read-only into ``slot``."""
+        self._retain_page(pid)
+        self.held[slot].append(pid)
+        self.tables[slot, len(self.held[slot]) - 1] = pid
+        self.prefix_hit_pages += 1
+
+    def _release_page(self, pid: int) -> None:
+        """Drop one reference; at zero the page parks in the LRU when its
+        content is indexed (reusable prefix) and frees otherwise."""
+        self.refcount[pid] -= 1
+        assert self.refcount[pid] >= 0, f"page {pid} refcount underflow"
+        if self.refcount[pid] == 0:
+            self.pages_freed += 1
+            if pid in self._block_of_page:
+                self._cached_lru[pid] = None        # most-recent end
+            else:
+                self._free_pages.append(pid)
+                self._free_pages.sort()
+
+    # -- prefix matching ---------------------------------------------------
+
+    def _plan(self, prompt: Sequence[int]
+              ) -> Tuple[List[int], Optional[int], int, Tuple[int, int]]:
+        """(shared_pages, cow_src_page, cached_tokens, commit_seed) for
+        ``prompt``; commit_seed = (first block to register, its parent
+        chain hash) — ``alloc_prefix`` seeds the slot's commit cursor with
+        it, so ``commit_prefix`` never re-hashes blocks the match already
+        walked.
+
+        Walks the chain-hash index over the prompt's full blocks, verifying
+        each hit's stored (parent_hash, block_tokens) so a ``hash()``
+        collision can only miss, never alias another prompt's pages.  A
+        match covering the *entire* prompt keeps its last block out of the
+        read-only mapping and returns it as ``cow_src`` instead: the final
+        prompt token must still run (logits), so that page is duplicated
+        copy-on-write and cached_tokens caps at len(prompt) - 1.  The walk
+        stops hashing at the first miss — a cold prompt costs one block —
+        and the result is memoized until the index next changes, so a probe
+        (``can_admit_prompt``) followed by the admission re-plans nothing.
+        """
+        ps = self.page_size
+        if not self.enable_prefix_cache:
+            return [], None, 0, (0, ps)
+        memo = self._plan_memo
+        if memo is not None and memo[0] == self._index_version \
+                and memo[1] == tuple(prompt):
+            return memo[2]
+        matched: List[int] = []
+        hashes: List[int] = []
+        for _, blk, parent, h in chain_blocks(prompt, ps):
+            entry = self._index.get(h)
+            if entry is None or entry[1] != parent or entry[2] != blk:
+                break
+            matched.append(entry[0])
+            hashes.append(h)
+        if not matched:
+            out = [], None, 0, (0, ps)
+        elif len(matched) * ps == len(prompt):
+            # the shared read-only blocks end one short of the match; the
+            # COW block itself is already indexed, so commits resume there
+            seed = (len(matched) - 1,
+                    hashes[-2] if len(hashes) > 1 else ps)
+            out = matched[:-1], matched[-1], len(prompt) - 1, seed
+        else:
+            out = matched, None, len(matched) * ps, \
+                (len(matched), hashes[-1])
+        self._plan_memo = (self._index_version, tuple(prompt), out)
+        return out
+
     # -- engine API --------------------------------------------------------
+
+    def alloc_prefix(self, rid: int, prompt: Sequence[int]
+                     ) -> Optional[Tuple[int, int]]:
+        """Allocate a slot for ``prompt``, mapping the longest cached
+        page-aligned prefix read-only and private pages for the rest.
+
+        Returns (slot, cached_tokens) — the engine prefills only positions
+        ``cached_tokens..len(prompt)-1`` — or None when slots or pages run
+        short (caller re-queues the request).  ``pos`` is set to the full
+        prompt length up front; the engine masks the slot out of decode
+        until its chunked prefill completes.
+        """
+        plen = len(prompt)
+        shared, cow_src, cached, seed = self._plan(prompt)
+        total = -(-plen // self.page_size)
+        if not self._free_slots or \
+                self._alloc_budget(shared, cow_src) < total - len(shared):
+            return None
+        slot = self._free_slots.pop(0)
+        assert slot not in self.owner, f"slot {slot} double-assigned"
+        self.owner[slot] = rid
+        self.held[slot] = []
+        self.tables[slot] = 0
+        # the commit cursor resumes after the matched prefix — blocks the
+        # plan walked are never re-hashed by commit_prefix
+        self._commit_cursor[slot] = seed
+        for pid in shared:
+            self._map_shared(slot, pid)
+        if cow_src is not None:
+            # pin the source so this alloc's own page grabs cannot reclaim
+            # it out of the LRU before the device copy lands
+            self._retain_page(cow_src)
+            dst = self._alloc_page(slot)
+            self.pages = self._copy(self.pages, jnp.asarray(dst, jnp.int32),
+                                    jnp.asarray(cow_src, jnp.int32))
+            self.cow_copies += 1
+            self._release_page(cow_src)
+        for _ in range(total - len(self.held[slot])):
+            self._alloc_page(slot)
+        self.pos[slot] = plen
+        self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
+        return slot, cached
+
+    def commit_prefix(self, slot: int, prompt: Sequence[int]) -> None:
+        """Register the slot's now-written full prompt blocks in the index
+        (first writer wins; later identical blocks stay private and simply
+        free on eviction).  Chunked prefill calls this after every chunk
+        with a growing prefix; the per-slot cursor resumes the chain hash
+        where the last call stopped, so each token is hashed exactly once
+        per admission."""
+        if not self.enable_prefix_cache:
+            return
+        ps = self.page_size
+        start, parent = self._commit_cursor.get(slot, (0, ps))
+        cursor = (start, parent)
+        for i, blk, p, h in chain_blocks(prompt, ps, start_block=start,
+                                         parent=parent):
+            if h not in self._index:
+                pid = self.held[slot][i]
+                self._index[h] = (pid, p, blk)
+                self._block_of_page[pid] = h
+                self._index_version += 1
+            cursor = (i + 1, h)
+        self._commit_cursor[slot] = cursor
 
     def insert(self, rid: int, one_state, n_tokens: int) -> Optional[int]:
         """Place a prefilled cache (cache_len == padded_len) into a free
         slot, allocating ceil(n_tokens / page_size) pages.  None when slots
-        or pages are exhausted (caller re-queues the request)."""
+        or pages are exhausted (caller re-queues the request).  This is the
+        non-sharing path: the scatter writes every table entry, so it must
+        never be handed pages another slot can read."""
         if not self.can_admit(n_tokens):
             return None
         slot = self._free_slots.pop(0)
@@ -190,25 +457,43 @@ class PagedKVCachePool:
         return slot
 
     def evict(self, slot: int) -> int:
-        """Free a slot: its pages return to the allocator (no device
-        blanking needed — see module docstring on hygiene)."""
+        """Free a slot: every mapped page drops one reference; pages whose
+        content is indexed park in the prefix LRU instead of freeing (no
+        device blanking either way — see module docstring on hygiene)."""
         rid = self.owner.pop(slot)
-        freed = self.held.pop(slot)
-        self.pages_freed += len(freed)
-        self._free_pages.extend(freed)
-        self._free_pages.sort()
+        for pid in self.held.pop(slot):
+            self._release_page(pid)
+        self._commit_cursor.pop(slot, None)
         self.tables[slot] = 0
         self.pos[slot] = 0
         self._free_slots.append(slot)
         self._free_slots.sort()
         return rid
 
-    def ensure_decode_capacity(self) -> List[int]:
+    def clear_prefix_cache(self) -> None:
+        """Invalidate the prefix index: every refcount-0 cached page returns
+        to the free list and no future request can map a previously cached
+        block.  Live slots keep serving off their mapped pages — but those
+        pages are de-indexed too, so they free (rather than park) on
+        eviction.  Call when cached K/V stops being valid (weight updates)
+        or to measure cold-start behaviour on a warm engine."""
+        self._free_pages.extend(self._cached_lru)
+        self._free_pages.sort()
+        self._cached_lru.clear()
+        self._index.clear()
+        self._block_of_page.clear()
+        self._index_version += 1
+
+    def ensure_decode_capacity(self, skip=()) -> List[int]:
         """Lazily allocate so every active slot can write position ``pos``
         (the next decode token).  Returns the slots that could not be
-        extended — the engine preempts to relieve the pressure."""
+        extended — the engine preempts to relieve the pressure.  Slots in
+        ``skip`` (still prefilling: pages preallocated, no decode write
+        coming) are left alone."""
         starved = []
         for slot in self.active_slots:
+            if slot in skip:
+                continue
             need = int(self.pos[slot]) // self.page_size + 1
             while len(self.held[slot]) < need:
                 if self._take_page(slot) is None:
@@ -217,14 +502,24 @@ class PagedKVCachePool:
         self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
         return starved
 
-    def decode_view(self) -> Tuple[jax.Array, jax.Array]:
-        """(page_table, pos) device operands for one decode step."""
+    def decode_view(self, mask_slots=()) -> Tuple[jax.Array, jax.Array]:
+        """(page_table, pos) device operands for one decode step.  Slots in
+        ``mask_slots`` (mid-prefill) present an all-trash table and pos 0,
+        so the fixed-shape decode can run while they fill."""
+        if mask_slots:
+            tables = self.tables.copy()
+            pos = self.pos.copy()
+            for s in mask_slots:
+                tables[s] = 0
+                pos[s] = 0
+            return jnp.asarray(tables), jnp.asarray(pos)
         return jnp.asarray(self.tables), jnp.asarray(self.pos)
 
-    def advance(self) -> None:
-        """One decode step happened: every active slot cached one token."""
+    def advance(self, skip=()) -> None:
+        """One decode step happened: every decoding slot cached one token."""
         for slot in self.owner:
-            self.pos[slot] += 1
+            if slot not in skip:
+                self.pos[slot] += 1
 
     # -- telemetry ---------------------------------------------------------
 

@@ -15,9 +15,15 @@ Policies
                     generated tokens folded into the prompt, so its eventual
                     output is unchanged (greedy decode is deterministic).
 
-``prefill_chunk`` bounds how many prefills are admitted per cycle — the
-prefill/decode interleaving knob: prefill latency a newly admitted request
-pays is hidden from running streams in chunks rather than all at once.
+``max_prefills_per_step`` (formerly ``prefill_chunk``, kept as a deprecated
+``ServeConfig`` alias) bounds how many *requests* may start prefilling per
+cycle — one of two prefill/decode interleaving knobs.  The other,
+``prefill_chunk_tokens``, lives in the engine: it splits a single long
+prompt into token chunks run across cycles, so neither many short prompts
+nor one long prompt can stall running streams' inter-token latency.  The
+scheduler only sees the per-request admission bound; token chunking and
+prefix-cache admission (pages shared with cached prompts) are engine/pool
+concerns.
 """
 from __future__ import annotations
 
@@ -102,8 +108,9 @@ class Scheduler:
     # -- batching ----------------------------------------------------------
 
     def next_prefills(self, free_slots: int) -> List[Request]:
-        """Pop up to min(free_slots, prefill_chunk) requests to prefill now."""
-        n = min(free_slots, self.cfg.prefill_chunk, len(self.waiting))
+        """Pop up to min(free_slots, max_prefills_per_step) requests to
+        start prefilling now."""
+        n = min(free_slots, self.cfg.max_prefills_per_step, len(self.waiting))
         if n <= 0:
             return []
         picked = self._sorted_waiting()[:n]
@@ -116,12 +123,11 @@ class Scheduler:
 
         Only meaningful under the ``priority`` policy and only when
         admission is blocked — no free slot, or (paged pool) too few free
-        pages for the most urgent waiter.  At most one
-        victim per waiting challenger, and never more victims than
-        ``prefill_chunk`` — a freed slot the next admission round cannot
-        refill would idle while its victim needlessly loses decode progress.
-        A challenger never preempts a peer of equal priority (avoids
-        livelock).
+        pages for the most urgent waiter.  At most one victim per waiting
+        challenger, and never more victims than ``max_prefills_per_step`` —
+        a freed slot the next admission round cannot refill would idle
+        while its victim needlessly loses decode progress.  A challenger
+        never preempts a peer of equal priority (avoids livelock).
         """
         if self.cfg.policy != "priority" or not running or not self.waiting:
             return []
@@ -129,7 +135,7 @@ class Scheduler:
         # running requests, least-urgent first
         by_urgency = sorted(running.items(), key=lambda kv: self._rank(kv[1]),
                             reverse=True)
-        challengers = self._sorted_waiting()[:self.cfg.prefill_chunk]
+        challengers = self._sorted_waiting()[:self.cfg.max_prefills_per_step]
         taken = set()
         for ch in challengers:
             for slot, victim in by_urgency:

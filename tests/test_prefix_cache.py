@@ -1,0 +1,369 @@
+"""Prefix-cache page sharing + bucketed/chunked prefill (PR 4 tentpole).
+
+Four layers of guarantees:
+  * token identity — a prefix-hit serve (shared pages, suffix-only prefill,
+    COW on a fully cached prompt) emits exactly the cold serve's greedy
+    tokens, for identical and diverging prompts, on one device and under a
+    2x2 data x model mesh;
+  * pool invariants — refcounts balance through sharing, preemption and
+    eviction; refcount-0 cached pages park in the LRU and are reclaimed
+    (de-indexed) under pressure, never while referenced;
+  * COW isolation — a request decoding against shared prefix pages never
+    mutates a sibling's page (decode writes land past the prefix; the one
+    writable reused page is a private copy);
+  * compile bounds — power-of-two bucketing keeps distinct prefill traces
+    <= log2(max_seq_len) across 50 random prompt lengths (counted by the
+    engine's trace-time wrapper).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MeshConfig, ServeConfig, get_config
+from repro.models import registry
+from repro.serving import PagedKVCachePool, ServingEngine
+from repro.serving.paged import block_hashes
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    bundle = registry.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def _prompts(rng, vocab, lengths):
+    return [list(rng.integers(0, vocab, (l,))) for l in lengths]
+
+
+def _sequential_decode(cfg, params, prompt, n_new, cache_len):
+    """Unbatched reference: exact-length prefill + single-sequence decode."""
+    bundle = registry.build(cfg)
+    prefill = jax.jit(bundle.serve_prefill_fn, static_argnames=("cache_len",))
+    decode = jax.jit(bundle.decode_fn)
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, state = prefill(params, toks, cache_len=cache_len)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        logits, state = decode(params, jnp.asarray([[out[-1]]], jnp.int32),
+                               state)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Config knobs
+# ---------------------------------------------------------------------------
+
+def test_serve_config_prefix_cache_requires_pow2_pages():
+    with pytest.raises(ValueError) as e:
+        ServeConfig(page_size=12, max_seq_len=48, enable_prefix_cache=True)
+    assert "page_size" in str(e.value) and "enable_prefix_cache" in str(e.value)
+    # the same page size is fine with the cache off...
+    ServeConfig(page_size=12, max_seq_len=48, enable_prefix_cache=False)
+    # ...and on the slotted layout, where page_size (and the cache) is inert
+    ServeConfig(page_size=12, max_seq_len=48, kv_layout="slotted")
+
+
+def test_serve_config_prefill_chunk_alias_deprecated():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = ServeConfig(prefill_chunk=3)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert cfg.max_prefills_per_step == 3
+    assert cfg.prefill_chunk is None          # folded: alias never re-read
+    # the alias normalizes, so engine caches key both spellings identically
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert ServeConfig(prefill_chunk=3) == \
+            ServeConfig(max_prefills_per_step=3)
+        # conflicting pair must fail loudly, not silently drop one value
+        with pytest.raises(ValueError, match="conflicting"):
+            ServeConfig(max_prefills_per_step=8, prefill_chunk=2)
+
+
+def test_serve_config_new_knob_validation():
+    with pytest.raises(ValueError, match="prefill_chunk_tokens"):
+        ServeConfig(prefill_chunk_tokens=-1)
+    with pytest.raises(ValueError, match="enable_prefix_cache"):
+        ServeConfig(enable_prefix_cache="yes")
+
+
+def test_block_hashes_chain_commits_to_prefix():
+    a = block_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = block_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    assert len(a) == 2 and a[0] == b[0] and a[1] != b[1]
+    # a block's hash depends on every earlier block, not just its own tokens
+    c = block_hashes([0, 2, 3, 4, 5, 6, 7, 8], 4)
+    assert c[1] != a[1]
+    assert block_hashes([1, 2, 3], 4) == []   # partial block never hashes
+
+
+# ---------------------------------------------------------------------------
+# Pool invariants
+# ---------------------------------------------------------------------------
+
+def _prefix_pool(bundle, slots=3, ps=4, seq=16, **kw):
+    return PagedKVCachePool(slots, ps, seq,
+                            lambda: bundle.init_decode_state(1, ps),
+                            enable_prefix_cache=True, **kw)
+
+
+def test_pool_refcounts_share_and_release(dense_setup):
+    _, bundle, _ = dense_setup
+    pool = _prefix_pool(bundle)
+    prompt = list(range(100, 110))            # 10 tokens: 2 full + 1 partial
+    s0, cached0 = pool.alloc_prefix(0, prompt)
+    assert cached0 == 0 and len(pool.held[s0]) == 3
+    pool.commit_prefix(s0, prompt)
+    # identical prompt: both full blocks shared, partial page private
+    s1, cached1 = pool.alloc_prefix(1, prompt)
+    assert cached1 == 8
+    assert pool.held[s1][:2] == pool.held[s0][:2]       # shared read-only
+    assert pool.held[s1][2] != pool.held[s0][2]         # private tail
+    shared = pool.held[s0][:2]
+    assert all(pool.refcount[p] == 2 for p in shared)
+    assert pool.pages_held == 4               # 2 shared (once) + 2 private
+    # diverging prompt: first block shared only
+    div = prompt[:4] + [7] * 6
+    s2, cached2 = pool.alloc_prefix(2, div)
+    assert cached2 == 4 and pool.held[s2][0] == shared[0]
+    assert pool.refcount[shared[0]] == 3
+    # eviction decrements; cached pages park in the LRU, stay indexed
+    # (s2 shares only block 0, so the counts diverge per block)
+    pool.evict(s1)
+    assert pool.refcount[shared[0]] == 2 and pool.refcount[shared[1]] == 1
+    pool.evict(s0)
+    pool.evict(s2)
+    assert int((pool.refcount > 0).sum()) == 0
+    assert pool.cached_pages == 2             # s0's two committed blocks
+    assert pool.pages_allocated == pool.pages_freed
+    # a re-admission pulls them straight back out of the LRU
+    s3, cached3 = pool.alloc_prefix(3, prompt)
+    assert cached3 == 8 and pool.held[s3][:2] == shared
+
+
+def test_pool_lru_reclaims_cached_pages_under_pressure(dense_setup):
+    _, bundle, _ = dense_setup
+    # 5 usable pages; two 2-page prompts fill 4, their blocks stay cached
+    pool = _prefix_pool(bundle, slots=2, ps=4, seq=8, num_pages=6)
+    a, b = list(range(10, 18)), list(range(20, 28))
+    sa, _ = pool.alloc_prefix(0, a)
+    pool.commit_prefix(sa, a)
+    sb, _ = pool.alloc_prefix(1, b)
+    pool.commit_prefix(sb, b)
+    pool.evict(sa)
+    pool.evict(sb)
+    assert pool.cached_pages == 4
+    # a third prompt needs 2 fresh pages: only 1 is content-free, so the
+    # LRU evicts prompt a's (least recently used) pages and de-indexes them
+    c = list(range(30, 38))
+    sc, cached = pool.alloc_prefix(2, c)
+    assert cached == 0 and pool.cached_pages_evicted >= 1
+    # b's chain survived (more recently parked); a's head block is gone
+    assert pool._plan(b)[2] > 0 or pool.cached_pages == 0
+    assert pool._plan(a)[2] == 0
+    # LRU never reclaims a referenced page
+    assert all(pool.refcount[p] == 1 for p in pool.held[sc])
+
+
+def test_pool_index_verifies_hits_against_tokens(dense_setup):
+    """A hash collision must degrade to a miss, never map another prompt's
+    pages: every index hit is verified against the stored (parent_hash,
+    block_tokens) pair."""
+    _, bundle, _ = dense_setup
+    pool = _prefix_pool(bundle)
+    prompt = list(range(60, 68))
+    s0, _ = pool.alloc_prefix(0, prompt)
+    pool.commit_prefix(s0, prompt)
+    (h,) = block_hashes(prompt, 4)[:1]
+    # forge a colliding entry: same chain hash, different tokens
+    pid, parent, _ = pool._index[h]
+    pool._index[h] = (pid, parent, (1, 2, 3, 4))
+    assert pool._plan(prompt)[2] == 0         # verified -> miss, not alias
+    pool._index[h] = (pid, parent + 1, tuple(prompt[:4]))
+    assert pool._plan(prompt)[2] == 0         # parent mismatch -> miss
+
+
+def test_pool_chunked_commit_cursor_incremental(dense_setup):
+    """commit_prefix with a growing prefix (chunked prefill) registers each
+    block exactly once and ends at the same index a one-shot commit gives."""
+    _, bundle, _ = dense_setup
+    pool = _prefix_pool(bundle, slots=2, ps=4, seq=16)
+    prompt = list(range(200, 214))            # 14 tokens: 3 full blocks
+    s0, _ = pool.alloc_prefix(0, prompt)
+    for done in (5, 9, 14):                   # ragged chunk boundaries
+        pool.commit_prefix(s0, prompt[:done])
+    one_shot = _prefix_pool(bundle, slots=2, ps=4, seq=16)
+    s1, _ = one_shot.alloc_prefix(0, prompt)
+    one_shot.commit_prefix(s1, prompt)
+    assert set(pool._index) == set(one_shot._index)
+    assert pool._commit_cursor[s0][0] == 3
+    # the chunked chain matches the reference hash chain exactly
+    assert [pool._index[h][0] for h in block_hashes(prompt, 4)] == \
+        pool.held[s0][:3]
+
+
+def test_pool_cow_never_maps_source_writable(dense_setup):
+    _, bundle, _ = dense_setup
+    pool = _prefix_pool(bundle)
+    prompt = list(range(50, 58))              # exactly 2 pages
+    s0, _ = pool.alloc_prefix(0, prompt)
+    pool.commit_prefix(s0, prompt)
+    s1, cached = pool.alloc_prefix(1, prompt)
+    # fully cached prompt: all but the final token served from cache, and
+    # the last block's page is a *copy* — the cached source stays immutable
+    assert cached == len(prompt) - 1
+    assert pool.cow_copies == 1
+    assert pool.held[s1][0] == pool.held[s0][0]
+    assert pool.held[s1][1] != pool.held[s0][1]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end token identity
+# ---------------------------------------------------------------------------
+
+def _serve(cfg, params, prompts, max_new, *, mesh_cfg=None, **scfg_kw):
+    base = dict(max_batch=2, max_seq_len=48, max_new_tokens=max_new,
+                decode_steps=2, kv_layout="paged", page_size=8)
+    base.update(scfg_kw)
+    eng = ServingEngine(cfg, ServeConfig(**base), params=params,
+                        mesh_cfg=mesh_cfg)
+    return eng, eng.generate(prompts, max_new)
+
+
+def test_prefix_hit_matches_cold_identical_and_diverging(dense_setup):
+    cfg, _, params = dense_setup
+    rng = np.random.default_rng(5)
+    shared = list(rng.integers(0, cfg.vocab_size, (16,)))   # 2 full pages
+    prompts = [shared + list(rng.integers(0, cfg.vocab_size, (t,)))
+               for t in (5, 9, 3)]
+    prompts.append(list(shared))              # page-aligned: the COW case
+    prompts.append(prompts[0])                # identical to an earlier one
+    eng, hot = _serve(cfg, params, prompts, 6, enable_prefix_cache=True)
+    _, cold = _serve(cfg, params, prompts, 6, enable_prefix_cache=False)
+    assert hot == cold
+    assert eng.metrics.prefix_hit_tokens > 0
+    assert eng.pool.cow_copies >= 1
+    # and both match the unbatched sequential reference
+    for p, got in zip(prompts, hot):
+        assert got == _sequential_decode(cfg, params, p, 6,
+                                         eng.pool.padded_len)
+    # drain invariants: nothing referenced, counters balanced
+    assert int((eng.pool.refcount > 0).sum()) == 0
+    assert eng.pool.pages_allocated == eng.pool.pages_freed
+
+
+def test_prefix_hit_matches_cold_under_mesh(dense_setup):
+    cfg, _, params = dense_setup
+    rng = np.random.default_rng(6)
+    shared = list(rng.integers(0, cfg.vocab_size, (16,)))
+    prompts = [shared + list(rng.integers(0, cfg.vocab_size, (t,)))
+               for t in (6, 4, 6, 8)]
+    # conftest forces 8 host devices: 2-way data x 2-way model
+    mesh_cfg = MeshConfig(shape=(2, 2), axis_names=("data", "model"))
+    em, hot_mesh = _serve(cfg, params, prompts, 4, mesh_cfg=mesh_cfg,
+                          max_batch=4, enable_prefix_cache=True)
+    _, cold_single = _serve(cfg, params, prompts, 4, max_batch=4,
+                            enable_prefix_cache=False)
+    assert hot_mesh == cold_single
+    assert em.metrics.prefix_hit_tokens > 0
+
+
+def test_prefix_hit_under_preemption_and_chunked_prefill(dense_setup):
+    """Oversubscribed pages + chunked prefill: preempted requests resume
+    through their own cached prefix and still emit identical tokens."""
+    cfg, _, params = dense_setup
+    rng = np.random.default_rng(11)
+    prompts = _prompts(rng, cfg.vocab_size, [14, 15])
+    eng, outs = _serve(cfg, params, prompts, 12, max_seq_len=32,
+                       page_size=4, num_pages=12, prefill_chunk_tokens=6)
+    assert eng.metrics.preemptions >= 1
+    for p, got in zip(prompts, outs):
+        assert got == _sequential_decode(cfg, params, p, 12,
+                                         eng.pool.padded_len)
+    assert int((eng.pool.refcount > 0).sum()) == 0
+    assert eng.pool.pages_allocated == eng.pool.pages_freed
+
+
+def test_cow_isolation_sibling_decode_does_not_mutate_shared_pages(dense_setup):
+    """Two live requests share prefix pages while both decode; the shared
+    pages' device content must be bit-identical before and after."""
+    cfg, _, params = dense_setup
+    rng = np.random.default_rng(9)
+    prompt = list(rng.integers(0, cfg.vocab_size, (16,)))   # 2 full pages
+    scfg = ServeConfig(max_batch=2, max_seq_len=48, max_new_tokens=10,
+                       decode_steps=1, kv_layout="paged", page_size=8)
+    eng = ServingEngine(cfg, scfg, params=params)
+    ra = eng.submit(prompt, max_new_tokens=10)
+    eng.step()                                # A admitted + committed
+    shared = [eng.pool._index[h][0] for h in block_hashes(prompt, 8)]
+    assert shared
+    snap = {pid: (np.asarray(eng.pool.pages["k"][:, pid]),
+                  np.asarray(eng.pool.pages["v"][:, pid]))
+            for pid in shared}
+    rb = eng.submit(prompt, max_new_tokens=10)
+    out = eng.run()
+    # B mapped A's pages (refcount 2 while both lived) and decoded its own
+    # tokens; the shared prefix pages never saw a write
+    for pid, (k0, v0) in snap.items():
+        np.testing.assert_array_equal(np.asarray(eng.pool.pages["k"][:, pid]), k0)
+        np.testing.assert_array_equal(np.asarray(eng.pool.pages["v"][:, pid]), v0)
+    assert out[ra] == out[rb]
+    assert out[ra] == _sequential_decode(cfg, params, prompt, 10,
+                                         eng.pool.padded_len)
+
+
+# ---------------------------------------------------------------------------
+# Compile bounds (bucketed prefill)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["paged", "slotted"])
+def test_bucketing_bounds_prefill_compiles(dense_setup, layout):
+    """50 random prompt lengths must trace at most log2(max_seq_len)
+    distinct prefill shapes (the per-prompt-length jit explosion this PR
+    removes).  Counted by the engine's trace-time wrapper."""
+    cfg, _, params = dense_setup
+    max_seq = 256
+    scfg = ServeConfig(max_batch=4, max_seq_len=max_seq, max_new_tokens=2,
+                       decode_steps=1, kv_layout=layout, page_size=8)
+    eng = ServingEngine(cfg, scfg, params=params)
+    rng = np.random.default_rng(21)
+    lengths = rng.integers(1, max_seq - 2, size=50)
+    outs = eng.generate(_prompts(rng, cfg.vocab_size, [int(l) for l in lengths]), 2)
+    assert len(outs) == 50 and all(len(t) == 2 for t in outs)
+    assert eng.prefill_compiles <= int(np.log2(max_seq))
+    assert eng.prefill_compiles >= 2          # the counter actually counts
+
+
+def test_bucketing_off_compiles_per_length(dense_setup):
+    """Sanity check of the counter itself: with bucketing disabled every
+    distinct prompt length traces its own prefill."""
+    cfg, _, params = dense_setup
+    scfg = ServeConfig(max_batch=2, max_seq_len=64, max_new_tokens=2,
+                       decode_steps=1, kv_layout="slotted",
+                       prefill_bucket=False)
+    eng = ServingEngine(cfg, scfg, params=params)
+    rng = np.random.default_rng(23)
+    eng.generate(_prompts(rng, cfg.vocab_size, [5, 9, 13, 17]), 2)
+    assert eng.prefill_compiles == 4
+
+
+def test_recurrent_families_skip_bucketing():
+    """RWKV's recurrent prefill state would be corrupted by a masked tail:
+    the bundle must not declare bucketed_prefill and the engine must fall
+    back to exact lengths (correctness over compile count)."""
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    caps = registry.build(cfg).capabilities()
+    assert "bucketed_prefill" not in caps and "prefix_serve" not in caps
+    eng = ServingEngine(cfg, ServeConfig(max_batch=2, max_seq_len=24,
+                                         max_new_tokens=3, decode_steps=2))
+    rng = np.random.default_rng(25)
+    prompts = _prompts(rng, cfg.vocab_size, [5, 9])
+    outs = eng.generate(prompts, 3)
+    for p, got in zip(prompts, outs):
+        assert got == _sequential_decode(cfg, eng.params, p, 3, 24)

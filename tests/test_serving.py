@@ -53,7 +53,7 @@ def _sequential_decode(cfg, params, prompt, n_new, cache_len):
 # ---------------------------------------------------------------------------
 
 def test_scheduler_fcfs_order():
-    s = Scheduler(ServeConfig(max_batch=4, prefill_chunk=2))
+    s = Scheduler(ServeConfig(max_batch=4, max_prefills_per_step=2))
     for i in range(5):
         assert s.submit(_req(i))
     # chunked pops preserve arrival order, bounded by chunk AND free slots
@@ -71,7 +71,7 @@ def test_scheduler_admission_control():
 
 
 def test_scheduler_priority_and_deadline_order():
-    s = Scheduler(ServeConfig(policy="priority", prefill_chunk=8))
+    s = Scheduler(ServeConfig(policy="priority", max_prefills_per_step=8))
     s.submit(_req(0, priority=0))
     s.submit(_req(1, priority=5, deadline=20.0))
     s.submit(_req(2, priority=5, deadline=10.0))
@@ -101,7 +101,7 @@ def test_scheduler_preemption_targets_lowest_priority():
 
 
 def test_scheduler_requeued_preemptee_goes_first():
-    s = Scheduler(ServeConfig(policy="priority", prefill_chunk=4))
+    s = Scheduler(ServeConfig(policy="priority", max_prefills_per_step=4))
     s.submit(_req(0, priority=1))
     victim = _req(99, priority=1)
     victim.tokens = [7, 8]
@@ -115,7 +115,7 @@ def test_scheduler_requeue_counter_no_collision_keeps_order():
     """Regression: ``arrival_seq = -1 - preempted`` collided two
     once-preempted requests at -2 (sort ties broke arbitrarily) and let a
     twice-preempted request leapfrog an earlier once-preempted one."""
-    s = Scheduler(ServeConfig(prefill_chunk=8))
+    s = Scheduler(ServeConfig(max_prefills_per_step=8))
     a, b = _req(0), _req(1)
     s.submit(a)
     s.submit(b)
@@ -139,7 +139,7 @@ def test_scheduler_requeue_counter_no_collision_keeps_order():
 
 
 def test_scheduler_push_front_skips_preemption_bookkeeping():
-    s = Scheduler(ServeConfig(prefill_chunk=8))
+    s = Scheduler(ServeConfig(max_prefills_per_step=8))
     s.submit(_req(0))
     (bounced,) = s.next_prefills(free_slots=1)
     s.push_front(bounced)                          # popped but not admitted
@@ -343,7 +343,7 @@ def test_metrics_deterministic_clock():
 def test_engine_matches_sequential_decode(dense_setup):
     cfg, _, params = dense_setup
     scfg = ServeConfig(max_batch=3, max_seq_len=48, max_new_tokens=6,
-                       prefill_chunk=2, decode_steps=2)
+                       max_prefills_per_step=2, decode_steps=2)
     eng = ServingEngine(cfg, scfg, params=params)
     rng = np.random.default_rng(0)
     prompts = _prompts(rng, cfg.vocab_size, [7, 12, 5, 9, 11, 6])
@@ -397,7 +397,7 @@ def test_engine_paged_matches_slotted(dense_setup):
     rng = np.random.default_rng(7)
     prompts = _prompts(rng, cfg.vocab_size, [7, 12, 5, 9])
     base = ServeConfig(max_batch=2, max_seq_len=40, max_new_tokens=5,
-                       prefill_chunk=2, decode_steps=2, page_size=8)
+                       max_prefills_per_step=2, decode_steps=2, page_size=8)
     ep = ServingEngine(cfg, base.replace(kv_layout="paged"), params=params)
     assert ep.paged
     out_p = ep.generate(prompts, 5)
@@ -436,7 +436,7 @@ def test_engine_paged_admission_bounce_drops_no_request(dense_setup):
     once abandoned its tail requests entirely (neither queued nor pooled)."""
     cfg, _, params = dense_setup
     scfg = ServeConfig(max_batch=3, max_seq_len=16, max_new_tokens=5,
-                       prefill_chunk=2, decode_steps=1, kv_layout="paged",
+                       max_prefills_per_step=2, decode_steps=1, kv_layout="paged",
                        page_size=4, num_pages=5)     # 4 usable pages
     eng = ServingEngine(cfg, scfg, params=params)
     rng = np.random.default_rng(13)
@@ -456,7 +456,7 @@ def test_engine_paged_priority_preempts_on_page_pressure(dense_setup):
     free) would wait out the low-priority request instead of preempting."""
     cfg, _, params = dense_setup
     scfg = ServeConfig(max_batch=2, max_seq_len=16, max_new_tokens=4,
-                       policy="priority", prefill_chunk=1, decode_steps=1,
+                       policy="priority", max_prefills_per_step=1, decode_steps=1,
                        kv_layout="paged", page_size=4, num_pages=5)
     eng = ServingEngine(cfg, scfg, params=params)
     rng = np.random.default_rng(17)
@@ -488,7 +488,7 @@ def test_engine_preemption_itl_excludes_gap(dense_setup):
     must not record the whole eviction->re-prefill span as one sample."""
     cfg, _, params = dense_setup
     scfg = ServeConfig(max_batch=1, max_seq_len=40, max_new_tokens=8,
-                       policy="priority", decode_steps=1, prefill_chunk=1)
+                       policy="priority", decode_steps=1, max_prefills_per_step=1)
     ticks = itertools.count()
     eng = ServingEngine(cfg, scfg, params=params,
                         clock=lambda: float(next(ticks)))
@@ -509,7 +509,7 @@ def test_engine_preemption_itl_excludes_gap(dense_setup):
 def test_engine_priority_preemption_end_to_end(dense_setup):
     cfg, _, params = dense_setup
     scfg = ServeConfig(max_batch=1, max_seq_len=40, max_new_tokens=8,
-                       policy="priority", decode_steps=1, prefill_chunk=1)
+                       policy="priority", decode_steps=1, max_prefills_per_step=1)
     eng = ServingEngine(cfg, scfg, params=params)
     rng = np.random.default_rng(3)
     low = eng.submit(list(rng.integers(0, cfg.vocab_size, (6,))),
