@@ -23,10 +23,23 @@ peak by the slotted section's *static capacity*, mixing two protocols).
 ``compile_count`` is the engine-lifetime number of prefill traces —
 bounded by the power-of-two bucketing, O(log max_seq_len).
 
-``--smoke`` runs a seconds-scale workload and asserts the emitted record
-still carries every schema key, so drift breaks CI instead of the next
-PR's analysis.  The ``run()`` hook returns harness-style
-``(name, us_per_call, derived)`` rows.
+Since the KV-layout PR the record also carries per-arch sections
+(``record["archs"]``) for the newly paged families — deepseek-v2-lite
+(MLA latent pages) and mixtral (ring-wrapped window pages) — each with the
+same paged/slotted/prefix schema, so the layout seam's acceptance numbers
+(paged peak below slotted, prefix_hit_rate) live in the trajectory.
+Workload knobs are clamped per arch to its ``KVLayout`` (pages must tile
+the attention window; sequences stay inside the window so the ring's lazy
+growth can undercut the slotted pool's window-sized preallocation), and
+serve capacity is provisioned one page above the workload maximum — the
+"slotted pins the worst case, paged holds actuals" regime paging exists
+for.
+
+``--smoke`` runs a seconds-scale workload *per smoke arch* (full, MLA and
+windowed layouts) and asserts the emitted records still carry every
+schema key, so drift breaks CI instead of the next PR's analysis.  The
+``run()`` hook returns harness-style ``(name, us_per_call, derived)``
+rows.
 """
 import argparse
 import json
@@ -38,6 +51,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 DEFAULTS = dict(arch="qwen2.5-14b", requests=16, batch=4, prompt_len=16,
                 max_new=12, page_size=8, prefix_len=64)
 
+#: per-arch sections recorded alongside the headline arch (the families
+#: the KV-layout seam brought onto the paged pool)
+BENCH_ARCHS = ("deepseek-v2-lite-16b", "mixtral-8x22b")
+#: archs the CI smoke gate exercises (one per page layout)
+SMOKE_ARCHS = ("qwen2.5-14b",) + BENCH_ARCHS
+
 #: schema gate: every emitted record must carry these (CI --smoke asserts);
 #: 'paged'/'prefix' are required only for archs with a paged decode path
 REQUIRED_KEYS = ("arch", "requests", "slotted", "kv_bytes_saved_ratio",
@@ -48,6 +67,24 @@ REQUIRED_SUMMARY_KEYS = ("tokens_per_sec", "ttft_p50_s", "itl_p50_s",
                          "prefill_tokens_saved", "compile_count")
 REQUIRED_PREFIX_KEYS = ("hit", "cold", "slotted_tokens_per_sec",
                         "prefill_tokens_saved_ratio", "token_identical")
+
+
+def _arch_kw(arch, kw):
+    """Clamp workload knobs to the arch's KVLayout: ring pages must tile
+    the attention window, and sequences stay inside it so the ring's lazy
+    growth (plus prefix sharing) can undercut the slotted pool."""
+    from repro.configs import get_config
+    from repro.models import registry
+
+    layout = registry.build(get_config(arch, smoke=True)).kv_layout
+    kw = dict(kw, arch=arch)
+    if layout is not None and layout.window:
+        w = layout.window
+        kw["page_size"] = min(kw["page_size"], layout.max_page_size())
+        kw["prompt_len"] = min(kw["prompt_len"], max(w // 2, 1))
+        kw["max_new"] = min(kw["max_new"], max(w // 4, 1))
+        kw["prefix_len"] = min(kw["prefix_len"], w)
+    return kw
 
 
 def _make_engine(arch, batch, max_seq, max_new, kv_layout, page_size,
@@ -67,11 +104,14 @@ def _serve_once(arch, requests, batch, prompt_len, max_new, kv_layout,
                 page_size):
     import numpy as np
 
-    # page headroom beyond the live worst case: refcount-0 cached pages
-    # survive between passes, so the measured pass serves repeat traffic
-    # out of the prefix cache (worst-case-only provisioning reclaims every
-    # cached page before its prompt comes around again)
-    max_seq = prompt_len + max_new
+    # serve capacity one page above the workload maximum (real deployments
+    # provision headroom; the slotted pool pins it, the paged pool holds
+    # actual lengths — the gap is the paging win).  Page headroom beyond
+    # the live worst case: refcount-0 cached pages survive between passes,
+    # so the measured pass serves repeat traffic out of the prefix cache
+    # (worst-case-only provisioning reclaims every cached page before its
+    # prompt comes around again)
+    max_seq = prompt_len + max_new + page_size
     pages = 3 * batch * (-(-max_seq // page_size)) + 1
     cfg, engine = _make_engine(arch, batch, max_seq, max_new,
                                kv_layout, page_size, num_pages=pages)
@@ -163,13 +203,13 @@ def _bench(**kw):
     """{'paged': summary, 'slotted': summary, 'kv_bytes_saved_ratio': x,
     'prefix': {...}}.
 
-    Archs without a paged decode path (recurrent / MLA / windowed) bench
-    the slotted layout only — no 'paged'/'prefix' section, ratio 0."""
+    Archs without a paged decode path (recurrent families — no KVLayout)
+    bench the slotted layout only: no 'paged'/'prefix' section, ratio 0."""
     from repro.configs import get_config
     from repro.models import registry
 
-    paged_ok = registry.build(
-        get_config(kw["arch"], smoke=True)).paged_decode_fn is not None
+    paged_ok = "paged_serve" in registry.build(
+        get_config(kw["arch"], smoke=True)).capabilities()
     record = {}
     for layout in (("paged", "slotted") if paged_ok else ("slotted",)):
         is_paged, s = _serve_once(kw["arch"], kw["requests"], kw["batch"],
@@ -198,7 +238,8 @@ def check_schema(record):
     """Raise AssertionError when the emitted record drifts from the schema
     later analysis (and the acceptance trajectory) depends on.  Slotted-only
     archs (no paged decode path) legitimately omit 'paged' and carry an
-    empty 'prefix' section."""
+    empty 'prefix' section.  Per-arch sections under 'archs' (the KV-layout
+    families) carry the same schema recursively."""
     for k in REQUIRED_KEYS:
         assert k in record, f"BENCH_serving.json schema drift: missing {k!r}"
     assert ("paged" in record) == bool(record["prefix"]), \
@@ -211,6 +252,8 @@ def check_schema(record):
     if record.get("prefix"):
         for k in REQUIRED_PREFIX_KEYS:
             assert k in record["prefix"], f"schema drift: missing prefix.{k}"
+    for arch, sub in record.get("archs", {}).items():
+        check_schema(sub)
 
 
 def run(**overrides):
@@ -261,17 +304,37 @@ def main():
     if args.smoke:
         kw.update(requests=6, batch=2, prompt_len=8, max_new=4,
                   page_size=4, prefix_len=16)
-    r = _bench(**kw)
+        # one workload per page layout: full (contiguous k/v), MLA
+        # (latent), windowed (ring) — schema asserted for each
+        for arch in SMOKE_ARCHS:
+            akw = _arch_kw(arch, kw)
+            r = _bench(**akw)
+            record = {"arch": arch, "requests": akw["requests"], **r}
+            check_schema(record)
+            hit = (record["prefix"] or {}).get("hit", {})
+            print(f"smoke OK [{arch}]: schema intact; "
+                  f"prefix_hit_rate={hit.get('prefix_hit_rate', 0.0):.2f} "
+                  f"kv_saved={record['kv_bytes_saved_ratio']:.2f}")
+        return
     record = {
         "arch": kw["arch"], "smoke": True, "requests": kw["requests"],
         "batch_slots": kw["batch"], "prompt_len": kw["prompt_len"],
-        "max_new": kw["max_new"], "page_size": kw["page_size"], **r,
+        "max_new": kw["max_new"], "page_size": kw["page_size"],
+        **_bench(**kw),
     }
+    # per-arch sections for the KV-layout families (latent + ring pages)
+    record["archs"] = {}
+    for arch in BENCH_ARCHS:
+        if arch == kw["arch"]:
+            continue
+        akw = _arch_kw(arch, kw)
+        sub = _bench(**akw)
+        record["archs"][arch] = {
+            "arch": arch, "requests": akw["requests"],
+            "prompt_len": akw["prompt_len"], "max_new": akw["max_new"],
+            "page_size": akw["page_size"], **sub,
+        }
     check_schema(record)
-    if args.smoke:
-        print("smoke OK: schema intact; prefix_hit_rate="
-              f"{(record['prefix'] or {}).get('hit', {}).get('prefix_hit_rate', 0.0):.2f}")
-        return
     Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
     print(json.dumps(record, indent=2))
     print(f"wrote {args.out}")

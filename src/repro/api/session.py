@@ -324,23 +324,47 @@ class Session:
             auto["max_new_tokens"] = max_new
         auto.update(overrides)
         seq = auto.get("max_seq_len", ServeConfig.max_seq_len)
-        if "page_size" not in auto and ServeConfig.page_size > seq:
-            # auto-sized short batches: shrink pages rather than error —
-            # floor_pow2 keeps the default enable_prefix_cache (block
-            # hashing at page granularity) valid
+        if "page_size" not in auto:
+            # auto-size pages to the model's layout: shrink for short
+            # batches and to tile windowed-attention rings
+            # (KVLayout.max_page_size); floor_pow2 keeps the default
+            # enable_prefix_cache block hashing valid
             from repro.configs.base import floor_pow2
-            auto["page_size"] = floor_pow2(seq)
+            cap = floor_pow2(seq)
+            layout = self.bundle.kv_layout
+            if layout is not None:
+                cap = min(cap, layout.max_page_size())
+            if ServeConfig.page_size > cap:
+                auto["page_size"] = cap
         return ServeConfig(**auto)
+
+    def _drop_engine(self, key) -> None:
+        """Retire one cached engine, invalidating its prefix cache first —
+        a retired pool's cached pages must never survive into a later
+        engine's view of 'cached' state."""
+        eng = self._engines.pop(key)
+        if getattr(eng, "paged", False):
+            eng.pool.clear_prefix_cache()
+        if self._last_engine is eng:
+            self._last_engine = None
 
     def _engine_for(self, serve_cfg: ServeConfig):
         from repro.serving import ServingEngine
+        # switching kv_layout (or mutating the model's attn_kind) on a live
+        # Session retires every engine built for a different layout: a
+        # stale ServeConfig-keyed engine would otherwise survive with an
+        # incompatible pool (and a prefix cache the caller believes gone)
+        for key in [k for k, e in self._engines.items()
+                    if k.kv_layout != serve_cfg.kv_layout
+                    or e.model_cfg.attn_kind != self.model.attn_kind]:
+            self._drop_engine(key)
         eng = self._engines.pop(serve_cfg, None)
         if eng is None:
             eng = ServingEngine(self.model, serve_cfg, params=self.params,
                                 mesh_cfg=self.mesh_cfg, seed=self.seed)
         self._engines[serve_cfg] = eng          # re-insert = LRU touch
         while len(self._engines) > _MAX_ENGINES:
-            self._engines.pop(next(iter(self._engines)))
+            self._drop_engine(next(iter(self._engines)))
         self._last_engine = eng
         return eng
 

@@ -241,16 +241,20 @@ class ServeConfig:
     the batched decode exactly once; requests are inserted into / evicted
     from KV-cache slots individually (no batch re-prefill).
 
-    KV memory is page-granular for the attention (lm) family
-    (``kv_layout="auto"`` picks paged when the bundle supports it): pages of
-    ``page_size`` tokens are allocated lazily as a request's position grows
-    and returned on eviction, so cache bytes held track actual sequence
-    lengths instead of ``max_batch x max_seq_len``.  Recurrent families
-    (RG-LRU / RWKV: O(1) state per slot) and MLA / windowed attention stay
+    KV memory is page-granular for every family with a ``KVLayout``
+    (``kv_layout="auto"`` picks paged when the bundle declares one): per-
+    head k/v pages for full attention, ring-wrapped window pages for
+    sliding-window/local attention (a page must fit and tile the window —
+    see ``check_window``), latent ckv/krope pages for MLA.  Pages of
+    ``page_size`` tokens are allocated lazily as a request's position
+    grows and returned on eviction, so cache bytes held track actual
+    sequence lengths instead of ``max_batch x max_seq_len``.  Recurrent
+    families (RG-LRU / RWKV: O(1) state per slot — nothing to page) stay
     on the slotted pool.  ``num_pages`` provisions the shared pool
     (0 = worst case ``max_batch * ceil(max_seq_len / page_size)`` + the
-    reserved trash page); under-provisioning oversubscribes memory — the
-    engine preempts the youngest request on page pressure.
+    reserved trash page; windowed layouts cap the per-slot worst case at
+    ``window // page_size``); under-provisioning oversubscribes memory —
+    the engine preempts the youngest request on page pressure.
 
     Prefill-path knobs (engine-level optimization pass, see
     ``serving/engine.py``):
@@ -373,6 +377,17 @@ class ServeConfig:
                 f"num_pages={self.num_pages} cannot hold one max_seq_len "
                 f"request (needs >= {self.pages_per_slot + 1} pages: "
                 f"{self.pages_per_slot} per slot + the reserved trash page)")
+
+    def check_window(self, window: int) -> None:
+        """Model-aware validation for windowed-attention families (the
+        engine calls this once it knows the family's ``KVLayout``): ring-
+        wrapped window pages must *tile* the window.  Delegates to the
+        layout seam's single implementation (imported at call time —
+        ``repro.serving`` sits above this module)."""
+        if self.kv_layout == "slotted":
+            return
+        from repro.serving.layouts import check_window_page_size
+        check_window_page_size(self.page_size, window)
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)

@@ -1,20 +1,35 @@
-"""Paged-attention decode TPU kernel (vLLM-style, scalar-prefetched pages).
+"""Paged-attention decode TPU kernels (vLLM-style, scalar-prefetched pages).
 
-One decode step attends each slot's single query against K/V scattered
+One decode step attends each slot's single query against a cache scattered
 across a global page pool.  The page table is a *scalar-prefetch* operand
 (``pltpu.PrefetchScalarGridSpec``): BlockSpec index maps read it to decide
 which physical page to DMA into VMEM for each grid step, so HBM traffic is
 ``pages_held``, not ``slots x max_pages`` — the whole point of paging.
 
-Grid: ``(slots, KV, n_table)`` with the page dimension sequential
+Two kernels, one per page geometry (see ``repro.serving.layouts``):
+
+  * ``paged_attention_kernel`` — per-head k/v pages for GQA, covering both
+    the contiguous ("kv") and ring-wrapped ("window") layouts.  For the
+    ring, a cell's absolute position is arithmetic, not storage:
+    ``p = cur - ((cur - idx) mod window)`` with ``cur = length - 1``; the
+    ``p >= 0`` predicate *is* the sliding-window mask, so out-of-window
+    cells (whose pages may have rotated to trash) never score.
+  * ``paged_mla_kernel`` — latent (ckv/krope) pages for absorbed MLA
+    decode: scores are ``q_lat . ckv + q_rope . krope`` and the output
+    stays in the latent space (the caller up-projects through W_uv), so
+    the kernel's HBM traffic is the *compressed* cache — the reason MLA
+    pages at the latent rank instead of materialized heads.
+
+Grid: ``(slots[, KV], n_table)`` with the page dimension sequential
 ("arbitrary"); the online-softmax state (m, l, acc) lives in VMEM scratch
 and carries across a slot's pages, exactly like the kv-block dimension of
-``flash_attention``.  Pages past a slot's length are skipped at grid level
-(``pl.when``) — their table entries point at the trash page (page 0) and
-cost no MXU cycles.
+``flash_attention``.  Pages past a slot's valid cells are skipped at grid
+level (``pl.when``) — their table entries point at the trash page (page 0)
+and cost no MXU cycles.
 
 Layouts (see ref.py): q [slots, KV, G, hd]; k/v pages [P, ps, KV, hd];
-page_table [slots, n_table] int32; lengths [slots] int32.
+q_lat [slots, H, R]; ckv pages [P, ps, R]; page_table [slots, n_table]
+int32; lengths [slots] int32.
 """
 from __future__ import annotations
 
@@ -30,7 +45,7 @@ from repro.kernels.common import NEG_INF, CompilerParams as _CompilerParams
 
 def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                   m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
-                  n_table: int):
+                  n_table: int, window: int):
     s = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -42,9 +57,12 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     length = len_ref[s]
     base = p * page_size
+    # grid-level skip: cells entirely past the slot's valid tokens (for the
+    # ring the valid cell count saturates at the window — beyond that every
+    # cell holds a live in-window position)
+    limit = length if window == 0 else jnp.minimum(length, window)
 
-    # grid-level skip: page entirely past the slot's valid tokens
-    @pl.when(base < length)
+    @pl.when(base < limit)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)               # [G, hd]
         k = k_ref[0, :, 0].astype(jnp.float32)            # [ps, hd]
@@ -52,9 +70,16 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         sc = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [G, ps]
-        tok = base + jax.lax.broadcasted_iota(
-            jnp.int32, sc.shape, 1)                       # in-page positions
-        sc = jnp.where(tok < length, sc, NEG_INF)
+        idx = base + jax.lax.broadcasted_iota(
+            jnp.int32, sc.shape, 1)                       # cell indices
+        if window:
+            # ring arithmetic: the cell's absolute position; p >= 0 is the
+            # window mask (and masks never-written cells of short slots)
+            cur = length - 1
+            tok = cur - jnp.mod(cur - idx, window)
+            sc = jnp.where(tok >= 0, sc, NEG_INF)
+        else:
+            sc = jnp.where(idx < length, sc, NEG_INF)
 
         m_prev = m_scr[...]
         l_prev = l_scr[...]
@@ -74,9 +99,10 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention_kernel(q, k_pages, v_pages, page_table, lengths, *,
-                           interpret: bool = False):
+                           window: int = 0, interpret: bool = False):
     """q: [slots, KV, G, hd]; k/v_pages: [P, ps, KV, hd];
     page_table: [slots, n_table] int32; lengths: [slots] int32.
+    ``window > 0`` selects the ring-cell position mapping.
 
     Returns [slots, KV, G, hd] in q.dtype.
     """
@@ -86,7 +112,7 @@ def paged_attention_kernel(q, k_pages, v_pages, page_table, lengths, *,
     scale = hd ** -0.5
 
     kernel = functools.partial(_paged_kernel, scale=scale, page_size=ps,
-                               n_table=n_table)
+                               n_table=n_table, window=window)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -116,3 +142,94 @@ def paged_attention_kernel(q, k_pages, v_pages, page_table, lengths, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(page_table, lengths, q, k_pages, v_pages)
+
+
+def _paged_mla_kernel(pt_ref, len_ref, ql_ref, qr_ref, ckv_ref, kr_ref,
+                      o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                      page_size: int, n_table: int):
+    s = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[s]
+    base = p * page_size
+
+    @pl.when(base < length)
+    def _compute():
+        ql = ql_ref[0].astype(jnp.float32)                # [H, R]
+        qr = qr_ref[0].astype(jnp.float32)                # [H, rp]
+        ckv = ckv_ref[0].astype(jnp.float32)              # [ps, R]
+        kr = kr_ref[0].astype(jnp.float32)                # [ps, rp]
+        sc = jax.lax.dot_general(
+            ql, ckv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        sc = sc + jax.lax.dot_general(
+            qr, kr, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        sc = sc * scale                                   # [H, ps]
+        tok = base + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        sc = jnp.where(tok < length, sc, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        pr = jnp.exp(sc - m_new)                          # [H, ps]
+        l_scr[...] = l_prev * corr + jnp.sum(pr, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            pr, ckv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # [H, R]
+        m_scr[...] = m_new
+
+    @pl.when(p == n_table - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_mla_kernel(q_lat, q_rope, ckv_pages, krope_pages, page_table,
+                     lengths, *, scale: float, interpret: bool = False):
+    """q_lat: [slots, H, R]; q_rope: [slots, H, rp]; ckv_pages: [P, ps, R];
+    krope_pages: [P, ps, rp]; page_table: [slots, n_table] int32; lengths:
+    [slots] int32.  ``scale`` is the qk-dimension softmax scale.
+
+    Returns the latent-space output [slots, H, R] in q_lat.dtype.
+    """
+    slots, H, R = q_lat.shape
+    rp = q_rope.shape[-1]
+    _, ps, _ = ckv_pages.shape
+    n_table = page_table.shape[1]
+
+    kernel = functools.partial(_paged_mla_kernel, scale=scale, page_size=ps,
+                               n_table=n_table)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(slots, n_table),
+        in_specs=[
+            pl.BlockSpec((1, H, R), lambda s, p, pt, ln: (s, 0, 0)),
+            pl.BlockSpec((1, H, rp), lambda s, p, pt, ln: (s, 0, 0)),
+            pl.BlockSpec((1, ps, R), lambda s, p, pt, ln: (pt[s, p], 0, 0)),
+            pl.BlockSpec((1, ps, rp), lambda s, p, pt, ln: (pt[s, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, R), lambda s, p, pt, ln: (s, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),    # m
+            pltpu.VMEM((H, 1), jnp.float32),    # l
+            pltpu.VMEM((H, R), jnp.float32),    # acc (latent space)
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, H, R), q_lat.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, lengths, q_lat, q_rope, ckv_pages, krope_pages)

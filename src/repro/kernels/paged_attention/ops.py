@@ -1,32 +1,63 @@
-"""jit'd public wrapper: paged-attention decode in the serving pool's layout.
+"""jit'd public wrappers: paged-attention decode in the serving pool's
+layouts.
 
 Dispatch mirrors ``flash_attention``: the traced jnp path (ref semantics,
 gather-all) is the portable default the serving engine runs everywhere; the
-Pallas kernel (``use_kernel=True``) is the TPU fast path whose HBM traffic
-scales with pages actually held.  Both share the head convention of
-``repro.models.attention`` (H reshaped to (KV, G))."""
+Pallas kernels (``use_kernel=True``) are the TPU fast path whose HBM
+traffic scales with pages actually held.  One wrapper per page geometry:
+``paged_attention`` covers the per-head k/v layouts (contiguous "kv" and
+ring "window" — ``window > 0`` flips the position mapping), and
+``paged_mla_attention`` the latent ckv/krope layout (absorbed MLA decode;
+scores and output stay in the latent space).  All share the head
+conventions of ``repro.models.attention``."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_attention_kernel
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (paged_attention_kernel,
+                                                  paged_mla_kernel)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_mla_attention_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("window", "use_kernel", "interpret"))
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
-                    use_kernel: bool = False, interpret: bool = False):
+                    window: int = 0, use_kernel: bool = False,
+                    interpret: bool = False):
     """q: [slots, H, hd]; k/v_pages: [P, ps, KV, hd]; page_table:
     [slots, n_table] int32 (pad with 0, the trash page); lengths: [slots]
-    int32 (valid tokens per slot).  Returns [slots, H, hd] in q.dtype."""
+    int32 (valid tokens per slot).  ``window > 0`` selects the ring-cell
+    position mapping (sliding-window mask included).  Returns
+    [slots, H, hd] in q.dtype."""
     slots, H, hd = q.shape
     KV = k_pages.shape[2]
     if not use_kernel:
-        return paged_attention_ref(q, k_pages, v_pages, page_table, lengths)
+        return paged_attention_ref(q, k_pages, v_pages, page_table, lengths,
+                                   window=window)
     G = H // KV
     out = paged_attention_kernel(q.reshape(slots, KV, G, hd), k_pages,
                                  v_pages, page_table, lengths,
-                                 interpret=interpret)
+                                 window=window, interpret=interpret)
     return out.reshape(slots, H, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "use_kernel", "interpret"))
+def paged_mla_attention(q_lat, q_rope, ckv_pages, krope_pages, page_table,
+                        lengths, *, scale: float, use_kernel: bool = False,
+                        interpret: bool = False):
+    """Absorbed MLA decode against latent pages.  q_lat: [slots, H, R]
+    (queries absorbed through W_uk); q_rope: [slots, H, rp]; ckv_pages:
+    [P, ps, R]; krope_pages: [P, ps, rp]; ``scale`` the qk-dimension
+    softmax scale.  Returns the latent-space output [slots, H, R] — the
+    caller up-projects through W_uv."""
+    if not use_kernel:
+        return paged_mla_attention_ref(q_lat, q_rope, ckv_pages,
+                                       krope_pages, page_table, lengths,
+                                       scale=scale)
+    return paged_mla_kernel(q_lat, q_rope, ckv_pages, krope_pages,
+                            page_table, lengths, scale=scale,
+                            interpret=interpret)

@@ -1,21 +1,30 @@
-"""Pure-jnp oracle for the paged-attention decode kernel.
+"""Pure-jnp oracles for the paged-attention decode kernels.
 
-Layouts (the serving pool's native shapes):
+Layouts (the serving pool's native shapes, one per ``KVLayout``):
   * ``q``           [slots, H, hd]        — one query token per decode slot
-  * ``k/v_pages``   [P, ps, KV, hd]       — global page pool (P pages of ps
-                                            tokens; page 0 is the reserved
-                                            trash page, never allocated)
-  * ``page_table``  [slots, n] int32      — per-slot page ids; entries past a
-                                            slot's held pages point at page 0
-  * ``lengths``     [slots] int32         — tokens valid per slot; token t of
-                                            slot s lives at page
-                                            ``page_table[s, t // ps]``,
-                                            offset ``t % ps``
+  * ``k/v_pages``   [P, ps, KV, hd]       — per-head page pool ("kv" and
+                                            ring "window" layouts; page 0
+                                            is the reserved trash page)
+  * ``ckv/krope_pages`` [P, ps, R] / [P, ps, rp] — latent page pool (MLA)
+  * ``page_table``  [slots, n] int32      — per-slot page ids; entries past
+                                            a slot's held pages point at
+                                            page 0
+  * ``lengths``     [slots] int32         — tokens cached per slot
+
+Position mapping is the layout's:
+  * contiguous — token t of slot s lives at page ``page_table[s, t // ps]``,
+    offset ``t % ps``; validity is ``index < length``.
+  * ring (``window > 0``) — the table is a ring of ``window // ps`` cells;
+    ring index i holds the *latest* absolute position ``p = cur -
+    ((cur - i) mod window)`` with ``cur = length - 1``; validity is
+    ``p >= 0`` (the formula already confines p to the window, which is
+    exactly the sliding-window mask — out-of-window cells whose pages
+    rotated to trash resolve to positions the mask excludes).
 
 GQA head convention matches ``repro.models.attention``: head h = kv-head
-``h // G`` (reshape H -> (KV, G)).  Materializes the fully gathered
-[slots, n*ps] score matrix — correctness only; the Pallas kernel only ever
-touches pages a slot actually holds.
+``h // G`` (reshape H -> (KV, G)).  These materialize the fully gathered
+[slots, n*ps] score matrix — correctness only; the Pallas kernels only
+ever touch pages a slot actually holds.
 """
 from __future__ import annotations
 
@@ -25,8 +34,20 @@ import jax.numpy as jnp
 from repro.kernels.common import NEG_INF
 
 
-def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
-    """Returns [slots, H, hd] in q.dtype."""
+def ring_positions(lengths, n_tokens: int, window: int):
+    """Absolute position held by each ring index (see module docstring).
+
+    lengths [slots] int32 -> ([slots, n_tokens] positions, validity)."""
+    cur = lengths[:, None] - 1
+    i = jnp.arange(n_tokens)[None, :]
+    p = cur - jnp.mod(cur - i, window)
+    return p, p >= 0
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                        window: int = 0):
+    """Returns [slots, H, hd] in q.dtype.  ``window > 0`` selects the ring
+    layout's position mapping (sliding-window mask included)."""
     S, H, hd = q.shape
     _, ps, KV, _ = k_pages.shape
     n = page_table.shape[1]
@@ -34,13 +55,45 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
     scale = hd ** -0.5
     k = k_pages[page_table].reshape(S, n * ps, KV, hd)     # gather-all
     v = v_pages[page_table].reshape(S, n * ps, KV, hd)
+    if window:
+        _, valid = ring_positions(lengths, n * ps, window)
+    else:
+        valid = jnp.arange(n * ps)[None, :] < lengths[:, None]  # [S, n*ps]
     q_ = q.reshape(S, KV, G, hd)
     s = jnp.einsum("skgh,stkh->skgt", q_.astype(jnp.float32),
                    k.astype(jnp.float32),
                    preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(n * ps)[None, :] < lengths[:, None]  # [S, n*ps]
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("skgt,stkh->skgh", p, v.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
     return out.reshape(S, H, hd).astype(q.dtype)
+
+
+def paged_mla_attention_ref(q_lat, q_rope, ckv_pages, krope_pages,
+                            page_table, lengths, *, scale: float):
+    """Absorbed MLA decode against latent pages (contiguous layout).
+
+    q_lat [slots, H, R] — queries absorbed through W_uk into the latent
+    space; q_rope [slots, H, rp]; ckv_pages [P, ps, R]; krope_pages
+    [P, ps, rp].  ``scale`` is the *qk-dimension* softmax scale (the latent
+    rank is not the score dimension).  Returns the latent-space output
+    [slots, H, R] in q_lat.dtype — the caller up-projects through W_uv.
+    """
+    S, H, R = q_lat.shape
+    _, ps, _ = ckv_pages.shape
+    n = page_table.shape[1]
+    ckv = ckv_pages[page_table].reshape(S, n * ps, R)
+    kr = krope_pages[page_table].reshape(S, n * ps, krope_pages.shape[-1])
+    s = jnp.einsum("shr,str->sht", q_lat.astype(jnp.float32),
+                   ckv.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("shr,str->sht", q_rope.astype(jnp.float32),
+                       kr.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    valid = jnp.arange(n * ps)[None, :] < lengths[:, None]   # [S, n*ps]
+    s = jnp.where(valid[:, None, :], s * scale, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("sht,str->shr", p, ckv.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q_lat.dtype)

@@ -17,7 +17,6 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.configs.base import floor_pow2
 from repro.launch import cli
 
 
@@ -47,11 +46,13 @@ def main():
     ap.add_argument("--decode-steps", type=int, default=4)
     ap.add_argument("--kv-layout", choices=("auto", "paged", "slotted"),
                     default="auto",
-                    help="KV-cache layout: page-granular (attention lm "
-                         "family) vs slot-granular preallocation")
+                    help="KV-cache layout: page-granular (any family with "
+                         "a KVLayout: full/swa/local k-v pages, MLA latent "
+                         "pages) vs slot-granular preallocation")
     ap.add_argument("--page-size", type=int, default=None,
                     help="tokens per KV page (paged layout; default 16, "
-                         "auto-shrunk for short runs)")
+                         "auto-shrunk for short runs and to tile the "
+                         "attention window of swa/local families)")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="shared page pool size; 0 = worst case, less "
                          "oversubscribes (engine preempts on pressure)")
@@ -79,6 +80,11 @@ def main():
                   flush=True)
 
     seq_cap = args.prompt_len + args.max_new
+    # without --page-size the Session auto-sizes pages from the model's
+    # KVLayout (shrinks for short runs, tiles swa/local windows); an
+    # explicit --page-size that doesn't fit should fail validation
+    page_kw = {} if args.page_size is None else \
+        {"page_size": args.page_size}
     outs = session.serve(
         prompts, max_new=args.max_new, stream=stream,
         max_batch=args.batch, max_queue=args.max_queue,
@@ -89,12 +95,7 @@ def main():
         prefill_bucket=not args.no_prefill_bucket,
         decode_steps=args.decode_steps,
         kv_layout=args.kv_layout,
-        # shrink only the *default* page size for short runs (power of two,
-        # so the prefix cache's block hashing stays valid); an explicit
-        # --page-size that doesn't fit should fail ServeConfig validation
-        page_size=(min(16, floor_pow2(seq_cap))
-                   if args.page_size is None else args.page_size),
-        num_pages=args.num_pages)
+        num_pages=args.num_pages, **page_kw)
     engine = session.engine
     s = engine.metrics.summary()
     if args.json:

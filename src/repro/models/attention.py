@@ -298,17 +298,26 @@ def decode_attend(q, cache, *, window: int = 0):
 # Decode: paged KV cache (global page pool shared by all slots)
 # ---------------------------------------------------------------------------
 
-def paged_cache_update(kv, k_new, v_new, page_table, pos):
+def _paged_window(cfg) -> int:
+    """Ring-layout window of a GQA family (0 = contiguous pages)."""
+    return cfg.window if cfg.attn_kind in ("swa", "local") else 0
+
+
+def paged_cache_update(kv, k_new, v_new, page_table, pos, *, window: int = 0):
     """Write one decode step's K/V into the shared page pool.
 
     kv: {"k","v"}: [P, ps, KV, hd] (one layer's pages); k_new/v_new
     [slots, 1, KV, hd]; page_table [slots, n] int32; pos [slots] int32 —
     token t of slot s lands in page ``page_table[s, t // ps]`` at offset
-    ``t % ps``.  Slots without a request carry an all-trash table (page 0),
-    so their writes clobber only the reserved trash page.
+    ``t % ps`` (contiguous), or — ring layout, ``window > 0`` — in cell
+    ``(t % window) // ps`` of the slot's ring table, same in-page offset
+    (the pool guarantees ``ps | window``).  Slots without a request carry
+    an all-trash table (page 0), so their writes clobber only the reserved
+    trash page.
     """
     ps = kv["k"].shape[1]
-    page = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    idx = pos % window if window else pos
+    page = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
     off = pos % ps
     return {
         "k": kv["k"].at[page, off].set(k_new[:, 0].astype(kv["k"].dtype)),
@@ -316,27 +325,65 @@ def paged_cache_update(kv, k_new, v_new, page_table, pos):
     }
 
 
-def paged_prefill_write(kv, k_new, v_new, page_ids, start, n_valid):
+def paged_latent_update(kv, ckv_new, krope_new, page_table, pos):
+    """Latent-layout twin of ``paged_cache_update``: kv {"ckv": [P, ps, R],
+    "krope": [P, ps, rp]}; ckv_new/krope_new [slots, 1, ·] (MLA decode
+    caches the compressed latents, never materialized heads)."""
+    ps = kv["ckv"].shape[1]
+    page = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    off = pos % ps
+    return {
+        "ckv": kv["ckv"].at[page, off].set(
+            ckv_new[:, 0].astype(kv["ckv"].dtype)),
+        "krope": kv["krope"].at[page, off].set(
+            krope_new[:, 0].astype(kv["krope"].dtype)),
+    }
+
+
+def _chunk_targets(page_ids, start, n_valid, S: int, ps: int,
+                   window: int = 0):
+    """(page, off) scatter targets for one prefill chunk of S bucket slots:
+    token i holds absolute position ``start + i``; bucket padding
+    (i >= n_valid) routes to the reserved trash page 0 so the fixed bucket
+    shape never scatters garbage into held pages."""
+    i = jnp.arange(S)
+    pos = start + i
+    idx = pos % window if window else pos
+    blk = jnp.clip(idx // ps, 0, page_ids.shape[0] - 1)
+    page = jnp.where(i < n_valid, page_ids[blk], 0)
+    return page, pos % ps
+
+
+def paged_prefill_write(kv, k_new, v_new, page_ids, start, n_valid, *,
+                        window: int = 0):
     """Write one prefill chunk's K/V into the shared page pool.
 
     kv: {"k","v"}: [P, ps, KV, hd] (one layer's pages); k_new/v_new
     [1, S, KV, hd] (S = padded bucket length); page_ids [n] int32 — one
-    request's page-table row; start / n_valid traced scalars.  Token i of
-    the chunk holds absolute position ``start + i`` and lands in page
-    ``page_ids[(start + i) // ps]`` at offset ``(start + i) % ps``; bucket
-    padding (i >= n_valid) is routed to the reserved trash page 0 so the
-    fixed bucket shape never scatters garbage into held pages.
+    request's page-table row; start / n_valid traced scalars.  Position
+    mapping per ``_chunk_targets`` (contiguous or ring).
     """
     ps = kv["k"].shape[1]
-    S = k_new.shape[1]
-    i = jnp.arange(S)
-    pos = start + i
-    blk = jnp.clip(pos // ps, 0, page_ids.shape[0] - 1)
-    page = jnp.where(i < n_valid, page_ids[blk], 0)
-    off = pos % ps
+    page, off = _chunk_targets(page_ids, start, n_valid, k_new.shape[1], ps,
+                               window)
     return {
         "k": kv["k"].at[page, off].set(k_new[0].astype(kv["k"].dtype)),
         "v": kv["v"].at[page, off].set(v_new[0].astype(kv["v"].dtype)),
+    }
+
+
+def paged_latent_prefill_write(kv, ckv_new, krope_new, page_ids, start,
+                               n_valid):
+    """Latent-layout twin of ``paged_prefill_write``: ckv_new [1, S, R],
+    krope_new [1, S, rp] into {"ckv", "krope"} pages (contiguous)."""
+    ps = kv["ckv"].shape[1]
+    page, off = _chunk_targets(page_ids, start, n_valid, ckv_new.shape[1],
+                               ps)
+    return {
+        "ckv": kv["ckv"].at[page, off].set(
+            ckv_new[0].astype(kv["ckv"].dtype)),
+        "krope": kv["krope"].at[page, off].set(
+            krope_new[0].astype(kv["krope"].dtype)),
     }
 
 
@@ -345,15 +392,22 @@ def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid):
 
     x [1, S, D] — one request's chunk, padded to a power-of-two bucket;
     positions = start + arange(S); page_ids [n] the request's page-table
-    row.  The chunk's K/V are written into the pool first (pages covering
-    the cached prefix are *never* written: the chunk starts at ``start`` >=
-    prefix length, and padding writes hit the trash page), then the chunk's
-    queries attend causally over everything cached so far — shared prefix
-    pages, earlier chunks, and the chunk itself — via a gather of the
-    request's pages.  Returns (out [1, S, D], new_kv).
+    row.  Contiguous layout: the chunk's K/V are written into the pool
+    first (pages covering the cached prefix are *never* written: the chunk
+    starts at ``start`` >= prefix length, and padding writes hit the trash
+    page), then the chunk's queries attend causally over everything cached
+    so far — shared prefix pages, earlier chunks, and the chunk itself —
+    via a gather of the request's pages.
 
-    Requires ``attn_kind == "full"`` (same contiguous-page constraint as
-    ``paged_attention_apply``).
+    Ring layout (sliding-window/local): the chunk's writes *wrap onto*
+    cells its own early queries still need, so the ring is gathered as a
+    snapshot BEFORE the write and the chunk attends over [snapshot, chunk]
+    with ring-arithmetic key positions; the sliding-window mask inside
+    ``attention_core`` keeps every overwritten (out-of-window) snapshot
+    cell out of the scores.  The engine caps ring chunks at ``window``
+    tokens, so no two writes in one chunk collide.
+
+    Returns (out [1, S, D], new_kv).
     """
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -361,19 +415,40 @@ def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid):
     cd = x.dtype
     ps = kv["k"].shape[1]
     n = page_ids.shape[0]
+    window = _paged_window(cfg)
 
     q, k, v = _project_qkv_rope(cfg, p, x, positions)
-    new_kv = paged_prefill_write(kv, k, v, page_ids, start, n_valid)
-    # gather this request's pages into a contiguous [1, n*ps] view; absolute
-    # key positions are the identity, validity = written-so-far bound (trash
-    # entries in the table tail sit past the bound, so they are never seen)
-    kk = new_kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
-    vv = new_kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
-    k_pos = jnp.arange(n * ps)
-    kv_valid = (k_pos < start + n_valid)[None, :]
-    out = attention_core(q, kk.astype(cd), vv.astype(cd), positions, k_pos,
-                         causal=True, q_block=cfg.attn_q_block,
-                         kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
+    if window:
+        ring_k = kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
+        ring_v = kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
+        cur = start - 1
+        i = jnp.arange(n * ps)
+        ring_pos = cur - jnp.mod(cur - i, window)        # < 0 = never written
+        new_kv = paged_prefill_write(kv, k, v, page_ids, start, n_valid,
+                                     window=window)
+        kk = jnp.concatenate([ring_k.astype(cd), k], axis=1)
+        vv = jnp.concatenate([ring_v.astype(cd), v], axis=1)
+        k_pos = jnp.concatenate(
+            [ring_pos[None, :], (start + jnp.arange(S))[None, :]], axis=1)
+        kv_valid = jnp.concatenate(
+            [(ring_pos >= 0)[None, :], (jnp.arange(S) < n_valid)[None, :]],
+            axis=1)
+        out = attention_core(q, kk, vv, positions, k_pos, causal=True,
+                             window=window, q_block=cfg.attn_q_block,
+                             kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
+    else:
+        new_kv = paged_prefill_write(kv, k, v, page_ids, start, n_valid)
+        # gather this request's pages into a contiguous [1, n*ps] view;
+        # absolute key positions are the identity, validity = written-so-far
+        # bound (trash entries in the table tail sit past the bound, so
+        # they are never seen)
+        kk = new_kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
+        vv = new_kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
+        k_pos = jnp.arange(n * ps)
+        kv_valid = (k_pos < start + n_valid)[None, :]
+        out = attention_core(q, kk.astype(cd), vv.astype(cd), positions,
+                             k_pos, causal=True, q_block=cfg.attn_q_block,
+                             kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
     out = out.reshape(B, S, H * hd)
     return dot(out, p["wo"], cd), new_kv
 
@@ -385,21 +460,107 @@ def paged_attention_apply(cfg, p, x, positions, kv, page_table, lengths, *,
     x [slots, 1, D]; positions [slots, 1] (= lengths[:, None]); kv one
     layer's pages.  Unlike ``attention_apply`` (vmapped per slot over a
     private ring cache), this runs the whole slot batch against the shared
-    pool — full attention only (the contiguous page layout has no ring
-    wrap-around).  Returns (out [slots, 1, D], new_kv).
+    pool.  Covers full attention (contiguous pages) and sliding-window /
+    local attention (ring-wrapped window pages — the position mapping and
+    window mask live in the kernel/ref).  Returns (out [slots, 1, D],
+    new_kv).
     """
     from repro.kernels.paged_attention import ops as pa_ops
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
     H = cfg.num_heads
     cd = x.dtype
+    window = _paged_window(cfg)
 
     q, k, v = _project_qkv_rope(cfg, p, x, positions)
-    new_kv = paged_cache_update(kv, k, v, page_table, lengths)
+    new_kv = paged_cache_update(kv, k, v, page_table, lengths, window=window)
     out = pa_ops.paged_attention(q[:, 0], new_kv["k"], new_kv["v"],
-                                 page_table, lengths + 1,
+                                 page_table, lengths + 1, window=window,
                                  use_kernel=use_pallas)
     out = out[:, None].reshape(B, S, H * hd)
+    return dot(out, p["wo"], cd), new_kv
+
+
+def paged_mla_attention_apply(cfg, p, x, positions, kv, page_table, lengths,
+                              *, use_pallas: bool = False):
+    """One batched decode step of absorbed MLA over latent pages.
+
+    x [slots, 1, D]; kv {"ckv": [P, ps, R], "krope": [P, ps, rp]} — one
+    layer's latent pages.  The math mirrors ``mla_apply``'s decode path
+    (scores in the latent space; cache stays compressed), the storage is
+    the shared page pool.  Returns (out [slots, 1, D], new_kv)."""
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.models.common import rms_norm
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cd = x.dtype
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    dkv = dot(x, p["w_dkv"], cd)                         # [B,1,rank+rope]
+    ckv, krope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    krope = apply_rope(krope[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]
+    q_nope, q_rope = _mla_q(cfg, p, x, positions, cd)
+    new_kv = paged_latent_update(kv, ckv, krope, page_table, lengths)
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim).astype(cd)
+    # absorb: q' = q_nope @ W_uk^T -> latent-space queries [B,1,H,rank]
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32).astype(cd)
+    o_lat = pa_ops.paged_mla_attention(
+        q_lat[:, 0], q_rope[:, 0], new_kv["ckv"], new_kv["krope"],
+        page_table, lengths + 1, scale=scale, use_kernel=use_pallas)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim).astype(cd)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat[:, None].astype(cd), w_uv,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(cd).reshape(B, S, H * m.v_head_dim)
+    return dot(out, p["wo"], cd), new_kv
+
+
+def paged_mla_prefill_apply(cfg, p, x, positions, kv, page_ids, start,
+                            n_valid):
+    """Prefill-chunk MLA attention directly against latent pages.
+
+    The chunk's (normalized) latents are written into the pool, then — to
+    match the slotted prefill's numerics (``mla_apply``'s *expanded* path)
+    — per-head K/V are materialized from the gathered latents and the
+    chunk attends causally over prefix + chunk.  Contiguous layout only
+    (MLA is full causal attention).  Returns (out [1, S, D], new_kv)."""
+    from repro.models.common import rms_norm
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cd = x.dtype
+    ps = kv["ckv"].shape[1]
+    n = page_ids.shape[0]
+
+    dkv = dot(x, p["w_dkv"], cd)                          # [1,S,rank+rope]
+    ckv, krope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    krope = apply_rope(krope[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]
+    new_kv = paged_latent_prefill_write(kv, ckv, krope, page_ids, start,
+                                        n_valid)
+    ckv_all = new_kv["ckv"][page_ids].reshape(1, n * ps,
+                                              m.kv_lora_rank).astype(cd)
+    kr_all = new_kv["krope"][page_ids].reshape(
+        1, n * ps, m.qk_rope_head_dim).astype(cd)
+    k_nope = dot(ckv_all, p["w_uk"], cd).reshape(1, n * ps, H,
+                                                 m.qk_nope_head_dim)
+    vv = dot(ckv_all, p["w_uv"], cd).reshape(1, n * ps, H, m.v_head_dim)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions, cd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                  (1, n * ps, H, m.qk_rope_head_dim))],
+        axis=-1)
+    k_pos = jnp.arange(n * ps)
+    kv_valid = (k_pos < start + n_valid)[None, :]
+    out = attention_core(q, k, vv, positions, k_pos, causal=True,
+                         q_block=cfg.attn_q_block,
+                         kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
+    out = out.reshape(B, S, H * m.v_head_dim)
     return dot(out, p["wo"], cd), new_kv
 
 

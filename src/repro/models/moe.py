@@ -50,14 +50,31 @@ def _choose_group_size(n_tokens: int, num_experts: int) -> int:
     return n_tokens
 
 
-def moe_apply(cfg, p, x) -> Tuple[jax.Array, jax.Array]:
-    """x: [B,S,D] -> (y [B,S,D], aux_loss scalar fp32)."""
+def moe_apply(cfg, p, x, *, n_valid=None,
+              per_token: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,D] -> (y [B,S,D], aux_loss scalar fp32).
+
+    ``n_valid`` (traced, serving prefill): positions >= n_valid along S are
+    a masked bucket tail — their router assignments are zeroed *before*
+    capacity accounting, so padding can never displace a real token from
+    an expert (their own outputs are garbage either way; the engine masks
+    them downstream).  ``per_token`` (serving paths): dispatch in groups of
+    one token — C = 1 then admits every token's full top-k, so routing is
+    *drop-free* and strictly per-token.  Training keeps GShard capacity
+    semantics; serving uses per_token everywhere because capacity
+    truncation couples tokens across group shapes (bucket widths, chunk
+    boundaries, concurrently decoding slots, prefix-cache-skipped
+    prefixes), which would break the engine's token-identity guarantee —
+    warm != cold, paged != slotted — whenever a drop binds.  The price is
+    the dense dispatch running E instead of ~K·cf expert rows per token at
+    serve time; a ragged grouped-GEMM serve kernel is the ROADMAP answer.
+    """
     m = cfg.moe
     B, S, D = x.shape
     E, K = m.num_experts, m.top_k
     cd = x.dtype
     N = B * S
-    g = _choose_group_size(N, E)
+    g = 1 if per_token else _choose_group_size(N, E)
     G = N // g
     C = max(int(g * K / E * m.capacity_factor), 1)
     C = min(C, g)
@@ -72,6 +89,13 @@ def moe_apply(cfg, p, x) -> Tuple[jax.Array, jax.Array]:
 
     # --- capacity assignment (choice-major priority, GShard) ---------------
     onehot = jax.nn.one_hot(sel, E, dtype=jnp.int32)                # [G,g,K,E]
+    if n_valid is not None:
+        # bucket-tail padding routes nowhere: it must not consume expert
+        # capacity (a padding row displacing a real token would make the
+        # compiled bucket width leak into valid tokens' outputs)
+        vmask = jnp.broadcast_to(
+            (jnp.arange(S) < n_valid)[None, :], (B, S)).reshape(G, g)
+        onehot = onehot * vmask[..., None, None].astype(onehot.dtype)
     prio = onehot.transpose(0, 2, 1, 3).reshape(G, K * g, E)        # choice-major
     pos = jnp.cumsum(prio, axis=1) * prio - 1                       # position in expert
     pos = pos.reshape(G, K, g, E).transpose(0, 2, 1, 3)             # [G,g,K,E]

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import common, transformer, rglru, rwkv6, whisper, pixtral
+from repro.serving.layouts import KVLayout, layout_for
 
 
 S_ = jax.ShapeDtypeStruct
@@ -70,14 +71,15 @@ class ServeContract(Protocol):
 class PagedServeContract(Protocol):
     """Paged batched decode against the shared page pool:
     ``(params, tokens, state, *, use_pallas=False) -> (logits [slots, V],
-    pages)`` with ``state = {"pages": {"k","v"}: [L, P, ps, KV, hd],
+    pages)`` with ``state = {"pages": {leaf: [L, P, ps, ...]},
     "page_table": [slots, n] int32, "pos": [slots] int32}``.
 
-    The engine builds the pool from ``init_decode_state(1, page_size)`` and
-    prefills with ``cache_len`` rounded up to a page multiple, so the
-    contiguous prefill cache scatters page-by-page into the pool.
-    ``use_pallas`` selects the Pallas paged-attention kernel (TPU) vs the
-    traced jnp reference (CPU)."""
+    The page leaves are the family's ``KVLayout`` (per-head "k"/"v" for
+    GQA — contiguous for full attention, ring-wrapped for swa/local —
+    latent "ckv"/"krope" for MLA).  The engine builds the pool from
+    ``init_decode_state(1, page_size)``.  ``use_pallas`` selects the
+    Pallas paged-attention kernels (TPU) vs the traced jnp references
+    (CPU)."""
 
     def __call__(self, params, tokens, state, *,
                  use_pallas: bool = False) -> Tuple[Any, Any]: ...
@@ -125,19 +127,26 @@ class ModelBundle:
     # families the engine does not serve yet (encdec / vlm frontends need
     # per-request modality inputs).
     serve_prefill_fn: Optional[ServeContract] = None
-    # Paged decode contract (``PagedServeContract``; attention family only).
-    # None for recurrent families (RG-LRU conv/hidden and RWKV wkv state are
-    # O(1) per slot — nothing to page) and for MLA / windowed attention
-    # (latent or ring-wrapped caches don't fit the contiguous page layout
-    # yet).
+    # Paged decode contract (``PagedServeContract``).  Present exactly when
+    # ``kv_layout`` is — the layout seam (``repro.serving.layouts``) is the
+    # single capability authority; recurrent families (RG-LRU conv/hidden
+    # and RWKV wkv state are O(1) per slot — nothing to page) have no
+    # layout and stay slotted.
     paged_decode_fn: Optional[PagedServeContract] = None
     # Paged prefill contract (``PagedPrefillContract``): chunked prefill
     # into the page pool, the mechanism behind prefix caching and chunked
-    # prefill.  Same family gate as paged_decode_fn.
+    # prefill.  Same layout gate as paged_decode_fn.
     paged_prefill_fn: Optional[PagedPrefillContract] = None
+    # Physical page layout of the decode cache (None = slotted only); the
+    # engine hands this to ``PagedKVCachePool`` and validates page-size /
+    # window compatibility against it.
+    kv_layout: Optional[KVLayout] = None
     # True when serve_prefill_fn accepts a traced ``n_valid`` (masked bucket
-    # tail) — recurrent families advance their state token-by-token, so tail
-    # padding would corrupt it and they keep exact-length prefills.
+    # tail).  Recurrent families advance their state token-by-token, so
+    # tail padding would corrupt it; ring-caching families (swa/local) wrap
+    # padding onto valid slots in the *slotted* prefill cache — both keep
+    # exact-length slotted prefills (the paged chunk path buckets every
+    # layout: its tails route to the trash page).
     masked_prefill: bool = False
 
     def capabilities(self) -> FrozenSet[str]:
@@ -193,6 +202,8 @@ def _lm_decode_tokens(shape: ShapeConfig):
 # ---------------------------------------------------------------------------
 
 def _build_lm(cfg: ModelConfig) -> ModelBundle:
+    # the layout seam decides paged capability — never an attn_kind probe
+    layout = layout_for(cfg)
     return ModelBundle(
         cfg=cfg,
         specs=transformer.lm_specs(cfg),
@@ -207,20 +218,26 @@ def _build_lm(cfg: ModelConfig) -> ModelBundle:
             cfg, shape.global_batch, shape.seq_len),
         init_decode_state=functools.partial(
             lambda cfg, b, s: transformer.init_decode_caches(cfg, b, s), cfg),
+        # serving prefill routes MoE drop-free per token (moe_dropless):
+        # capacity truncation would couple tokens across bucket widths /
+        # chunk boundaries / prefix skips and break token identity
         serve_prefill_fn=lambda params, tokens, *, cache_len, n_valid=None:
             transformer.lm_prefill(
                 cfg, params, tokens,
                 cache_len=transformer.decode_cache_len(cfg, cache_len),
-                n_valid=n_valid),
+                n_valid=n_valid, moe_dropless=True),
         paged_decode_fn=(functools.partial(transformer.lm_paged_decode, cfg)
-                         if cfg.attn_kind == "full" else None),
-        paged_prefill_fn=(functools.partial(transformer.lm_paged_prefill, cfg)
-                          if cfg.attn_kind == "full" else None),
-        # masked bucket tails need the prefill cache to hold the whole
-        # bucket (no ring wrap): true for full attention and MLA; sliding-
-        # window ring caches (window < bucket) would let padding wrap onto
-        # valid slots, so swa/local keep exact-length prefills
-        masked_prefill=cfg.attn_kind in ("full", "mla"),
+                         if layout is not None else None),
+        paged_prefill_fn=(functools.partial(transformer.lm_paged_prefill,
+                                            cfg)
+                          if layout is not None else None),
+        kv_layout=layout,
+        # masked bucket tails need the *slotted* prefill cache to hold the
+        # whole bucket (no ring wrap): true for the contiguous layouts,
+        # false for ring (window) caches, where padding would wrap onto
+        # valid slots — those get bucketing through the paged chunk path
+        # instead (tails route to the trash page)
+        masked_prefill=(layout is not None and not layout.ring),
     )
 
 

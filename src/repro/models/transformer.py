@@ -110,7 +110,8 @@ def lm_head(cfg, params, x):
 # ---------------------------------------------------------------------------
 
 def lm_forward(cfg, params, tokens, *, collect_cache: bool = False,
-               cache_len: int = 0, use_pallas: bool = False, n_valid=None):
+               cache_len: int = 0, use_pallas: bool = False, n_valid=None,
+               moe_dropless: bool = False):
     """tokens [B,S] -> (logits [B,S,V], caches_or_None, aux).
 
     ``n_valid`` (traced scalar, cache-collection path only) marks a masked
@@ -118,6 +119,12 @@ def lm_forward(cfg, params, tokens, *, collect_cache: bool = False,
     slots carry pos = -1 (decode never attends them) and the cache index is
     n_valid, so one compiled shape serves every prompt length in a bucket.
     Causality already keeps tail padding out of the valid tokens' outputs.
+
+    ``moe_dropless`` (serving prefill): route MoE per token with no
+    capacity truncation, so the serving engine's token-identity guarantee
+    survives bucket widths / chunk boundaries / prefix-cache skips (see
+    ``moe_apply``).  Training and the roofline prefill cells keep GShard
+    capacity semantics.
     """
     cd = jnp.dtype(cfg.compute_dtype)
     B, S = tokens.shape
@@ -173,7 +180,11 @@ def lm_forward(cfg, params, tokens, *, collect_cache: bool = False,
             x = x + a
             h2 = apply_norm(cfg, lp["ln2"], x)
             if cfg.moe is not None:
-                f, a2 = moe_mod.moe_apply(cfg, lp["ff"], h2)
+                # bucketed serving prefill: padding must not consume
+                # expert capacity, and serving routes drop-free per token
+                # (see moe_apply's n_valid / per_token)
+                f, a2 = moe_mod.moe_apply(cfg, lp["ff"], h2, n_valid=n_valid,
+                                          per_token=moe_dropless)
             else:
                 f, a2 = mlp_mod.mlp_apply(cfg, lp["ff"], h2), jnp.zeros((), jnp.float32)
             return (x + f, aux + a2), cache_y
@@ -256,18 +267,22 @@ def lm_loss(cfg, params, batch, *, use_pallas: bool = False):
 
 
 def lm_prefill(cfg, params, tokens, *, cache_len: int = 0,
-               use_pallas: bool = False, n_valid=None):
+               use_pallas: bool = False, n_valid=None,
+               moe_dropless: bool = False):
     """tokens [B,S] -> (last_logits [B,V], caches).
 
     ``n_valid`` (traced): S is a padded power-of-two bucket and only the
     first n_valid tokens are real — the cache masks the tail and the
     returned logits are the n_valid-th token's, so one compiled shape
     serves every prompt length that rounds up to the same bucket.
+    ``moe_dropless`` selects the serving engine's per-token (no capacity
+    truncation) MoE routing — see lm_forward.
     """
     params = cast_tree(params, cfg.compute_dtype)
     x, caches, _ = lm_forward(cfg, params, tokens, collect_cache=True,
                               cache_len=cache_len or tokens.shape[1],
-                              use_pallas=use_pallas, n_valid=n_valid)
+                              use_pallas=use_pallas, n_valid=n_valid,
+                              moe_dropless=moe_dropless)
     if n_valid is None:
         last = x[:, -1:]
     else:
@@ -292,7 +307,11 @@ def lm_paged_prefill(cfg, params, tokens, state, *, use_pallas: bool = False):
     compiled shape per bucket covers every (prompt_len, prefix_len, chunk)
     combination — the dispatch that used to jit per prompt length.
     ``use_pallas`` is accepted for contract symmetry; the chunk path always
-    runs the traced gather (the Pallas paged kernel is decode-only).
+    runs the traced gather (the Pallas paged kernels are decode-only).
+
+    Dispatches on the family's page layout: per-head k/v pages (full
+    attention's contiguous pages and swa/local's ring-wrapped window
+    pages) vs MLA's latent ckv/krope pages.
     """
     del use_pallas
     params = cast_tree(params, cfg.compute_dtype)
@@ -306,13 +325,19 @@ def lm_paged_prefill(cfg, params, tokens, state, *, use_pallas: bool = False):
     def body(x, layer_in):
         lp, kv = layer_in
         h = apply_norm(cfg, lp["ln1"], x)
-        a, new_kv = attn.paged_prefill_apply(cfg, lp["attn"], h, positions,
-                                             kv, state["page_table"], start,
-                                             n_valid)
+        if cfg.attn_kind == "mla":
+            a, new_kv = attn.paged_mla_prefill_apply(
+                cfg, lp["attn"], h, positions, kv, state["page_table"],
+                start, n_valid)
+        else:
+            a, new_kv = attn.paged_prefill_apply(
+                cfg, lp["attn"], h, positions, kv, state["page_table"],
+                start, n_valid)
         x = x + a
         h = apply_norm(cfg, lp["ln2"], x)
         if cfg.moe is not None:
-            f, _ = moe_mod.moe_apply(cfg, lp["ff"], h)
+            f, _ = moe_mod.moe_apply(cfg, lp["ff"], h, n_valid=n_valid,
+                                     per_token=True)
         else:
             f = mlp_mod.mlp_apply(cfg, lp["ff"], h)
         x = x + f
@@ -350,15 +375,26 @@ def lm_decode(cfg, params, tokens, caches):
 
 def paged_decoder_layer_apply(cfg, p, x, positions, kv, page_table, lengths,
                               use_pallas=False):
-    """Decode-step layer over a shared paged KV pool.  Returns (x, new_kv)."""
+    """Decode-step layer over a shared paged KV pool.  Returns (x, new_kv).
+
+    Dispatches on the family's page layout: per-head k/v pages for full and
+    sliding-window/local attention (``paged_attention_apply``), latent
+    ckv/krope pages for MLA (``paged_mla_attention_apply``)."""
     h = apply_norm(cfg, p["ln1"], x)
-    a, new_kv = attn.paged_attention_apply(cfg, p["attn"], h, positions, kv,
-                                           page_table, lengths,
-                                           use_pallas=use_pallas)
+    if cfg.attn_kind == "mla":
+        a, new_kv = attn.paged_mla_attention_apply(
+            cfg, p["attn"], h, positions, kv, page_table, lengths,
+            use_pallas=use_pallas)
+    else:
+        a, new_kv = attn.paged_attention_apply(cfg, p["attn"], h, positions,
+                                               kv, page_table, lengths,
+                                               use_pallas=use_pallas)
     x = x + a
     h = apply_norm(cfg, p["ln2"], x)
     if cfg.moe is not None:
-        f, _ = moe_mod.moe_apply(cfg, p["ff"], h)
+        # per-token groups: concurrently decoding slots must never compete
+        # for expert capacity (slot isolation == the vmapped slotted path)
+        f, _ = moe_mod.moe_apply(cfg, p["ff"], h, per_token=True)
     else:
         f = mlp_mod.mlp_apply(cfg, p["ff"], h)
     x = x + f
@@ -377,9 +413,11 @@ def lm_paged_decode(cfg, params, tokens, state, *, use_pallas: bool = False):
       * ``pos``        [slots] int32 — tokens already cached per slot
         (= the position this step's token is written at)
 
-    Returns (logits [slots, V], new_pages).  Requires ``attn_kind ==
-    "full"`` — the contiguous page layout has no ring wrap-around, so
-    sliding-window/local and MLA families stay on the slotted pool.
+    Returns (logits [slots, V], new_pages).  The page layout is the
+    family's (``repro.serving.layouts``): contiguous k/v pages for full
+    attention, ring-wrapped window pages for swa/local (the position
+    mapping and window mask live in the paged-attention kernel/ref), and
+    latent ckv/krope pages for MLA (absorbed decode).
     """
     params = cast_tree(params, cfg.compute_dtype)
     cd = jnp.dtype(cfg.compute_dtype)

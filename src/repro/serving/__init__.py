@@ -7,10 +7,11 @@ scheduling, and mesh sharding — selected by config, not user code.
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.kvcache import SlotKVCachePool, pool_pspecs
+from repro.serving.layouts import KVLayout, layout_for
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import PagedKVCachePool, paged_pspecs
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = ["ServingEngine", "SlotKVCachePool", "PagedKVCachePool",
-           "pool_pspecs", "paged_pspecs", "ServingMetrics", "Request",
-           "Scheduler"]
+           "KVLayout", "layout_for", "pool_pspecs", "paged_pspecs",
+           "ServingMetrics", "Request", "Scheduler"]

@@ -37,17 +37,20 @@ cache holds O(log max_seq_len) entries instead of one per distinct prompt
 length (``metrics.compile_count`` tracks traces).  Recurrent families
 (whose state a masked tail would corrupt) keep exact-length prefills.
 
-KV memory is page-granular for the attention (lm) family (``PagedKVCachePool``
-+ the paged-attention kernel family): pages are allocated lazily as each
-request's position crosses page boundaries and freed on eviction, so cache
-bytes held track actual sequence lengths instead of ``max_batch x
-max_seq_len``, and ``num_pages`` may oversubscribe — on page pressure the
-engine preempts the youngest request (resume re-prefills; emitted tokens are
-kept, so greedy output is unchanged — and typically re-prefills *from the
-prefix cache*, since its own blocks were committed on first admission).
-Recurrent families (RG-LRU / RWKV: O(1) state per slot) and MLA / windowed
-attention fall back to the slotted pool; ``ServeConfig.kv_layout`` forces
-either layout.
+KV memory is page-granular for every family with a ``KVLayout``
+(``repro.serving.layouts``): per-head k/v pages for full attention,
+ring-wrapped window pages for sliding-window/local attention (a slot holds
+at most ``window`` tokens, pages rotating out of the window free or park
+in the prefix LRU), and latent ckv/krope pages for MLA.  Pages are
+allocated lazily as each request's position crosses page boundaries and
+freed on eviction, so cache bytes held track actual sequence lengths
+instead of ``max_batch x max_seq_len``, and ``num_pages`` may
+oversubscribe — on page pressure the engine preempts the youngest request
+(resume re-prefills; emitted tokens are kept, so greedy output is
+unchanged — and typically re-prefills *from the prefix cache*, since its
+own blocks were committed on first admission).  Recurrent families
+(RG-LRU / RWKV: O(1) state per slot — nothing to page) fall back to the
+slotted pool; ``ServeConfig.kv_layout`` forces either layout.
 
 Greedy (argmax) decoding — chosen so batched serving is *token-identical*
 to an unbatched sequential decode of each request, the serving analogue of
@@ -139,16 +142,18 @@ class ServingEngine:
             params = jax.device_put(params, param_sh)
         self.params = params
 
-        # -- KV pool: page-granular when the family declares the capability -
-        # (kv_layout="auto": attention lm family pages; recurrent families'
-        # O(1) state and MLA/windowed caches stay slot-granular)
+        # -- KV pool: page-granular when the family has a KVLayout (the
+        # layout seam is the capability authority: per-head k/v, latent, or
+        # ring-wrapped window pages; recurrent families' O(1) state has no
+        # layout and stays slot-granular)
+        self.layout = self.bundle.kv_layout
         self.paged = ("paged_serve" in caps
                       and self.cfg.kv_layout != "slotted")
         if self.cfg.kv_layout == "paged" and not self.paged:
             raise ValueError(
                 f"{model_cfg.name} ({model_cfg.family}/{model_cfg.attn_kind})"
-                " has no paged decode path (PagedServeContract); recurrent, "
-                "MLA, and windowed-attention families use the slotted pool "
+                " has no paged decode path (PagedServeContract / KVLayout); "
+                "recurrent families' O(1) state uses the slotted pool "
                 "(kv_layout='auto')")
         # prefix-cache page sharing + chunked prefill need the paged
         # prefill contract (engine writes pages in place, no state scatter)
@@ -157,14 +162,22 @@ class ServingEngine:
         self._bucket_slotted = (self.cfg.prefill_bucket
                                 and "bucketed_prefill" in caps)
         if self.paged:
+            # windowed families: a page must fit (and tile) the window —
+            # fail here with one ServeConfig-level error, not deep in the
+            # pool or a kernel
+            self.cfg.check_window(self.layout.window)
             self.pool = PagedKVCachePool(
                 self.cfg.max_batch, self.cfg.page_size, self.cfg.max_seq_len,
                 lambda: self.bundle.init_decode_state(1, self.cfg.page_size),
                 num_pages=self.cfg.num_pages, mesh=self.mesh,
-                model_size=model_size,
+                model_size=model_size, layout=self.layout,
                 enable_prefix_cache=(self.cfg.enable_prefix_cache
                                      and self._prefix_path))
             self._cache_len = self.pool.padded_len   # page-multiple prefill
+            # ring chunks are capped at the window: a longer write-then-
+            # attend chunk would wrap onto cells its own queries still need
+            self._chunk_cap = self.layout.max_chunk_tokens(
+                self.pool.padded_len)
         else:
             self.pool = SlotKVCachePool(
                 self.cfg.max_batch,
@@ -397,12 +410,27 @@ class ServingEngine:
     def _advance_prefills(self, stream: Optional[StreamFn]):
         """Run one suffix chunk per prefilling slot (chunked prefill): each
         cycle a long prompt advances ``prefill_chunk_tokens`` tokens while
-        every already-running stream keeps decoding in the same cycle."""
+        every already-running stream keeps decoding in the same cycle.
+        Ring (windowed) layouts cap chunks at the window and rotate /
+        copy-on-write the cells each chunk will overwrite first."""
         for slot in sorted(self._prefilling):
-            job = self._prefilling[slot]
+            job = self._prefilling.get(slot)
+            if job is None:                 # preempted by an earlier slot's
+                continue                    # pressure relief this cycle
             remaining = len(job.prompt) - job.done
-            chunk = (min(remaining, self.cfg.prefill_chunk_tokens)
-                     if self.cfg.prefill_chunk_tokens else remaining)
+            chunk = min(remaining, self.cfg.prefill_chunk_tokens
+                        or self._chunk_cap, self._chunk_cap)
+            if not self.pool.prepare_chunk(slot, job.done,
+                                           job.done + chunk - 1):
+                # page pressure mid-prefill (ring rotation needed a COW or
+                # fresh page): relieve it like decode growth does — preempt
+                # the lowest-priority youngest other request, else bounce
+                # this one back to the queue and retry next cycle
+                self._relieve_pressure(prefer_not=slot)
+                if slot not in self._prefilling or \
+                        not self.pool.prepare_chunk(slot, job.done,
+                                                    job.done + chunk - 1):
+                    continue
             width = (bucket_len(chunk, self.pool.padded_len)
                      if self.cfg.prefill_bucket else chunk)
             toks = np.zeros((1, width), np.int32)
@@ -437,22 +465,33 @@ class ServingEngine:
         self.scheduler.requeue(victim)
         self.metrics.record_preemption(victim.rid)
 
+    def _relieve_pressure(self, prefer_not: Optional[int] = None):
+        """Preempt the lowest-priority, youngest running request to free
+        pages — preferring a victim other than ``prefer_not`` (a slot
+        mid-prefill that triggered the pressure preempts itself only when
+        it is the lone tenant).  Recency is judged by rid (monotone
+        submission order): ``arrival_seq`` goes negative on requeue, so it
+        cannot rank original arrivals."""
+        candidates = [s for s in self.pool.active_slots if s != prefer_not]
+        if not candidates:
+            candidates = self.pool.active_slots
+        self._preempt(max(
+            candidates,
+            key=lambda s: (-self.requests[self.pool.owner[s]].priority,
+                           self.pool.owner[s])))
+
     def _grow_pages(self):
-        """Paged pool: lazily allocate the page each slot's next token needs;
-        on page pressure, preempt the lowest-priority, youngest *running*
-        request until the rest fit — even a non-starving victim is evicted,
-        since its freed pages rebalance to the earlier arrivals.  Recency is
-        judged by rid (monotone submission order): ``arrival_seq`` goes
-        negative on requeue, so it cannot rank original arrivals."""
+        """Paged pool: make every decoding slot able to write its next token
+        (lazy growth; ring layouts rotate / COW the cell being wrapped
+        into); on page pressure, preempt until the rest fit — even a
+        non-starving victim is evicted, since its freed pages rebalance to
+        the earlier arrivals."""
         while True:
             starved = self.pool.ensure_decode_capacity(
                 skip=self._prefilling.keys())
             if not starved:
                 return
-            self._preempt(max(
-                self.pool.active_slots,
-                key=lambda s: (-self.requests[self.pool.owner[s]].priority,
-                               self.pool.owner[s])))
+            self._relieve_pressure()
 
     def _decodable(self) -> bool:
         return any(s not in self._prefilling for s in self.pool.owner)

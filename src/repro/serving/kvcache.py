@@ -14,6 +14,12 @@ All device ops compile exactly once:
   * ``read``    — gather slot *i* back out (tests / debugging)
   * ``reset``   — restore slot *i* to the blank state (eviction hygiene)
 
+Since the KV-layout seam (``repro.serving.layouts``) brought MLA and
+windowed attention onto the paged pool, this pool serves two roles only:
+the *recurrent* families' home (RG-LRU / RWKV — O(1) state per slot has
+no layout, nothing to page) and the forced ``kv_layout="slotted"``
+baseline every paged layout is token-identity-tested against.
+
 The slotted path participates in prefill *bucketing* only (engine-side:
 prompts padded to power-of-two buckets with masked tails bound the jit
 cache; the inserted state's shape is keyed by ``cache_len`` alone, so

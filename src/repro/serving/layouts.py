@@ -1,0 +1,172 @@
+"""Pluggable physical KV-page layouts — the runtime seam behind paged serving.
+
+The paper's transparency principle says distribution (and serving) machinery
+lives in the runtime, never in user code.  Until this module existed that
+leaked: ``attn_kind == "full"`` probes scattered across the registry, the
+page pool and the engine silently dropped MLA and sliding-window families
+onto the slotted fallback, losing paged oversubscription and the prefix
+cache.  A ``KVLayout`` describes everything the *physical* page format of a
+family's decode cache needs:
+
+  * ``leaves``  — which decode-state leaves the page pool tiles into pages
+                  (per-head ``("k", "v")`` for GQA; latent ``("ckv",
+                  "krope")`` for DeepSeek MLA — the pool itself never names
+                  a leaf);
+  * ``window``  — 0 for contiguous layouts (token ``t`` lives at page-table
+                  column ``t // page_size`` forever); ``> 0`` for
+                  *ring-wrapped* window pages: the table is a ring of
+                  ``window // page_size`` cells, token ``t`` lives at cell
+                  ``(t % window) // page_size``, and a cell's page is reused
+                  in place as the sequence wraps — a slot holds at most
+                  ``window`` tokens of K/V, matching the slotted ring
+                  cache's memory exactly while keeping page-granular lazy
+                  growth and prefix sharing.
+
+``layout_for(cfg)`` is the single capability authority: the registry asks
+it (instead of probing ``attn_kind`` strings) whether a family pages, and
+the engine/pool take the returned layout as a constructor argument.  A new
+cache format (quantized KV, hybrid local/global) plugs in by adding a
+layout here — no pool/engine/registry surgery.
+
+Import discipline: this module depends only on jax — it sits *below* both
+``repro.models.registry`` (which imports ``layout_for``) and
+``repro.serving.paged`` (which takes a layout), so neither layer reaches
+around the seam.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+P = jax.sharding.PartitionSpec
+
+
+def check_window_page_size(page_size: int, window: int) -> None:
+    """Ring-wrapped window pages must *tile* the window: a page larger than
+    the window could never fill before rotating out (so it could never be
+    cached or freed correctly), and a page that doesn't divide the window
+    would straddle the wrap point.  The ONLY implementation of this rule —
+    ``KVLayout.check_page_size`` (pool construction) and
+    ``ServeConfig.check_window`` (engine-level validation) both call it."""
+    if window <= 0:
+        return
+    if page_size > window:
+        raise ValueError(
+            f"page_size={page_size} exceeds the attention window="
+            f"{window}: a page that never fits the window can never be "
+            "cached or freed correctly — shrink page_size or force "
+            "kv_layout='slotted'")
+    if window % page_size:
+        raise ValueError(
+            f"page_size={page_size} does not divide the attention "
+            f"window={window}: ring-wrapped window pages must tile the "
+            "window exactly")
+
+
+@dataclass(frozen=True)
+class KVLayout:
+    """Physical page layout of one attention family's decode cache."""
+    name: str                    # "kv" | "latent" | "window"
+    leaves: Tuple[str, ...]      # decode-state leaves the pool pages
+    window: int = 0              # > 0: ring-wrapped window pages
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def ring(self) -> bool:
+        return self.window > 0
+
+    def check_page_size(self, page_size: int) -> None:
+        """Ring layouts need pages that tile the window (see
+        ``check_window_page_size`` — the single home of that rule, also
+        reached through ``ServeConfig.check_window``)."""
+        check_window_page_size(page_size, self.window)
+
+    def max_page_size(self) -> int:
+        """Largest power-of-two page that satisfies ``check_page_size``:
+        the lowest set bit of the window (every smaller power of two also
+        tiles it).  Unbounded (2**62) for contiguous layouts — callers
+        min() it against their own caps."""
+        return self.window & -self.window if self.window else 1 << 62
+
+    def table_width(self, pages_per_slot: int, page_size: int) -> int:
+        """Page-table columns per slot: the full logical block count for
+        contiguous layouts, the ring size for windowed ones."""
+        if not self.window:
+            return pages_per_slot
+        return min(pages_per_slot, self.window // page_size)
+
+    def cell(self, block: int, width: int) -> int:
+        """Table column holding logical block ``block``."""
+        return block % width if self.ring else block
+
+    def live_tokens(self, seq_len: int) -> int:
+        """Tokens of K/V a slot holds at sequence length ``seq_len`` — what
+        a slot-granular pool would preallocate (the telemetry comparator)."""
+        return min(seq_len, self.window) if self.ring else seq_len
+
+    def max_chunk_tokens(self, padded_len: int) -> int:
+        """Largest prefill chunk the layout can absorb in one write-then-
+        attend step.  A ring chunk longer than the window would overwrite
+        cells its own early queries (and the snapshot gather) still need."""
+        return self.window if self.ring else padded_len
+
+    def needed_start(self, cached_tokens: int, page_size: int) -> int:
+        """First prompt block a new admission must still be able to *read*
+        when ``cached_tokens`` are served from the prefix cache: suffix
+        queries start at position ``cached_tokens`` and attend keys no
+        older than ``cached_tokens - window + 1`` — earlier blocks are
+        wholly masked and need no live page (contiguous layouts need every
+        block)."""
+        if not self.window:
+            return 0
+        return max(0, cached_tokens - self.window + 1) // page_size
+
+    # -- sharding ----------------------------------------------------------
+
+    def page_pspec(self, name: str, leaf, model_size: int):
+        """PartitionSpec for one page-pool leaf.  KV-head (or head_dim) of
+        per-head pages shards over "model" when divisible (a *batch* dim of
+        the attention einsums — sharding it never reassociates a sum).
+        Latent (ckv/krope) pages replicate: the rank is a *contracted* dim
+        in every absorbed-MLA einsum, so sharding it would split dot
+        products across devices and break bitwise equivalence with the
+        single-device decode — and the latent cache is small by
+        construction (that is MLA's point), so replication is cheap.
+        Pages themselves always replicate over data axes — any slot's
+        pages live anywhere."""
+        spec = [None] * leaf.ndim
+        if model_size > 1 and name in ("k", "v") and leaf.ndim == 5:
+            if leaf.shape[3] % model_size == 0:           # [L,P,ps,KV,hd]
+                spec[3] = "model"
+            elif leaf.shape[4] % model_size == 0:
+                spec[4] = "model"
+        return P(*spec)
+
+
+#: the three shipped layouts (module-level so capability checks and tests
+#: can name them without constructing)
+KV_FULL = KVLayout("kv", ("k", "v"))
+KV_LATENT = KVLayout("latent", ("ckv", "krope"))
+
+
+def layout_for(cfg) -> Optional[KVLayout]:
+    """The capability authority: which page layout (if any) serves this
+    model config's decode cache.  Returns None for families whose state has
+    nothing to page (recurrent O(1) state) — they stay on the slotted pool.
+
+    Callers pass a transformer-family ``ModelConfig``; the registry only
+    consults this for families whose decode cache *is* the transformer
+    cache (dense / moe), so recurrent hybrids with attention sub-blocks
+    never reach here.
+    """
+    kind = getattr(cfg, "attn_kind", "none")
+    if kind == "full":
+        return KV_FULL
+    if kind == "mla":
+        return KV_LATENT
+    if kind in ("swa", "local") and getattr(cfg, "window", 0) > 0:
+        return KVLayout("window", ("k", "v"), window=cfg.window)
+    return None

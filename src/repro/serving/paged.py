@@ -1,51 +1,62 @@
 """Page-granular KV-cache pool (vLLM-style) for continuous-batching decode.
 
-Where ``SlotKVCachePool`` preallocates ``max_seq_len`` of K/V per slot —
-cache memory set by the worst-case sequence — this pool owns one *global*
-page pool per layer (``[L, P, page_size, KV, hd]``), a free-page allocator,
-and a per-slot page table.  Pages are allocated lazily as a request's
-position crosses page boundaries and returned on eviction, so the bytes
-*held* track the tokens actually cached, and ``num_pages`` can provision
-less than ``max_batch x max_seq_len`` (oversubscription; the engine
-preempts on page pressure).
+Where ``SlotKVCachePool`` preallocates a full decode cache per slot —
+cache memory set by the worst case — this pool owns one *global* page pool
+per layer for each cache leaf its ``KVLayout`` names (per-head ``k``/``v``
+pages for GQA, latent ``ckv``/``krope`` pages for MLA), a free-page
+allocator, and a per-slot page table.  Pages are allocated lazily as a
+request's position crosses page boundaries and returned on eviction, so
+the bytes *held* track the tokens actually cached, and ``num_pages`` can
+provision less than the worst case (oversubscription; the engine preempts
+on page pressure).
 
 Page 0 is a reserved **trash page**: never allocated, it absorbs the
 writes of slots without a request (their page tables are all-zero), of
 insert padding, and of masked prefill-bucket tails, so the batched decode
 and bucketed prefill keep their fixed shapes without masking any scatter.
 
+**Layouts** (``repro.serving.layouts.KVLayout``) own the physical page
+geometry:
+
+  * contiguous layouts ("kv", "latent") — token ``t`` of a slot lives at
+    page ``table[slot, t // ps]``, offset ``t % ps``, forever;
+  * ring layouts ("window", sliding-window/local attention) — the table is
+    a ring of ``window // ps`` cells; token ``t`` lives at cell
+    ``(t % window) // ps`` and a cell's page is *reused in place* as the
+    sequence wraps, so a slot never holds more than ``window`` tokens —
+    the paged twin of the slotted ring cache.  Reusing a cell whose page
+    is shared (prefix-cache mapped) or indexed triggers copy-on-write (or
+    a plain drop + fresh page when the whole block is being rewritten), so
+    rotation can never corrupt another slot's — or the index's — K/V.
+
 **Prefix caching** (``enable_prefix_cache``): every page holds a
 *reference count* and, once its request's prefill commits, full
 page-aligned prompt blocks are registered in a hash-trie index —
 ``chain_hash(block_0..i) -> page``.  A new request walks the index with
 its own prompt blocks and maps every hit read-only (refcount++): those
-positions are never re-prefilled and their pages never duplicated.  The
-engine's prefill chunks start past the shared prefix and decode writes at
-``pos >= prompt_len``, so a shared page is immutable by construction; the
-one exception — a prompt *fully* covered by cached blocks, whose final
-token must still run to produce logits — reuses the last block's page
-**copy-on-write**: the page is device-copied into a private page, and only
-the copy is written.  When a page's refcount drops to zero it is *not*
-blanked: it parks in an LRU of reusable cached pages and is reclaimed (and
-de-indexed) only when the allocator runs dry — memory pressure evicts
-cold prefixes, never live ones.
+positions are never re-prefilled and their pages never duplicated.  A
+prompt *fully* covered by cached blocks reuses the last block's page
+**copy-on-write**.  When a page's refcount drops to zero it parks in an
+LRU of reusable cached pages and is reclaimed only when the allocator
+runs dry; reclaiming (or rotating out) an indexed page leaves a
+**phantom** entry — ``(None, parent_hash, tokens)`` — so the chain hash
+still verifies through it and the *live tail* of a long windowed prompt
+stays matchable: ring layouts map only the blocks still inside the new
+request's window (``KVLayout.needed_start``) and count everything before
+them as cached anyway (wholly window-masked, no page needed).
 
-Device state is three pieces, all fixed-shape (decode compiles once):
-  * ``pages``   {"k","v"}: [L, P, ps, KV, hd]  — donated through decode
-  * page table  [slots, pages_per_slot] int32  — host-owned (numpy),
-    re-uploaded per decode step (tiny; allocation is host-side bookkeeping)
-  * ``pos``     [slots] int32                  — tokens cached per slot
-
-Token *t* of a slot lives at page ``table[slot, t // ps]``, offset
-``t % ps`` — contiguous, no ring wrap-around, which is why only
-``attn_kind == "full"`` families page (see registry.paged_decode_fn).
+Device state is fixed-shape (decode compiles once):
+  * ``pages``   {leaf: [L, P, ps, ...]}  — donated through decode
+  * page table  [slots, table_width] int32 — host-owned (numpy),
+    re-uploaded per decode step (tiny; allocation is host bookkeeping)
+  * ``pos``     [slots] int32            — tokens cached per slot
 
 Eviction hygiene: freed pages go back to the allocator without device-side
 blanking — a page is only reachable through a table that points at it, the
-next tenant's insert/prefill overwrites every position it reads (the
-in-page tail past ``pos`` is masked by length), so stale K/V can never
-influence another request.  The aliasing property (no *private* page in
-two tables; shared pages only ever read) is tested.
+next tenant's writes cover every position it reads (tails are masked by
+length / ring-position arithmetic), so stale K/V can never influence
+another request.  The aliasing property (no *private* page in two tables;
+shared pages only ever read) is tested.
 """
 from __future__ import annotations
 
@@ -56,24 +67,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.layouts import KV_FULL, KVLayout
+
 P_ = jax.sharding.PartitionSpec
 
 
-def paged_pspecs(pool_structs, *, model_size: int = 1):
-    """PartitionSpec tree for the page pool [L, P, ps, KV, hd]: KV-head dim
-    -> "model" when divisible (else head_dim); pages replicate — any slot's
-    pages live anywhere, so there is no data-axis to shard them over."""
-
-    def rule(leaf):
-        spec = [None] * leaf.ndim
-        if model_size > 1 and leaf.ndim == 5:
-            if leaf.shape[3] % model_size == 0:
-                spec[3] = "model"
-            elif leaf.shape[4] % model_size == 0:
-                spec[4] = "model"
-        return P_(*spec)
-
-    return jax.tree.map(rule, pool_structs)
+def paged_pspecs(pool_structs, *, model_size: int = 1,
+                 layout: KVLayout = KV_FULL):
+    """PartitionSpec tree for the page pool: each leaf's spec comes from the
+    layout (KV-head / head_dim / latent rank -> "model" when divisible;
+    pages replicate — any slot's pages live anywhere, so there is no
+    data axis to shard them over)."""
+    return {name: layout.page_pspec(name, leaf, model_size)
+            for name, leaf in pool_structs.items()}
 
 
 def chain_blocks(tokens: Sequence[int], page_size: int, *,
@@ -107,37 +113,45 @@ class PagedKVCachePool:
     """Global page pool + refcounted allocator + prefix index + page tables.
 
     ``blank_page_fn()`` must return ``ModelBundle.init_decode_state(1,
-    page_size)`` — its "k"/"v" leaves ([L, 1, ps, KV, hd]) are the
-    one-page template the pool tiles ``num_pages`` times.  Prefill states
-    handed to ``insert`` must be sized ``cache_len == padded_len``
-    (``pages_per_slot * page_size``) so they scatter page-by-page; the
-    prefix-cache path (``alloc_prefix`` + the engine's paged prefill)
-    bypasses ``insert`` and writes pages in place.
+    page_size)`` — the layout's leaves (e.g. "k"/"v" [L, 1, ps, KV, hd] or
+    "ckv"/"krope" [L, 1, ps, R]) are the one-page template the pool tiles
+    ``num_pages`` times.  Prefill states handed to ``insert`` must be sized
+    ``cache_len == padded_len`` (``pages_per_slot * page_size``) so they
+    scatter page-by-page; the prefix-cache path (``alloc_prefix`` + the
+    engine's paged prefill) bypasses ``insert`` and writes pages in place.
     """
 
     def __init__(self, num_slots: int, page_size: int, max_seq_len: int,
                  blank_page_fn, *, num_pages: int = 0, mesh=None,
-                 model_size: int = 1, enable_prefix_cache: bool = False):
+                 model_size: int = 1, enable_prefix_cache: bool = False,
+                 layout: Optional[KVLayout] = None):
         assert num_slots >= 1 and page_size >= 1
+        self.layout = layout or KV_FULL
+        self.layout.check_page_size(page_size)
         self.num_slots = num_slots
         self.page_size = page_size
         self.max_seq_len = max_seq_len
-        self.pages_per_slot = -(-max_seq_len // page_size)
+        self.pages_per_slot = -(-max_seq_len // page_size)   # logical blocks
         self.padded_len = self.pages_per_slot * page_size
-        worst = num_slots * self.pages_per_slot + 1          # +1 trash page
+        self.table_width = self.layout.table_width(self.pages_per_slot,
+                                                   page_size)
+        worst = num_slots * self.table_width + 1             # +1 trash page
         self.num_pages = num_pages or worst
-        if self.num_pages < self.pages_per_slot + 1:
+        if self.num_pages < self.table_width + 1:
             raise ValueError(
                 f"num_pages={self.num_pages} cannot hold one request "
-                f"(pages_per_slot={self.pages_per_slot} + trash page)")
+                f"(table_width={self.table_width} + trash page)")
         self.mesh = mesh
         self.enable_prefix_cache = enable_prefix_cache
 
         blank = blank_page_fn()
-        if not all(k in blank for k in ("k", "v")):
-            raise ValueError("paged pool needs a k/v attention cache; "
-                             "got leaves " + str(sorted(blank)))
-        one = {"k": blank["k"], "v": blank["v"]}             # [L,1,ps,KV,hd]
+        missing = [k for k in self.layout.leaves if k not in blank]
+        if missing:
+            raise ValueError(
+                f"paged pool ({self.layout.name} layout) needs decode-state "
+                f"leaves {self.layout.leaves}; missing {missing} in "
+                + str(sorted(blank)))
+        one = {k: blank[k] for k in self.layout.leaves}      # [L,1,ps,...]
         P = self.num_pages
 
         def grow(x):
@@ -146,7 +160,8 @@ class PagedKVCachePool:
 
         if mesh is not None:
             structs = jax.eval_shape(lambda t: jax.tree.map(grow, t), one)
-            self.pspecs = paged_pspecs(structs, model_size=model_size)
+            self.pspecs = paged_pspecs(structs, model_size=model_size,
+                                       layout=self.layout)
             self.shardings = jax.tree.map(
                 lambda s: jax.sharding.NamedSharding(mesh, s), self.pspecs)
             out_sh = {"out_shardings": self.shardings}
@@ -158,7 +173,7 @@ class PagedKVCachePool:
         def _insert(pages, one_state, ids):
             """Scatter a contiguous prefill cache into pages ``ids``.
 
-            one_state k/v: [L, 1, padded_len, KV, hd]; ids
+            one_state leaves: [L, 1, padded_len, ...]; ids
             [pages_per_slot] int32 — entries past the prompt's pages point
             at the trash page and receive the (blank) tail chunks.
             """
@@ -166,25 +181,25 @@ class PagedKVCachePool:
                 xr = x[:, 0].reshape((x.shape[0], self.pages_per_slot,
                                       page_size) + x.shape[3:])
                 return pool.at[:, ids].set(xr.astype(pool.dtype))
-            return {"k": put(pages["k"], one_state["k"]),
-                    "v": put(pages["v"], one_state["v"])}
+            return {n: put(pages[n], one_state[n]) for n in pages}
 
         def _copy(pages, dst, src):
             """Copy-on-write: duplicate page ``src`` into ``dst`` (every
-            layer, k and v) so the new tenant can overwrite its tail."""
-            return {"k": pages["k"].at[:, dst].set(pages["k"][:, src]),
-                    "v": pages["v"].at[:, dst].set(pages["v"][:, src])}
+            layer, every leaf) so the new tenant can overwrite its tail."""
+            return {n: pages[n].at[:, dst].set(pages[n][:, src])
+                    for n in pages}
 
         self._insert = jax.jit(_insert, donate_argnums=(0,), **out_sh)
         self._copy = jax.jit(_copy, donate_argnums=(0,), **out_sh)
         self.pages = jax.jit(lambda t: jax.tree.map(grow, t), **out_sh)(one)
-        if enable_prefix_cache:
+        if enable_prefix_cache or self.layout.ring:
             # compile the COW copy now (trash -> trash no-op): the first
-            # fully-cached-prompt admission must not stall on a jit trace
+            # fully-cached-prompt admission (or ring rotation of a shared
+            # cell) must not stall on a jit trace mid-pass
             self.pages = self._copy(self.pages, jnp.asarray(0, jnp.int32),
                                     jnp.asarray(0, jnp.int32))
 
-        # bytes of one page across layers and k+v (for telemetry)
+        # bytes of one page across layers and leaves (for telemetry)
         self.page_bytes = sum(
             leaf.nbytes // P for leaf in jax.tree.leaves(self.pages))
 
@@ -194,14 +209,19 @@ class PagedKVCachePool:
         self.refcount = np.zeros((P,), np.int32)             # per-page
         self.owner: Dict[int, int] = {}                      # slot -> rid
         self.held: Dict[int, List[int]] = {}                 # slot -> pages
-        self.tables = np.zeros((num_slots, self.pages_per_slot), np.int32)
+        self._blocks: Dict[int, List[int]] = {}              # logical ids
+        self._cells: Dict[int, Dict[int, int]] = {}          # cell -> block
+        self.tables = np.zeros((num_slots, self.table_width), np.int32)
         self.pos = np.zeros((num_slots,), np.int32)
-        # prefix index: chain hash -> (page, parent_hash, block_tokens) —
-        # the latter two verify every hit (hash collisions degrade to
-        # misses); reverse map page -> chain hash; per-slot commit cursor
-        # (next block index, parent hash) so chunked commits hash each
-        # token once; and the LRU of refcount-0 pages still indexed
-        self._index: Dict[int, Tuple[int, int, Tuple[int, ...]]] = {}
+        # prefix index: chain hash -> (page | None, parent_hash, tokens) —
+        # page None marks a *phantom* (reclaimed / rotated out): the chain
+        # still verifies through it, it just has no K/V to map; the stored
+        # pair verifies every hit (hash collisions degrade to misses);
+        # reverse map page -> chain hash; per-slot commit cursor (next
+        # block index, parent hash) so chunked commits hash each token
+        # once; and the LRU of refcount-0 pages still indexed
+        self._index: Dict[int, Tuple[Optional[int], int,
+                                     Tuple[int, ...]]] = {}
         self._block_of_page: Dict[int, int] = {}
         self._commit_cursor: Dict[int, Tuple[int, int]] = {}
         self._cached_lru: "OrderedDict[int, None]" = OrderedDict()
@@ -245,17 +265,20 @@ class PagedKVCachePool:
 
     def can_admit(self, n_tokens: int) -> bool:
         """Is there a slot and enough free pages for an n_tokens prefill
-        (ignoring any prefix sharing — see ``can_admit_prompt``)?"""
-        need = -(-n_tokens // self.page_size)
+        (ignoring any prefix sharing — see ``can_admit_prompt``)?  Ring
+        layouts cap the need at the table width: later blocks reuse cells
+        in place."""
+        need = min(-(-n_tokens // self.page_size), self.table_width)
         return bool(self._free_slots) and self._page_budget() >= need
 
     def can_admit_prompt(self, prompt: Sequence[int]) -> bool:
         """``can_admit`` minus the pages a prefix-cache hit would share."""
         if not self._free_slots:
             return False
-        shared, cow_src, _, _ = self._plan(prompt)
-        need = -(-len(prompt) // self.page_size) - len(shared)
-        return self._alloc_budget(shared, cow_src) >= need
+        shared, cow_src, _, _, start_blk = self._plan(prompt)
+        total = -(-len(prompt) // self.page_size)
+        upfront = min(total, start_blk + self.table_width) - start_blk
+        return self._alloc_budget(shared, cow_src) >= upfront - len(shared)
 
     def _alloc_budget(self, shared: List[int], cow_src: Optional[int]) -> int:
         """Allocatable pages for one admission: the global budget minus LRU
@@ -265,29 +288,55 @@ class PagedKVCachePool:
                                           else []) if p in self._cached_lru)
         return self._page_budget() - pinned
 
-    def _alloc_page(self, slot: int) -> Optional[int]:
-        """Hand a private page to ``slot``: content-free pages first, then
-        reclaim the least-recently-used cached page (de-indexing it)."""
+    # -- page plumbing -----------------------------------------------------
+
+    def _grab(self) -> Optional[int]:
+        """Acquire a raw page: content-free pages first, then reclaim the
+        least-recently-used cached page.  Reclaiming leaves a *phantom*
+        index entry so the chain hash still verifies through the block."""
         if self._free_pages:
-            pid = self._free_pages.pop(0)
-        elif self._cached_lru:
+            return self._free_pages.pop(0)
+        if self._cached_lru:
             pid, _ = self._cached_lru.popitem(last=False)
             h = self._block_of_page.pop(pid)
             entry = self._index.get(h)
             if entry is not None and entry[0] == pid:
-                del self._index[h]
+                self._index[h] = (None, entry[1], entry[2])
+                self._prune_phantoms()
             self._index_version += 1
             self.cached_pages_evicted += 1
-        else:
-            return None
+            return pid
+        return None
+
+    def _prune_phantoms(self) -> None:
+        """Bound the index: phantoms keep chains matchable past reclaimed
+        pages, but a steady stream of distinct prompts would otherwise
+        grow ``_index`` without limit (pre-phantom behaviour deleted on
+        reclaim, capping it at ~num_pages entries).  When phantoms
+        outnumber live entries several-fold, drop them all in one sweep —
+        chains through them degrade to misses, exactly the old semantics,
+        amortized O(1) per reclaim."""
+        live = len(self._block_of_page)
+        if len(self._index) - live > max(4 * self.num_pages, 4 * live):
+            self._index = {h: e for h, e in self._index.items()
+                           if e[0] is not None}
+            self._index_version += 1
+
+    def _bind(self, slot: int, block: int, pid: int) -> None:
+        """Hand a fresh private page to ``slot`` as logical ``block``."""
         self.refcount[pid] = 1
         self.held[slot].append(pid)
-        self.tables[slot, len(self.held[slot]) - 1] = pid
+        self._blocks[slot].append(block)
+        cell = self.layout.cell(block, self.table_width)
+        self._cells[slot][cell] = block
+        self.tables[slot, cell] = pid
         self.pages_allocated += 1
-        return pid
 
-    # kept name: lazy decode growth and the non-sharing insert path use it
-    _take_page = _alloc_page
+    def _alloc_page(self, slot: int, block: int) -> Optional[int]:
+        pid = self._grab()
+        if pid is not None:
+            self._bind(slot, block, pid)
+        return pid
 
     def _retain_page(self, pid: int) -> None:
         """refcount++; a 0 -> 1 transition pulls the page out of the LRU and
@@ -298,11 +347,14 @@ class PagedKVCachePool:
             self.pages_allocated += 1
         self.refcount[pid] += 1
 
-    def _map_shared(self, slot: int, pid: int) -> None:
-        """Map an indexed page read-only into ``slot``."""
+    def _map_shared(self, slot: int, pid: int, block: int) -> None:
+        """Map an indexed page read-only into ``slot`` as ``block``."""
         self._retain_page(pid)
         self.held[slot].append(pid)
-        self.tables[slot, len(self.held[slot]) - 1] = pid
+        self._blocks[slot].append(block)
+        cell = self.layout.cell(block, self.table_width)
+        self._cells[slot][cell] = block
+        self.tables[slot, cell] = pid
         self.prefix_hit_pages += 1
 
     def _release_page(self, pid: int) -> None:
@@ -318,53 +370,155 @@ class PagedKVCachePool:
                 self._free_pages.append(pid)
                 self._free_pages.sort()
 
+    def _page_at(self, slot: int, block: int) -> int:
+        return self.held[slot][self._blocks[slot].index(block)]
+
+    def _unbind(self, slot: int, block: int) -> None:
+        """Drop ``block`` from the slot (ring rotation / full rewrite)."""
+        i = self._blocks[slot].index(block)
+        pid = self.held[slot].pop(i)
+        self._blocks[slot].pop(i)
+        cell = self.layout.cell(block, self.table_width)
+        if self._cells[slot].get(cell) == block:
+            del self._cells[slot][cell]
+        if self.tables[slot, cell] == pid:
+            self.tables[slot, cell] = 0
+        self._release_page(pid)
+
+    def _cow(self, slot: int, block: int, src: int) -> Optional[int]:
+        """Copy-on-write ``src`` (shared or indexed) into a fresh private
+        page bound as ``block``, releasing the slot's reference to src."""
+        dst = self._grab()
+        if dst is None:
+            return None
+        self.pages = self._copy(self.pages, jnp.asarray(dst, jnp.int32),
+                                jnp.asarray(src, jnp.int32))
+        self.cow_copies += 1
+        # src is mapped at most once per slot: replace it in place
+        i = self.held[slot].index(src)
+        self.held[slot][i] = dst
+        self._blocks[slot][i] = block
+        cell = self.layout.cell(block, self.table_width)
+        self._cells[slot][cell] = block
+        self.tables[slot, cell] = dst
+        self.refcount[dst] = 1
+        self.pages_allocated += 1
+        self._release_page(src)
+        return dst
+
+    def _ensure_writable(self, slot: int, lo: int, hi: int) -> bool:
+        """Make every page that positions ``lo..hi`` will write privately
+        writable: allocate missing blocks, rotate ring cells whose
+        incumbent block has wrapped out of the window (reusing a private
+        page in place; dropping or copy-on-writing a shared/indexed one),
+        and COW a same-block page another slot or the index can still
+        read.  Returns False on page starvation (caller preempts)."""
+        ps = self.page_size
+        for b in range(lo // ps, hi // ps + 1):
+            cell = self.layout.cell(b, self.table_width)
+            cur = self._cells[slot].get(cell)
+            if cur == b:
+                pid = self._page_at(slot, b)
+                if self.refcount[pid] > 1 or pid in self._block_of_page:
+                    if self._cow(slot, b, pid) is None:
+                        return False
+            elif cur is None:
+                if self._alloc_page(slot, b) is None:
+                    return False
+            else:                       # ring rotation: cur wrapped out
+                pid = self._page_at(slot, cur)
+                if self.refcount[pid] == 1 and \
+                        pid not in self._block_of_page:
+                    # private, unindexed: reuse the page in place — the
+                    # ring-position arithmetic resolves its mixed old/new
+                    # offsets, so no copy and no allocator traffic
+                    i = self._blocks[slot].index(cur)
+                    self._blocks[slot][i] = b
+                    self._cells[slot][cell] = b
+                else:
+                    # shared/indexed incumbent: COW into a private page and
+                    # release the original (it parks in the LRU when
+                    # indexed — "rotated out of the window" frees it for
+                    # reuse without losing the cached prefix).  The copy is
+                    # never skipped, even when the new block rewrites every
+                    # offset: a prefill chunk's *early* queries still
+                    # attend the old positions through the pre-write
+                    # snapshot gather, which reads whatever page the table
+                    # holds when the chunk runs.
+                    dst = self._grab()
+                    if dst is None:
+                        return False
+                    self.pages = self._copy(self.pages,
+                                            jnp.asarray(dst, jnp.int32),
+                                            jnp.asarray(pid, jnp.int32))
+                    self.cow_copies += 1
+                    self._unbind(slot, cur)
+                    self._bind(slot, b, dst)
+        return True
+
     # -- prefix matching ---------------------------------------------------
 
     def _plan(self, prompt: Sequence[int]
-              ) -> Tuple[List[int], Optional[int], int, Tuple[int, int]]:
-        """(shared_pages, cow_src_page, cached_tokens, commit_seed) for
-        ``prompt``; commit_seed = (first block to register, its parent
-        chain hash) — ``alloc_prefix`` seeds the slot's commit cursor with
-        it, so ``commit_prefix`` never re-hashes blocks the match already
-        walked.
+              ) -> Tuple[List[int], Optional[int], int, Tuple[int, int], int]:
+        """(shared_pages, cow_src_page, cached_tokens, commit_seed,
+        shared_start_block) for ``prompt``; commit_seed = (first block to
+        register, its parent chain hash) — ``alloc_prefix`` seeds the
+        slot's commit cursor with it, so ``commit_prefix`` never re-hashes
+        blocks the match already walked.
 
         Walks the chain-hash index over the prompt's full blocks, verifying
         each hit's stored (parent_hash, block_tokens) so a ``hash()``
-        collision can only miss, never alias another prompt's pages.  A
-        match covering the *entire* prompt keeps its last block out of the
-        read-only mapping and returns it as ``cow_src`` instead: the final
-        prompt token must still run (logits), so that page is duplicated
-        copy-on-write and cached_tokens caps at len(prompt) - 1.  The walk
-        stops hashing at the first miss — a cold prompt costs one block —
-        and the result is memoized until the index next changes, so a probe
+        collision can only miss, never alias another prompt's pages.  The
+        walk passes *through* phantom entries (page reclaimed or rotated
+        out) — the chain still verifies — and then shrinks the match until
+        every block the suffix will actually read
+        (``layout.needed_start``..match) has a live page; for ring layouts
+        blocks before ``needed_start`` are wholly window-masked, so they
+        count as cached without needing any page at all.  A match covering
+        the *entire* prompt keeps its last block out of the read-only
+        mapping and returns it as ``cow_src`` instead: the final prompt
+        token must still run (logits), so that page is duplicated
+        copy-on-write and cached_tokens caps at len(prompt) - 1.  The
+        result is memoized until the index next changes, so a probe
         (``can_admit_prompt``) followed by the admission re-plans nothing.
         """
         ps = self.page_size
+        plen = len(prompt)
         if not self.enable_prefix_cache:
-            return [], None, 0, (0, ps)
+            return [], None, 0, (0, ps), 0
         memo = self._plan_memo
         if memo is not None and memo[0] == self._index_version \
                 and memo[1] == tuple(prompt):
             return memo[2]
-        matched: List[int] = []
+        pids: List[Optional[int]] = []
         hashes: List[int] = []
         for _, blk, parent, h in chain_blocks(prompt, ps):
             entry = self._index.get(h)
             if entry is None or entry[1] != parent or entry[2] != blk:
                 break
-            matched.append(entry[0])
+            pids.append(entry[0])
             hashes.append(h)
-        if not matched:
-            out = [], None, 0, (0, ps)
-        elif len(matched) * ps == len(prompt):
+        m = len(pids)
+        total_full = plen // ps
+        while m:
+            full = (m == total_full and m * ps == plen)
+            cached = plen - 1 if full else m * ps
+            start_blk = self.layout.needed_start(cached, ps)
+            dead = [i for i in range(start_blk, m) if pids[i] is None]
+            if not dead:
+                break
+            m = min(dead)           # truncate below the oldest dead block
+        if not m:
+            out = [], None, 0, (0, ps), 0
+        elif m == total_full and m * ps == plen:
             # the shared read-only blocks end one short of the match; the
             # COW block itself is already indexed, so commits resume there
-            seed = (len(matched) - 1,
-                    hashes[-2] if len(hashes) > 1 else ps)
-            out = matched[:-1], matched[-1], len(prompt) - 1, seed
+            seed = (m - 1, hashes[m - 2] if m > 1 else ps)
+            out = pids[start_blk:m - 1], pids[m - 1], plen - 1, seed, \
+                start_blk
         else:
-            out = matched, None, len(matched) * ps, \
-                (len(matched), hashes[-1])
+            out = pids[start_blk:m], None, m * ps, (m, hashes[m - 1]), \
+                start_blk
         self._plan_memo = (self._index_version, tuple(prompt), out)
         return out
 
@@ -379,46 +533,70 @@ class PagedKVCachePool:
         ``cached_tokens..len(prompt)-1`` — or None when slots or pages run
         short (caller re-queues the request).  ``pos`` is set to the full
         prompt length up front; the engine masks the slot out of decode
-        until its chunked prefill completes.
+        until its chunked prefill completes.  Ring layouts allocate at most
+        one table-width of pages up front: later blocks reuse cells in
+        place (``prepare_chunk`` rotates them ahead of each write).
         """
         plen = len(prompt)
-        shared, cow_src, cached, seed = self._plan(prompt)
+        shared, cow_src, cached, seed, start_blk = self._plan(prompt)
         total = -(-plen // self.page_size)
+        upfront_end = min(total, start_blk + self.table_width)
+        need = (upfront_end - start_blk) - len(shared)
         if not self._free_slots or \
-                self._alloc_budget(shared, cow_src) < total - len(shared):
+                self._alloc_budget(shared, cow_src) < need:
             return None
         slot = self._free_slots.pop(0)
         assert slot not in self.owner, f"slot {slot} double-assigned"
         self.owner[slot] = rid
         self.held[slot] = []
+        self._blocks[slot] = []
+        self._cells[slot] = {}
         self.tables[slot] = 0
         # the commit cursor resumes after the matched prefix — blocks the
         # plan walked are never re-hashed by commit_prefix
         self._commit_cursor[slot] = seed
+        blk = start_blk
         for pid in shared:
-            self._map_shared(slot, pid)
+            self._map_shared(slot, pid, blk)
+            blk += 1
         if cow_src is not None:
             # pin the source so this alloc's own page grabs cannot reclaim
             # it out of the LRU before the device copy lands
             self._retain_page(cow_src)
-            dst = self._alloc_page(slot)
+            dst = self._alloc_page(slot, blk)
             self.pages = self._copy(self.pages, jnp.asarray(dst, jnp.int32),
                                     jnp.asarray(cow_src, jnp.int32))
             self.cow_copies += 1
             self._release_page(cow_src)
-        for _ in range(total - len(self.held[slot])):
-            self._alloc_page(slot)
+            blk += 1
+        while blk < upfront_end:
+            self._alloc_page(slot, blk)
+            blk += 1
         self.pos[slot] = plen
         self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
         return slot, cached
 
+    def prepare_chunk(self, slot: int, start: int, end: int) -> bool:
+        """Make the pages positions ``start..end`` (one prefill chunk) will
+        write privately writable — ring rotation, COW of shared or indexed
+        incumbents.  Contiguous layouts preallocated at admission, so this
+        sweep is a cheap no-op there.  False on page starvation (the
+        caller preempts to relieve the pressure)."""
+        ok = self._ensure_writable(slot, start, end)
+        self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
+        return ok
+
     def commit_prefix(self, slot: int, prompt: Sequence[int]) -> None:
         """Register the slot's now-written full prompt blocks in the index
         (first writer wins; later identical blocks stay private and simply
-        free on eviction).  Chunked prefill calls this after every chunk
+        free on eviction — except that a live page *resurrects* a phantom
+        entry for its block).  Chunked prefill calls this after every chunk
         with a growing prefix; the per-slot cursor resumes the chain hash
         where the last call stopped, so each token is hashed exactly once
-        per admission."""
+        per admission.  Ring layouts register a block's page only while the
+        slot still holds it — a block that has already rotated out of the
+        window leaves a phantom entry, keeping the chain (and the live
+        tail) matchable."""
         if not self.enable_prefix_cache:
             return
         ps = self.page_size
@@ -426,10 +604,13 @@ class PagedKVCachePool:
         cursor = (start, parent)
         for i, blk, p, h in chain_blocks(prompt, ps, start_block=start,
                                          parent=parent):
-            if h not in self._index:
-                pid = self.held[slot][i]
+            pid = (self._page_at(slot, i) if i in self._blocks[slot]
+                   else None)
+            entry = self._index.get(h)
+            if entry is None or (entry[0] is None and pid is not None):
                 self._index[h] = (pid, p, blk)
-                self._block_of_page[pid] = h
+                if pid is not None:
+                    self._block_of_page[pid] = h
                 self._index_version += 1
             cursor = (i + 1, h)
         self._commit_cursor[slot] = cursor
@@ -439,18 +620,27 @@ class PagedKVCachePool:
         slot, allocating ceil(n_tokens / page_size) pages.  None when slots
         or pages are exhausted (caller re-queues the request).  This is the
         non-sharing path: the scatter writes every table entry, so it must
-        never be handed pages another slot can read."""
+        never be handed pages another slot can read.  Contiguous layouts
+        only — a ring cache has no padded contiguous image (the prefix
+        path, ``alloc_prefix`` + paged prefill, serves ring layouts)."""
+        if self.layout.ring:
+            raise ValueError(
+                "ring (windowed) layouts prefill straight into pages via "
+                "alloc_prefix + PagedPrefillContract; the contiguous "
+                "insert path cannot represent a ring cache")
         if not self.can_admit(n_tokens):
             return None
         slot = self._free_slots.pop(0)
         assert slot not in self.owner, f"slot {slot} double-assigned"
         self.owner[slot] = rid
         self.held[slot] = []
+        self._blocks[slot] = []
+        self._cells[slot] = {}
         self.tables[slot] = 0
-        for _ in range(-(-n_tokens // self.page_size)):
-            self._take_page(slot)
+        for b in range(-(-n_tokens // self.page_size)):
+            self._alloc_page(slot, b)
         self.pos[slot] = n_tokens
-        one_kv = {"k": one_state["k"], "v": one_state["v"]}
+        one_kv = {n: one_state[n] for n in self.layout.leaves}
         self.pages = self._insert(self.pages, one_kv,
                                   jnp.asarray(self.tables[slot]))
         self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
@@ -463,6 +653,8 @@ class PagedKVCachePool:
         rid = self.owner.pop(slot)
         for pid in self.held.pop(slot):
             self._release_page(pid)
+        self._blocks.pop(slot, None)
+        self._cells.pop(slot, None)
         self._commit_cursor.pop(slot, None)
         self.tables[slot] = 0
         self.pos[slot] = 0
@@ -475,8 +667,9 @@ class PagedKVCachePool:
         to the free list and no future request can map a previously cached
         block.  Live slots keep serving off their mapped pages — but those
         pages are de-indexed too, so they free (rather than park) on
-        eviction.  Call when cached K/V stops being valid (weight updates)
-        or to measure cold-start behaviour on a warm engine."""
+        eviction.  Call when cached K/V stops being valid (weight updates,
+        layout switches) or to measure cold-start behaviour on a warm
+        engine."""
         self._free_pages.extend(self._cached_lru)
         self._free_pages.sort()
         self._cached_lru.clear()
@@ -485,20 +678,20 @@ class PagedKVCachePool:
         self._index_version += 1
 
     def ensure_decode_capacity(self, skip=()) -> List[int]:
-        """Lazily allocate so every active slot can write position ``pos``
-        (the next decode token).  Returns the slots that could not be
-        extended — the engine preempts to relieve the pressure.  Slots in
-        ``skip`` (still prefilling: pages preallocated, no decode write
-        coming) are left alone."""
+        """Make every active slot able to write position ``pos`` (the next
+        decode token): lazily allocate the page a contiguous slot's next
+        block needs; rotate / COW the ring cell a windowed slot is wrapping
+        into.  Returns the slots that could not be extended — the engine
+        preempts to relieve the pressure.  Slots in ``skip`` (still
+        prefilling: pages prepared per chunk, no decode write coming) are
+        left alone."""
         starved = []
         for slot in self.active_slots:
             if slot in skip:
                 continue
-            need = int(self.pos[slot]) // self.page_size + 1
-            while len(self.held[slot]) < need:
-                if self._take_page(slot) is None:
-                    starved.append(slot)
-                    break
+            pos = int(self.pos[slot])
+            if not self._ensure_writable(slot, pos, pos):
+                starved.append(slot)
         self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
         return starved
 
@@ -531,6 +724,8 @@ class PagedKVCachePool:
 
     def kv_bytes_slotted(self) -> int:
         """K/V bytes a slot-granular pool would statically preallocate for
-        the same config (max_seq_len tokens per slot, no page padding)."""
-        return self.num_slots * self.max_seq_len * (self.page_bytes
-                                                    // self.page_size)
+        the same config — ``max_seq_len`` tokens per slot, bounded by the
+        window for ring layouts (the slotted ring cache is window-sized
+        too), no page padding."""
+        return self.num_slots * self.layout.live_tokens(self.max_seq_len) \
+            * (self.page_bytes // self.page_size)

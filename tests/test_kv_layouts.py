@@ -1,0 +1,280 @@
+"""Pluggable KV-layout matrix (paged MLA + windowed attention, PR 5).
+
+Four layers of guarantees:
+  * layout seam — ``layout_for`` / registry capabilities are driven by the
+    layout, never by ``attn_kind`` string probes; windowed page-size
+    validation rejects pages that cannot tile the window, naming both
+    knobs;
+  * token identity — the paged pool (latent pages for MLA, ring-wrapped
+    window pages for swa/local) emits exactly the slotted pool's greedy
+    tokens: cold, warm (prefix hits incl. the COW'd fully-cached prompt),
+    under a 2x2 data x model mesh, and through preemption;
+  * ring invariants — a windowed slot never holds more than
+    ``window // page_size`` pages; rotation parks indexed pages in the
+    prefix LRU (refcount 0) instead of corrupting them, reuses private
+    pages in place, and never aliases a private page into two tables;
+  * Session hygiene — switching ``kv_layout`` on a live Session retires
+    the incompatible engine and clears its prefix cache.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import MeshConfig, ServeConfig, get_config
+from repro.models import registry
+from repro.serving import PagedKVCachePool, ServingEngine, layout_for
+from repro.serving.layouts import KVLayout
+
+ARCHS = {
+    "mla": ("deepseek-v2-lite-16b", {}),
+    "swa": ("mixtral-8x22b", {}),
+    # no lm-family arch ships attn_kind="local"; the layout seam must not
+    # care (local == swa masking with a different name)
+    "local": ("mixtral-8x22b", {"attn_kind": "local"}),
+}
+
+
+def _cfg(kind):
+    arch, overrides = ARCHS[kind]
+    cfg = get_config(arch, smoke=True)
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def _prompts(rng, vocab, lengths):
+    return [list(rng.integers(0, vocab, (l,))) for l in lengths]
+
+
+def _engine(cfg, layout, params=None, mesh_cfg=None, **kw):
+    base = dict(max_batch=2, max_seq_len=40, max_new_tokens=5,
+                decode_steps=2, kv_layout=layout,
+                page_size=8 if cfg.attn_kind == "mla" else 4)
+    base.update(kw)
+    return ServingEngine(cfg, ServeConfig(**base), params=params,
+                         mesh_cfg=mesh_cfg)
+
+
+# ---------------------------------------------------------------------------
+# Layout seam / capability matrix
+# ---------------------------------------------------------------------------
+
+def test_layout_for_capability_matrix():
+    assert layout_for(_cfg("mla")) == KVLayout("latent", ("ckv", "krope"))
+    assert layout_for(_cfg("swa")).window == _cfg("swa").window
+    assert layout_for(_cfg("local")).ring
+    for kind in ARCHS:
+        caps = registry.build(_cfg(kind)).capabilities()
+        assert {"paged_serve", "prefix_serve"} <= caps, (kind, caps)
+    # recurrent families have no layout and no paged contracts
+    for arch in ("rwkv6-1.6b", "recurrentgemma-2b"):
+        bundle = registry.build(get_config(arch, smoke=True))
+        assert bundle.kv_layout is None
+        assert "paged_serve" not in bundle.capabilities()
+
+
+def test_window_page_size_validation_names_both_knobs():
+    cfg = _cfg("swa")                                   # window = 8
+    with pytest.raises(ValueError) as e:
+        _engine(cfg, "paged", page_size=16, max_seq_len=32)
+    assert "page_size" in str(e.value) and "window" in str(e.value)
+    with pytest.raises(ValueError, match="window"):
+        ServeConfig(page_size=4).check_window(6)        # 4 does not tile 6
+    # slotted never pages: the same knobs are inert there
+    _engine(cfg, "slotted", page_size=16, max_seq_len=32)
+
+
+# ---------------------------------------------------------------------------
+# Token identity: paged (latent / ring) == slotted, cold and warm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", sorted(ARCHS))
+def test_paged_matches_slotted_cold_and_warm(kind):
+    cfg = _cfg(kind)
+    rng = np.random.default_rng(3)
+    prompts = _prompts(rng, cfg.vocab_size, [7, 12, 5, 9])
+    prompts.append(list(prompts[0]))          # identical: warm-in-batch
+    ep = _engine(cfg, "paged")
+    assert ep.paged and ep.layout is not None
+    out_p = ep.generate(prompts, 5)
+    es = _engine(cfg, "slotted", params=ep.params)
+    assert not es.paged
+    out_s = es.generate(prompts, 5)
+    assert out_p == out_s
+    # warm pass: every block is cached now; tokens must not move
+    ep.metrics.reset()
+    ep.results.clear()
+    assert ep.generate(prompts, 5) == out_s
+    assert ep.metrics.prefix_hit_tokens > 0
+    # drain invariants: nothing referenced, counters balanced
+    assert ep.pool.pages_held == 0
+    assert int((ep.pool.refcount > 0).sum()) == 0
+    assert ep.pool.pages_allocated == ep.pool.pages_freed
+    # the latent layout's lazy pages undercut the slotted wall; the ring
+    # layout matches the slotted ring's window bound from above (never
+    # exceeds it)
+    sp = ep.metrics.summary()
+    assert 0 < sp["kv_bytes_peak"] <= sp["kv_bytes_slotted"]
+
+
+@pytest.mark.parametrize("kind", ["mla", "swa"])
+def test_paged_matches_slotted_under_mesh(kind):
+    cfg = _cfg(kind)
+    rng = np.random.default_rng(4)
+    prompts = _prompts(rng, cfg.vocab_size, [7, 11, 6, 9])
+    # conftest forces 8 host devices: 2-way data (slots) x 2-way model (TP)
+    mesh_cfg = MeshConfig(shape=(2, 2), axis_names=("data", "model"))
+    em = _engine(cfg, "paged", mesh_cfg=mesh_cfg, max_batch=4)
+    out_mesh = em.generate(prompts, 4)
+    out_single = _engine(cfg, "slotted", params=em.params,
+                         max_batch=4).generate(prompts, 4)
+    assert out_mesh == out_single
+    assert em.metrics.summary()["completed"] == len(prompts)
+
+
+@pytest.mark.parametrize("kind", ["mla", "swa"])
+def test_paged_preemption_identity(kind):
+    """Oversubscribed pages force preemption; resumed requests re-prefill
+    (typically from their own cached prefix) and emit identical tokens."""
+    cfg = _cfg(kind)
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, cfg.vocab_size, [14, 15])
+    ps = 8 if kind == "mla" else 4
+    # enough for one slot's worst case (+1), short of two slots' worst
+    width = min(-(-32 // ps), (cfg.window // ps) if kind == "swa" else 99)
+    pool = width + max(width // 2, 1) + 1
+    ep = _engine(cfg, "paged", max_seq_len=32, max_new_tokens=12,
+                 num_pages=max(pool, -(-32 // ps) + 1),
+                 prefill_chunk_tokens=6)
+    out_p = ep.generate(prompts, 12)
+    es = _engine(cfg, "slotted", params=ep.params, max_seq_len=32,
+                 max_new_tokens=12)
+    assert out_p == es.generate(prompts, 12)
+    if kind == "mla":                      # ring pools rarely starve: a
+        assert ep.metrics.preemptions >= 1  # slot never outgrows its ring
+    assert int((ep.pool.refcount > 0).sum()) == 0
+    assert ep.pool.pages_allocated == ep.pool.pages_freed
+
+
+def test_mla_cow_isolation_on_fully_cached_prompt():
+    """A fully page-aligned cached MLA prompt re-admits via copy-on-write:
+    the shared latent pages stay bit-identical while the copy is written."""
+    cfg = _cfg("mla")
+    rng = np.random.default_rng(9)
+    prompt = list(rng.integers(0, cfg.vocab_size, (16,)))   # 2 full pages
+    ep = _engine(cfg, "paged", decode_steps=1, max_new_tokens=8)
+    ra = ep.submit(prompt, max_new_tokens=8)
+    ep.step()                              # A admitted + committed
+    from repro.serving.paged import block_hashes
+    shared = [ep.pool._index[h][0] for h in block_hashes(prompt, 8)]
+    assert shared and all(p is not None for p in shared)
+    snap = {pid: (np.asarray(ep.pool.pages["ckv"][:, pid]),
+                  np.asarray(ep.pool.pages["krope"][:, pid]))
+            for pid in shared}
+    rb = ep.submit(prompt, max_new_tokens=8)
+    out = ep.run()
+    assert ep.pool.cow_copies >= 1
+    assert out[ra] == out[rb]
+    for pid, (c0, k0) in snap.items():
+        np.testing.assert_array_equal(
+            np.asarray(ep.pool.pages["ckv"][:, pid]), c0)
+        np.testing.assert_array_equal(
+            np.asarray(ep.pool.pages["krope"][:, pid]), k0)
+
+
+# ---------------------------------------------------------------------------
+# Ring (window) eviction invariants — pool white-box
+# ---------------------------------------------------------------------------
+
+def test_window_ring_rotation_invariants():
+    """A windowed slot's pages are bounded by the ring; rotation parks
+    indexed pages (refcount 0) in the LRU, reuses private pages in place,
+    and the live tail stays matchable for the next admission."""
+    cfg = _cfg("swa")                                    # window = 8
+    bundle = registry.build(cfg)
+    layout = bundle.kv_layout
+    ps = 4
+    pool = PagedKVCachePool(2, ps, 32,
+                            lambda: bundle.init_decode_state(1, ps),
+                            layout=layout, enable_prefix_cache=True)
+    assert pool.table_width == cfg.window // ps == 2
+    prompt = list(range(100, 120))                       # 20 tokens, 5 blocks
+    s0, cached = pool.alloc_prefix(0, prompt)
+    assert cached == 0 and len(pool.held[s0]) == 2       # ring, not 5 pages
+    held_high = 0
+    for lo, hi in ((0, 7), (8, 15), (16, 19)):           # window-capped chunks
+        assert pool.prepare_chunk(s0, lo, hi)
+        pool.commit_prefix(s0, prompt[:hi + 1])
+        held_high = max(held_high, len(pool.held[s0]))
+    assert held_high <= pool.table_width                 # never exceeds ring
+    # rotated-out committed blocks parked in the LRU with refcount 0
+    assert pool.cached_pages >= 2
+    assert all(pool.refcount[p] == 0 for p in pool._cached_lru)
+    # decode write at pos=20 rotates another cell; no starvation
+    assert pool.ensure_decode_capacity() == []
+    assert len(pool.held[s0]) <= pool.table_width
+    # a second identical admission matches the live tail: blocks wholly
+    # out of its window need no page and still count as cached
+    s1, cached1 = pool.alloc_prefix(1, prompt)
+    assert s1 is not None and cached1 >= 12
+    # no private-page aliasing across the two tables
+    shared = set(pool.held[s0]) & set(pool.held[s1])
+    for pid in shared:
+        assert pool.refcount[pid] >= 2                   # genuinely shared
+    for pid in set(pool.held[s1]) - shared:
+        assert pool.refcount[pid] == 1
+    pool.evict(s0)
+    pool.evict(s1)
+    assert pool.pages_held == 0
+    assert int((pool.refcount > 0).sum()) == 0
+    assert pool.pages_allocated == pool.pages_freed
+
+
+def test_phantom_index_entries_are_bounded():
+    """Reclaiming indexed pages leaves phantom chain entries; a steady
+    stream of distinct prompts must not grow the index without bound."""
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    bundle = registry.build(cfg)
+    ps = 4
+    pool = PagedKVCachePool(2, ps, 8, lambda: bundle.init_decode_state(1, ps),
+                            num_pages=6, enable_prefix_cache=True)
+    rng = np.random.default_rng(13)
+    for _ in range(200):                      # 200 distinct 2-block prompts
+        prompt = list(rng.integers(0, cfg.vocab_size, (8,)))
+        slot, _ = pool.alloc_prefix(0, prompt)
+        pool.commit_prefix(slot, prompt)
+        pool.evict(slot)
+    # live entries are capped by the pool size; phantoms by the prune sweep
+    assert len(pool._index) <= 8 * pool.num_pages
+    assert pool.cached_pages <= pool.num_pages
+
+
+def test_window_ring_insert_rejected():
+    """The contiguous insert path cannot represent a ring cache — the
+    prefix path (alloc_prefix + paged prefill) is the only admission."""
+    cfg = _cfg("swa")
+    bundle = registry.build(cfg)
+    pool = PagedKVCachePool(1, 4, 16, lambda: bundle.init_decode_state(1, 4),
+                            layout=bundle.kv_layout)
+    with pytest.raises(ValueError, match="ring"):
+        pool.insert(0, {"k": None, "v": None}, n_tokens=8)
+
+
+# ---------------------------------------------------------------------------
+# Session hygiene on layout switches
+# ---------------------------------------------------------------------------
+
+def test_session_layout_switch_drops_stale_engine():
+    from repro import api
+    sess = api.load("deepseek-v2-lite-16b", smoke=True, num_layers=2)
+    prompt = list(range(4, 20))
+    out_paged = sess.generate(prompt, max_new=4, kv_layout="paged")
+    eng_paged = sess.engine
+    assert eng_paged.paged and eng_paged.pool._index   # prefix cache warm
+    out_slotted = sess.generate(prompt, max_new=4, kv_layout="slotted")
+    # the paged engine is gone from the cache and its prefix cache cleared
+    assert eng_paged not in sess._engines.values()
+    assert not eng_paged.pool._index
+    assert not eng_paged.pool._cached_lru
+    assert out_paged == out_slotted
+    # switching back builds a fresh engine (no stale pool resurrection)
+    sess.generate(prompt, max_new=4, kv_layout="paged")
+    assert sess.engine is not eng_paged

@@ -10,8 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_mla_attention)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_mla_attention_ref,
+                                               ring_positions)
 
 
 def _paged_case(rng, slots, H, KV, hd, ps, n, dtype):
@@ -75,6 +78,114 @@ def test_paged_ref_matches_ring_cache_decode(rng):
                             jnp.asarray([m], jnp.int32))
     np.testing.assert_allclose(np.asarray(paged), np.asarray(ring[:, 0]),
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("m", [5, 8, 13, 24, 29])
+def test_paged_window_ref_matches_ring_cache_decode(rng, m):
+    """Ring-wrapped window pages score identically to ``decode_attend``
+    with a window over the equivalent slotted ring cache — the windowed
+    slotted/paged bridge, across pre-wrap, exact-wrap and wrapped fills."""
+    from repro.models.attention import decode_attend
+    H, KV, hd, ps, n = 4, 2, 32, 8, 3
+    window = n * ps                                  # 24 = ring capacity
+    Lc = window
+    q = jnp.asarray(rng.normal(size=(1, 1, H, hd)), jnp.float32)
+    # write positions 0..m-1 into the slotted ring (slot = pos % Lc)
+    k = jnp.zeros((1, Lc, KV, hd))
+    v = jnp.zeros((1, Lc, KV, hd))
+    pos = np.full((Lc,), -1, np.int32)
+    for p_ in range(m):
+        k = k.at[:, p_ % Lc].set(rng.normal(size=(KV, hd)))
+        v = v.at[:, p_ % Lc].set(rng.normal(size=(KV, hd)))
+        pos[p_ % Lc] = p_
+    cache = {"k": k, "v": v, "pos": jnp.asarray(pos),
+             "index": jnp.asarray(m, jnp.int32)}
+    ring = decode_attend(q, cache, window=window)
+
+    kp = jnp.concatenate([jnp.zeros((1, ps, KV, hd)),
+                          k[0].reshape(n, ps, KV, hd)])
+    vp = jnp.concatenate([jnp.zeros((1, ps, KV, hd)),
+                          v[0].reshape(n, ps, KV, hd)])
+    table = jnp.asarray([[1, 2, 3]], jnp.int32)
+    lengths = jnp.asarray([m], jnp.int32)
+    for use_kernel in (False, True):
+        paged = paged_attention(q[:, 0], kp, vp, table, lengths,
+                                window=window, use_kernel=use_kernel,
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(paged), np.asarray(ring[:, 0]),
+                                   atol=2e-5)
+
+
+def test_ring_positions_formula():
+    """Each ring index resolves to the latest written position congruent to
+    it; never-written cells come back invalid."""
+    p, valid = ring_positions(jnp.asarray([5, 8, 13], jnp.int32), 8, 8)
+    p, valid = np.asarray(p), np.asarray(valid)
+    np.testing.assert_array_equal(p[0][:5], np.arange(5))    # pre-wrap
+    assert not valid[0][5:].any()
+    np.testing.assert_array_equal(p[1], np.arange(8))        # exact fill
+    np.testing.assert_array_equal(p[2], [8, 9, 10, 11, 12, 5, 6, 7])
+
+
+def test_paged_window_kernel_matches_ref(rng):
+    slots, H, KV, hd, ps, n = 3, 4, 2, 32, 8, 3
+    window = n * ps
+    q, kp, vp, table, lengths = _paged_case(rng, slots, H, KV, hd, ps, n,
+                                            jnp.float32)
+    ref = paged_attention_ref(q, kp, vp, table, lengths, window=window)
+    out = paged_attention(q, kp, vp, table, lengths, window=window,
+                          use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("slots,H,R,rp,ps,n", [
+    (3, 4, 32, 8, 8, 4),
+    (2, 8, 16, 16, 4, 3),
+    (1, 2, 64, 8, 16, 2),
+])
+def test_paged_mla_kernel_matches_ref(rng, slots, H, R, rp, ps, n):
+    """Latent-page (absorbed MLA) decode kernel vs the jnp oracle."""
+    P = slots * n + 1
+    q_lat = jnp.asarray(rng.normal(size=(slots, H, R)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(size=(slots, H, rp)), jnp.float32)
+    ckv = jnp.asarray(rng.normal(size=(P, ps, R)), jnp.float32)
+    kr = jnp.asarray(rng.normal(size=(P, ps, rp)), jnp.float32)
+    lengths = np.asarray(rng.integers(1, n * ps + 1, size=slots), np.int32)
+    table = np.zeros((slots, n), np.int32)
+    pid = 1
+    for s in range(slots):
+        for i in range(-(-int(lengths[s]) // ps)):
+            table[s, i] = pid
+            pid += 1
+    table, lengths = jnp.asarray(table), jnp.asarray(lengths)
+    scale = (R + rp) ** -0.5
+    ref = paged_mla_attention_ref(q_lat, q_rope, ckv, kr, table, lengths,
+                                  scale=scale)
+    out = paged_mla_attention(q_lat, q_rope, ckv, kr, table, lengths,
+                              scale=scale, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_mla_trash_page_never_read(rng):
+    """Garbage in latent page 0 must not leak through any valid table."""
+    slots, H, R, rp, ps, n = 2, 4, 32, 8, 8, 3
+    P = slots * n + 1
+    q_lat = jnp.asarray(rng.normal(size=(slots, H, R)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(size=(slots, H, rp)), jnp.float32)
+    ckv = jnp.asarray(rng.normal(size=(P, ps, R)), jnp.float32)
+    kr = jnp.asarray(rng.normal(size=(P, ps, rp)), jnp.float32)
+    lengths = jnp.asarray([5, 17], jnp.int32)
+    table = jnp.asarray([[1, 0, 0], [2, 3, 4]], jnp.int32)
+    base = paged_mla_attention(q_lat, q_rope, ckv, kr, table, lengths,
+                               scale=0.1)
+    ckv2 = ckv.at[0].set(1e4)
+    kr2 = kr.at[0].set(-1e4)
+    for use_kernel in (False, True):
+        out = paged_mla_attention(q_lat, q_rope, ckv2, kr2, table, lengths,
+                                  scale=0.1, use_kernel=use_kernel,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=2e-5)
 
 
 def test_trash_page_never_read(rng):
