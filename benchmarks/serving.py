@@ -35,11 +35,21 @@ serve capacity is provisioned one page above the workload maximum — the
 "slotted pins the worst case, paged holds actuals" regime paging exists
 for.
 
+Since the observability PR every record also carries a ``phases`` section:
+a separate *traced* pass (``ServeConfig(trace=True)`` — repro.obs spans
+with ``block_until_ready`` fencing) attributing the engine-cycle wall to
+host planning vs device prefill vs device decode vs glue.  Traced numbers
+never enter the throughput trajectory (fencing costs tokens/sec); they
+exist to explain it — e.g. whether the paged-vs-slotted gap on ROADMAP
+open item 1 is host bookkeeping or kernel time.
+
 ``--smoke`` runs a seconds-scale workload *per smoke arch* (full, MLA and
 windowed layouts) and asserts the emitted records still carry every
-schema key, so drift breaks CI instead of the next PR's analysis.  The
-``run()`` hook returns harness-style ``(name, us_per_call, derived)``
-rows.
+schema key, so drift breaks CI instead of the next PR's analysis; it also
+writes one Perfetto-loadable Chrome trace per arch (``--trace-dir``) and
+gates on trace-event schema validity plus >= 95% phase coverage of the
+engine-loop wall.  The ``run()`` hook returns harness-style
+``(name, us_per_call, derived)`` rows.
 """
 import argparse
 import json
@@ -60,13 +70,20 @@ SMOKE_ARCHS = ("qwen2.5-14b",) + BENCH_ARCHS
 #: schema gate: every emitted record must carry these (CI --smoke asserts);
 #: 'paged'/'prefix' are required only for archs with a paged decode path
 REQUIRED_KEYS = ("arch", "requests", "slotted", "kv_bytes_saved_ratio",
-                 "prefix")
+                 "prefix", "phases")
 REQUIRED_SUMMARY_KEYS = ("tokens_per_sec", "ttft_p50_s", "itl_p50_s",
                          "kv_bytes_peak", "kv_bytes_slotted",
                          "prefill_tokens", "prefix_hit_rate",
-                         "prefill_tokens_saved", "compile_count")
+                         "prefill_tokens_saved", "compile_count",
+                         "decode_tokens_per_sec", "prefill_tokens_per_sec",
+                         "step_time_s", "plan_time_s", "prefill_time_s",
+                         "decode_time_s", "other_time_s")
 REQUIRED_PREFIX_KEYS = ("hit", "cold", "slotted_tokens_per_sec",
                         "prefill_tokens_saved_ratio", "token_identical")
+#: per-arch traced-attribution section (repro.obs): where the cycle goes
+REQUIRED_PHASE_KEYS = ("step_time_s", "plan_frac", "prefill_device_frac",
+                       "decode_device_frac", "other_frac", "coverage",
+                       "decode_tokens_per_sec", "prefill_tokens_per_sec")
 
 
 def _arch_kw(arch, kw):
@@ -136,6 +153,50 @@ def _serve_once(arch, requests, batch, prompt_len, max_new, kv_layout,
     return engine.paged, best
 
 
+def _traced_attribution(arch, requests, batch, prompt_len, max_new,
+                        page_size, trace_path=None):
+    """One *traced* pass (``ServeConfig(trace=True)``: repro.obs spans +
+    ``block_until_ready`` fencing): where the engine cycle's wall time
+    goes — host planning vs device prefill vs device decode vs glue.
+
+    Deliberately separate from the measured passes: fencing serializes
+    dispatch and costs throughput, so traced numbers feed the attribution
+    fractions only, never the tokens_per_sec trajectory.  When
+    ``trace_path`` is set the Chrome trace JSON (Perfetto-loadable) is
+    written there too."""
+    import numpy as np
+    from repro.obs import phase_coverage
+
+    max_seq = prompt_len + max_new + page_size
+    pages = 3 * batch * (-(-max_seq // page_size)) + 1
+    cfg, engine = _make_engine(arch, batch, max_seq, max_new, "auto",
+                               page_size, num_pages=pages, trace=True)
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(max(prompt_len // 2, 1), prompt_len + 1,
+                           size=requests)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lengths]
+    engine.generate(prompts, max_new)     # compile warm-up
+    engine.tracer.reset()                 # measured traced window only
+    engine.metrics.reset()
+    engine.results.clear()
+    engine.generate(prompts, max_new)
+    s = engine.metrics.summary()
+    st = s["step_time_s"] or 1.0
+    out = {
+        "step_time_s": s["step_time_s"],
+        "plan_frac": s["plan_time_s"] / st,
+        "prefill_device_frac": s["prefill_time_s"] / st,
+        "decode_device_frac": s["decode_time_s"] / st,
+        "other_frac": s["other_time_s"] / st,
+        "coverage": phase_coverage(engine.tracer),
+        "decode_tokens_per_sec": s["decode_tokens_per_sec"],
+        "prefill_tokens_per_sec": s["prefill_tokens_per_sec"],
+    }
+    if trace_path:
+        engine.save_trace(trace_path)
+    return out
+
+
 def _prefix_workload(arch, requests, batch, prefix_len, max_new, page_size):
     """Shared-system-prompt traffic: cold vs prefix-cache vs slotted.
 
@@ -199,12 +260,14 @@ def _prefix_workload(arch, requests, batch, prefix_len, max_new, page_size):
     }
 
 
-def _bench(**kw):
+def _bench(trace_path=None, **kw):
     """{'paged': summary, 'slotted': summary, 'kv_bytes_saved_ratio': x,
-    'prefix': {...}}.
+    'prefix': {...}, 'phases': {...}}.
 
     Archs without a paged decode path (recurrent families — no KVLayout)
-    bench the slotted layout only: no 'paged'/'prefix' section, ratio 0."""
+    bench the slotted layout only: no 'paged'/'prefix' section, ratio 0.
+    'phases' always runs (a separate traced pass — see
+    ``_traced_attribution``)."""
     from repro.configs import get_config
     from repro.models import registry
 
@@ -231,6 +294,9 @@ def _bench(**kw):
         record["prefix"] = _prefix_workload(
             kw["arch"], kw["requests"], kw["batch"], kw["prefix_len"],
             kw["max_new"], kw["page_size"])
+    record["phases"] = _traced_attribution(
+        kw["arch"], kw["requests"], kw["batch"], kw["prompt_len"],
+        kw["max_new"], kw["page_size"], trace_path=trace_path)
     return record
 
 
@@ -252,6 +318,8 @@ def check_schema(record):
     if record.get("prefix"):
         for k in REQUIRED_PREFIX_KEYS:
             assert k in record["prefix"], f"schema drift: missing prefix.{k}"
+    for k in REQUIRED_PHASE_KEYS:
+        assert k in record["phases"], f"schema drift: missing phases.{k}"
     for arch, sub in record.get("archs", {}).items():
         check_schema(sub)
 
@@ -278,6 +346,10 @@ def run(**overrides):
         ("serving_prefill_tokens_saved_ratio", 0.0,
          px.get("prefill_tokens_saved_ratio", 0.0)),
         ("serving_prefill_compile_count", 0.0, p["compile_count"]),
+        ("serving_plan_time_frac", 0.0, r["phases"]["plan_frac"]),
+        ("serving_decode_device_frac", 0.0,
+         r["phases"]["decode_device_frac"]),
+        ("serving_phase_coverage", 0.0, r["phases"]["coverage"]),
     ]
 
 
@@ -295,6 +367,10 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale run + schema assertion (CI gate); "
                          "does not overwrite BENCH_serving.json")
+    ap.add_argument("--trace-dir", default=".",
+                    help="where --smoke writes its per-arch Chrome traces "
+                         "(smoke_trace_<arch>.json, Perfetto-loadable; "
+                         "CI uploads them as artifacts)")
     ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
                                          / "BENCH_serving.json"))
     args = ap.parse_args()
@@ -305,16 +381,32 @@ def main():
         kw.update(requests=6, batch=2, prompt_len=8, max_new=4,
                   page_size=4, prefix_len=16)
         # one workload per page layout: full (contiguous k/v), MLA
-        # (latent), windowed (ring) — schema asserted for each
+        # (latent), windowed (ring) — schema asserted for each, plus the
+        # trace gate: the emitted Chrome trace must be schema-valid
+        # (every event carries ph/ts/pid/tid) and the engine-track section
+        # spans must cover >= 95% of the step wall (the attribution bar)
+        Path(args.trace_dir).mkdir(parents=True, exist_ok=True)
         for arch in SMOKE_ARCHS:
             akw = _arch_kw(arch, kw)
-            r = _bench(**akw)
+            tp = Path(args.trace_dir) / f"smoke_trace_{arch}.json"
+            r = _bench(trace_path=str(tp), **akw)
             record = {"arch": arch, "requests": akw["requests"], **r}
             check_schema(record)
+            evs = json.loads(tp.read_text())["traceEvents"]
+            assert evs and all({"ph", "ts", "pid", "tid"} <= set(e)
+                               for e in evs), \
+                f"trace schema drift in {tp}"
+            ph = record["phases"]
+            assert ph["coverage"] >= 0.95, \
+                f"phase spans cover {ph['coverage']:.1%} < 95% of the " \
+                f"engine-loop wall [{arch}]"
             hit = (record["prefix"] or {}).get("hit", {})
             print(f"smoke OK [{arch}]: schema intact; "
                   f"prefix_hit_rate={hit.get('prefix_hit_rate', 0.0):.2f} "
-                  f"kv_saved={record['kv_bytes_saved_ratio']:.2f}")
+                  f"kv_saved={record['kv_bytes_saved_ratio']:.2f} "
+                  f"phase_coverage={ph['coverage']:.2f} "
+                  f"decode_frac={ph['decode_device_frac']:.2f} "
+                  f"(trace: {tp})")
         return
     record = {
         "arch": kw["arch"], "smoke": True, "requests": kw["requests"],

@@ -373,6 +373,21 @@ class Session:
         """The most recently used serving engine (metrics live here)."""
         return self._last_engine
 
+    @property
+    def tracer(self):
+        """The last-used engine's ``repro.obs`` tracer (``NULL_TRACER``
+        when that engine ran untraced; None before any serve call).  Turn
+        tracing on per call: ``session.serve(..., trace=True)``."""
+        return None if self._last_engine is None else self._last_engine.tracer
+
+    def save_trace(self, path: str) -> Optional[str]:
+        """Write the last serve's Chrome trace JSON (Perfetto-loadable —
+        ui.perfetto.dev / chrome://tracing); None when no engine has run
+        or the last serve was untraced."""
+        if self._last_engine is None:
+            return None
+        return self._last_engine.save_trace(path)
+
     def serve(self, requests: Sequence[Sequence[int]], *,
               max_new: Optional[int] = None, stream=None,
               serve_cfg: Optional[ServeConfig] = None,

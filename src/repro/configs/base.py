@@ -275,6 +275,16 @@ class ServeConfig:
     * ``max_prefills_per_step`` — admission bound: how many *requests* may
       start prefilling per engine cycle (formerly ``prefill_chunk``, which
       remains as a deprecated constructor alias).
+
+    Observability (``repro.obs``):
+
+    * ``trace`` — record per-phase engine spans, per-request lifecycle
+      spans and page-pool cache events into a bounded in-memory ring
+      (exportable as a Perfetto-loadable Chrome trace; per-phase seconds
+      fold into ``ServingMetrics.summary()``).  Traced mode fences device
+      calls with ``block_until_ready`` so host and device time separate —
+      that sync costs throughput, so leave it off for measured perf runs.
+    * ``trace_capacity`` — ring-buffer bound (events); oldest drop first.
     """
     max_batch: int = 8            # decode slots (fixed batched-decode shape)
     max_queue: int = 64           # admission control: reject beyond this
@@ -293,12 +303,14 @@ class ServeConfig:
     enable_prefix_cache: bool = True   # share prompt-prefix pages (paged)
     prefill_bucket: bool = True        # power-of-two prefill length buckets
     prefill_chunk_tokens: int = 0      # chunked prefill size (0 = whole)
+    trace: bool = False                # repro.obs engine tracing (fenced)
+    trace_capacity: int = 1 << 16      # trace ring-buffer bound (events)
     # deprecated alias for max_prefills_per_step (folded in __post_init__)
     prefill_chunk: Optional[int] = None
 
     _INT_KNOBS = ("max_batch", "max_queue", "max_seq_len", "max_new_tokens",
                   "max_prefills_per_step", "decode_steps", "page_size",
-                  "num_pages", "prefill_chunk_tokens")
+                  "num_pages", "prefill_chunk_tokens", "trace_capacity")
 
     def __post_init__(self):
         # normalize numpy integer knobs (e.g. max_batch=arr.shape[0]) so
@@ -346,11 +358,12 @@ class ServeConfig:
                             ("max_seq_len", 2), ("max_new_tokens", 1),
                             ("max_prefills_per_step", 1), ("decode_steps", 1),
                             ("page_size", 1), ("num_pages", 0),
-                            ("prefill_chunk_tokens", 0)):
+                            ("prefill_chunk_tokens", 0),
+                            ("trace_capacity", 1)):
             v = getattr(self, knob)
             if not isinstance(v, int) or isinstance(v, bool) or v < least:
                 raise ValueError(f"{knob}={v!r} must be an int >= {least}")
-        for knob in ("enable_prefix_cache", "prefill_bucket"):
+        for knob in ("enable_prefix_cache", "prefill_bucket", "trace"):
             if not isinstance(getattr(self, knob), bool):
                 raise ValueError(f"{knob}={getattr(self, knob)!r} must be "
                                  "a bool")

@@ -60,6 +60,12 @@ def main():
                     help="print tokens as they are emitted")
     ap.add_argument("--json", action="store_true",
                     help="emit the metrics summary as JSON")
+    ap.add_argument("--trace", metavar="PATH", default="",
+                    help="run the engine traced (repro.obs) and write a "
+                         "Perfetto-loadable Chrome trace JSON here; also "
+                         "prints the per-phase time breakdown (fencing "
+                         "costs throughput — don't combine with measured "
+                         "runs)")
     args = ap.parse_args()
 
     # require the serve capability at load time: a family the engine cannot
@@ -95,7 +101,7 @@ def main():
         prefill_bucket=not args.no_prefill_bucket,
         decode_steps=args.decode_steps,
         kv_layout=args.kv_layout,
-        num_pages=args.num_pages, **page_kw)
+        num_pages=args.num_pages, trace=bool(args.trace), **page_kw)
     engine = session.engine
     s = engine.metrics.summary()
     if args.json:
@@ -117,8 +123,20 @@ def main():
               f"{s['prefill_tokens_saved']} served from prefix cache "
               f"(hit rate {s['prefix_hit_rate']:.2f}), "
               f"{s['compile_count']} compiles")
+        if s["step_time_s"] > 0:
+            st = s["step_time_s"]
+            print(f"  phases plan {s['plan_time_s']/st:6.1%}  "
+                  f"prefill {s['prefill_time_s']/st:6.1%}  "
+                  f"decode {s['decode_time_s']/st:6.1%}  "
+                  f"other {s['other_time_s']/st:6.1%}  "
+                  f"of {st:.2f}s engine wall "
+                  f"(decode {s['decode_tokens_per_sec']:.1f} tok/s, "
+                  f"prefill {s['prefill_tokens_per_sec']:.1f} tok/s)")
         for i, toks in enumerate(outs):
             print(f"  req {i}: {toks[:8]}{'...' if len(toks) > 8 else ''}")
+    if args.trace:
+        print(f"trace written to {session.save_trace(args.trace)} "
+              "(load in ui.perfetto.dev)", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,164 @@
+"""Trace exporters: Chrome trace-event JSON (Perfetto) + flat snapshots.
+
+Two consumers, two shapes:
+
+  * **Chrome trace JSON** (:func:`chrome_trace` / :func:`write_chrome_trace`)
+    — the ``{"traceEvents": [...]}`` format `Perfetto <https://ui.perfetto.
+    dev>`_ (and ``chrome://tracing``) loads directly.  One track (tid) for
+    the engine loop, one per request; spans are complete events (``"X"``),
+    cache/pool happenings are instants (``"i"``), sampled series (queue
+    depth, pages held) are counters (``"C"``).  Timestamps are microseconds
+    relative to the tracer's epoch.  Every event carries ``ph/ts/pid/tid``
+    — asserted by the schema test and the CI smoke gate.
+  * **flat phase snapshot** (:func:`phase_snapshot`) — the per-phase time
+    totals as plain floats, merged into ``ServingMetrics.summary()`` so
+    one JSON record answers "where did the cycle go" without opening a
+    trace; :func:`prometheus_text` renders the same summary as a
+    Prometheus-style text exposition for scrape-shaped consumers.
+
+Phase model (engine track span names):
+
+  * ``step`` wraps one engine cycle; the *sections* ``preempt``, ``admit``,
+    ``prefill``, ``sample``, ``decode.host``, ``decode.device`` and
+    ``complete`` tile it (:data:`STEP_SECTIONS` — their sum over a run is
+    the cycle wall time minus loop glue, asserted >= 95% by the tests);
+  * the *leaves* ``plan`` (host-side prefix planning / page bookkeeping,
+    nested under whichever section triggered it), ``prefill.device`` and
+    ``decode.device`` (jitted calls, fenced with ``block_until_ready`` in
+    traced mode) are mutually disjoint, so
+    ``other = step - plan - prefill.device - decode.device`` is the
+    well-defined "everything else" — scheduling, numpy glue, stream
+    callbacks.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+from repro.obs.trace import ENGINE_TRACK
+
+#: engine-track spans that tile one ``step`` span (coverage denominator)
+STEP_SECTIONS = ("preempt", "admit", "prefill", "sample",
+                 "decode.host", "decode.device", "complete")
+
+#: disjoint leaf phases the summary attributes wall time to
+LEAF_PHASES = ("plan", "prefill.device", "decode.device")
+
+
+def chrome_trace(tracer, *, pid: int = 1) -> Dict[str, Any]:
+    """Convert a tracer's ring buffer into a Chrome trace-event dict.
+
+    Still-open cross-cycle spans (a trace snapshotted mid-serve) are
+    emitted as spans up to ``now`` with ``args.unfinished = true`` rather
+    than dangling ``"B"`` events Perfetto would render unmatched.
+    """
+    t0 = tracer.t0
+    tids: Dict[str, int] = {ENGINE_TRACK: 0}
+    events: List[Dict[str, Any]] = []
+
+    def tid(track: str) -> int:
+        if track not in tids:
+            tids[track] = len(tids)
+        return tids[track]
+
+    def us(t: float) -> float:
+        return (t - t0) * 1e6
+
+    for ph, name, track, ts, value, args in tracer.events:
+        ev: Dict[str, Any] = {"name": name, "ph": ph, "ts": us(ts),
+                              "pid": pid, "tid": tid(track),
+                              "cat": "serving"}
+        if ph == "X":
+            ev["dur"] = value * 1e6
+            if args:
+                ev["args"] = args
+        elif ph == "i":
+            ev["s"] = "t"                      # thread-scoped instant
+            if args:
+                ev["args"] = args
+        elif ph == "C":
+            ev["args"] = {"value": value}
+        events.append(ev)
+    if getattr(tracer, "_open", None):
+        now = tracer.now()
+        for (track, name), (ts, args) in sorted(tracer._open.items()):
+            events.append({"name": name, "ph": "X", "ts": us(ts),
+                           "dur": (now - ts) * 1e6, "pid": pid,
+                           "tid": tid(track), "cat": "serving",
+                           "args": dict(args or {}, unfinished=True)})
+    meta_events = [{"name": "process_name", "ph": "M", "ts": 0, "pid": pid,
+                    "tid": 0, "args": {"name": "repro.serving"}}]
+    for track, t in sorted(tids.items(), key=lambda kv: kv[1]):
+        meta_events.append({"name": "thread_name", "ph": "M", "ts": 0,
+                            "pid": pid, "tid": t, "args": {"name": track}})
+        meta_events.append({"name": "thread_sort_index", "ph": "M", "ts": 0,
+                            "pid": pid, "tid": t,
+                            "args": {"sort_index": t}})
+    return {"traceEvents": meta_events + events,
+            "displayTimeUnit": "ms",
+            "otherData": dict(tracer.meta, dropped_events=tracer.dropped)}
+
+
+def write_chrome_trace(tracer, path: str, *, pid: int = 1) -> str:
+    """Serialize :func:`chrome_trace` to ``path``; returns the path."""
+    with open(path, "w") as f:
+        json.dump(chrome_trace(tracer, pid=pid), f)
+    return path
+
+
+def phase_snapshot(tracer) -> Dict[str, float]:
+    """Flat per-phase attribution totals (seconds) for the summary merge.
+
+    ``*_time_s`` keys are the disjoint leaves plus the enclosing ``step``
+    wall; ``other_time_s`` is step minus the leaves — host scheduling,
+    numpy glue, stream callbacks.  All zeros for a :class:`NullTracer`
+    (tracing off), so the summary schema is stable either way.
+    """
+    ph = tracer.phase_seconds
+    step = ph.get("step", 0.0)
+    plan = ph.get("plan", 0.0)
+    prefill = ph.get("prefill.device", 0.0)
+    decode = ph.get("decode.device", 0.0)
+    return {
+        "step_time_s": step,
+        "plan_time_s": plan,
+        "prefill_time_s": prefill,
+        "decode_time_s": decode,
+        "other_time_s": max(step - plan - prefill - decode, 0.0),
+    }
+
+
+def phase_coverage(tracer) -> float:
+    """Fraction of engine-loop wall time the section spans account for
+    (the acceptance bar: >= 0.95 on a traced smoke serve).  1.0 when
+    nothing was traced — an empty trace has no unattributed time."""
+    ph = tracer.phase_seconds
+    step = ph.get("step", 0.0)
+    if step <= 0.0:
+        return 1.0
+    return min(sum(ph.get(s, 0.0) for s in STEP_SECTIONS) / step, 1.0)
+
+
+def prometheus_text(summary: Dict[str, Any], tracer=None,
+                    prefix: str = "repro_serving") -> str:
+    """Prometheus-style text exposition of a ``ServingMetrics.summary()``
+    dict (numeric fields only), plus per-phase seconds as one labelled
+    series when a tracer is supplied."""
+    lines = [f"# {prefix}: serving engine snapshot"]
+    for k, v in summary.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        lines.append(f"{prefix}_{k} {v}")
+    if tracer is not None:
+        for name, secs in sorted(tracer.phase_seconds.items()):
+            lines.append(
+                f'{prefix}_phase_seconds{{phase="{name}"}} {secs}')
+            lines.append(
+                f'{prefix}_phase_calls{{phase="{name}"}} '
+                f"{tracer.phase_counts.get(name, 0)}")
+    return "\n".join(lines) + "\n"
+
+
+__all__ = ["chrome_trace", "write_chrome_trace", "phase_snapshot",
+           "phase_coverage", "prometheus_text", "STEP_SECTIONS",
+           "LEAF_PHASES"]

@@ -74,6 +74,8 @@ import numpy as np
 
 from repro.configs.base import MeshConfig, ModelConfig, ServeConfig
 from repro.models import common, registry
+from repro.obs import (NULL_TRACER, Tracer, request_track,
+                       write_chrome_trace)
 from repro.serving.kvcache import SlotKVCachePool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import PagedKVCachePool
@@ -115,6 +117,18 @@ class ServingEngine:
         self.model_cfg = model_cfg
         # (ServeConfig self-validates at construction — no re-check here)
         self.cfg = serve_cfg or ServeConfig()
+        # observability: one engine-owned Tracer (ServeConfig(trace=True))
+        # threaded through scheduler, pool and metrics; NULL_TRACER keeps
+        # every emit a no-op attribute call when tracing is off
+        self.tracer = (Tracer(capacity=self.cfg.trace_capacity,
+                              meta={"model": model_cfg.name,
+                                    "family": model_cfg.family,
+                                    "backend": jax.default_backend()})
+                       if self.cfg.trace else NULL_TRACER)
+        # traced mode fences device calls (block_until_ready) so host vs
+        # device time separates; untraced, dispatch stays fully async
+        self._fence = (jax.block_until_ready if self.tracer.enabled
+                       else (lambda x: x))
         self.bundle = registry.build(model_cfg)
         caps = self.bundle.capabilities()
         if "serve" not in caps:
@@ -172,7 +186,8 @@ class ServingEngine:
                 num_pages=self.cfg.num_pages, mesh=self.mesh,
                 model_size=model_size, layout=self.layout,
                 enable_prefix_cache=(self.cfg.enable_prefix_cache
-                                     and self._prefix_path))
+                                     and self._prefix_path),
+                tracer=self.tracer)
             self._cache_len = self.pool.padded_len   # page-multiple prefill
             # ring chunks are capped at the window: a longer write-then-
             # attend chunk would wrap onto cells its own queries still need
@@ -186,8 +201,8 @@ class ServingEngine:
                 model_size=model_size)
             self._cache_len = self.cfg.max_seq_len
 
-        self.scheduler = Scheduler(self.cfg)
-        self.metrics = ServingMetrics(clock)
+        self.scheduler = Scheduler(self.cfg, tracer=self.tracer)
+        self.metrics = ServingMetrics(clock, tracer=self.tracer)
         self.requests: Dict[int, Request] = {}
         self.results: Dict[int, List[int]] = {}
         self._rid = itertools.count()
@@ -203,6 +218,10 @@ class ServingEngine:
             def wrapped(*a, **k):
                 self.prefill_compiles += 1
                 self.metrics.record_prefill_compile()
+                # a[1] is the token operand: its (traced) shape is the
+                # bucket this compile covers
+                self.tracer.instant("prefill.compile",
+                                    shape=list(a[1].shape))
                 return fn(*a, **k)
             return wrapped
 
@@ -311,6 +330,8 @@ class ServingEngine:
             return None
         self.requests[rid] = req
         self.metrics.record_submit(rid)
+        self.tracer.begin("queued", track=request_track(rid),
+                          prompt_tokens=len(prompt))
         return rid
 
     # ------------------------------------------------------------------
@@ -345,6 +366,11 @@ class ServingEngine:
         self.pool.evict(slot)
         self.results[req.rid] = req.tokens
         self.metrics.record_completion(req.rid)
+        rt = request_track(req.rid)
+        self.tracer.end("decode", track=rt, tokens=len(req.tokens))
+        self.tracer.instant("request.complete", track=rt, rid=req.rid,
+                            tokens=len(req.tokens),
+                            preempted=req.preempted)
 
     def _can_admit(self, prompt) -> bool:
         """Would the paged pool take this prompt right now (slot + pages,
@@ -370,6 +396,7 @@ class ServingEngine:
         The pool is the single admission authority: no pre-check re-plans
         the prompt, so each admission attempt hashes its blocks once."""
         prompt = req.resume_prompt()
+        rt = request_track(req.rid)
         if self._prefix_path:
             # map cached prefix pages read-only; suffix prefills in chunks
             # (the first chunk runs this same cycle in _advance_prefills)
@@ -379,21 +406,31 @@ class ServingEngine:
             slot, cached = out
             if cached:
                 self.metrics.record_prefix_hit(cached)
+            self.tracer.end("queued", track=rt)
+            self.tracer.begin("prefill", track=rt,
+                              prompt_tokens=len(prompt),
+                              prefix_hit_tokens=cached)
             self._prefilling[slot] = _PrefillJob(req, prompt, cached)
             return True
         if self.paged and not self.pool.can_admit(len(prompt)):
             # slot free but pages aren't: don't burn a prefill that
             # cannot be placed
             return False
+        self.tracer.end("queued", track=rt)
         toks, n_valid = self._bucketed_prompt(prompt, self._cache_len)
-        if n_valid is None:
-            logits, state = self._prefill(self.params, toks,
-                                          cache_len=self._cache_len)
-        else:
-            logits, state = self._prefill(self.params, toks,
-                                          cache_len=self._cache_len,
-                                          n_valid=jnp.asarray(n_valid,
-                                                              jnp.int32))
+        self.tracer.begin("prefill", track=rt, prompt_tokens=len(prompt),
+                          bucket=int(toks.shape[1]))
+        with self.tracer.span("prefill.device", tokens=len(prompt),
+                              bucket=int(toks.shape[1])):
+            if n_valid is None:
+                logits, state = self._prefill(self.params, toks,
+                                              cache_len=self._cache_len)
+            else:
+                logits, state = self._prefill(self.params, toks,
+                                              cache_len=self._cache_len,
+                                              n_valid=jnp.asarray(n_valid,
+                                                                  jnp.int32))
+            self._fence(logits)
         self.metrics.record_prefill(len(prompt))
         if self.paged:
             slot = self.pool.insert(req.rid, state, n_tokens=len(prompt))
@@ -403,6 +440,8 @@ class ServingEngine:
             raise RuntimeError("admission with no free slot")
         token = int(jnp.argmax(logits[0]))
         self._last_tokens[slot] = token
+        self.tracer.end("prefill", track=rt)
+        self.tracer.begin("decode", track=rt)
         if self._emit(req, token, stream):
             self._complete(slot, req)
         return True
@@ -435,11 +474,17 @@ class ServingEngine:
                      if self.cfg.prefill_bucket else chunk)
             toks = np.zeros((1, width), np.int32)
             toks[0, :chunk] = job.prompt[job.done:job.done + chunk]
-            logits, self.pool.pages = self._paged_prefill(
-                self.params, jnp.asarray(toks), self.pool.pages,
-                jnp.asarray(self.pool.tables[slot]),
-                jnp.asarray(job.done, jnp.int32),
-                jnp.asarray(chunk, jnp.int32))
+            rt = request_track(job.req.rid)
+            with self.tracer.span("prefill.chunk", track=rt, chunk=chunk,
+                                  bucket=width, start=job.done):
+                with self.tracer.span("prefill.device", tokens=chunk,
+                                      bucket=width):
+                    logits, self.pool.pages = self._paged_prefill(
+                        self.params, jnp.asarray(toks), self.pool.pages,
+                        jnp.asarray(self.pool.tables[slot]),
+                        jnp.asarray(job.done, jnp.int32),
+                        jnp.asarray(chunk, jnp.int32))
+                    self._fence(logits)
             self.metrics.record_prefill(chunk)
             job.done += chunk
             # register fully-written blocks right away: requests admitted
@@ -450,6 +495,8 @@ class ServingEngine:
             del self._prefilling[slot]
             token = int(jnp.argmax(logits[0]))
             self._last_tokens[slot] = token
+            self.tracer.end("prefill", track=rt)
+            self.tracer.begin("decode", track=rt)
             if self._emit(job.req, token, stream):
                 self._complete(slot, job.req)
 
@@ -464,6 +511,14 @@ class ServingEngine:
         self.pool.evict(slot)
         self.scheduler.requeue(victim)
         self.metrics.record_preemption(victim.rid)
+        # close whichever lifecycle span the victim had open (end() of a
+        # not-open span is a silent no-op) and put it back to "queued"
+        rt = request_track(victim.rid)
+        self.tracer.end("prefill", track=rt, preempted=True)
+        self.tracer.end("decode", track=rt, preempted=True)
+        self.tracer.instant("request.preempt", track=rt, rid=victim.rid,
+                            preemptions=victim.preempted)
+        self.tracer.begin("queued", track=rt, resumed=True)
 
     def _relieve_pressure(self, prefer_not: Optional[int] = None):
         """Preempt the lowest-priority, youngest running request to free
@@ -497,78 +552,122 @@ class ServingEngine:
         return any(s not in self._prefilling for s in self.pool.owner)
 
     def step(self, stream: Optional[StreamFn] = None) -> bool:
-        """One engine cycle; returns True while work remains."""
+        """One engine cycle; returns True while work remains.
+
+        Traced (``ServeConfig(trace=True)``), the cycle decomposes into the
+        section spans of ``repro.obs.export.STEP_SECTIONS`` — they tile the
+        enclosing ``step`` span, and the device calls are fenced with
+        ``block_until_ready`` so host vs device time separates.  Untraced,
+        every ``with tracer.span(...)`` is the shared no-op context manager
+        and no fence runs.
+        """
         cfg = self.cfg
+        tr = self.tracer
+        with tr.span("step"):
+            self._step_body(stream, cfg, tr)
+        return self.busy
+
+    def _step_body(self, stream: Optional[StreamFn], cfg: ServeConfig,
+                   tr) -> None:
         # 1. preemption (priority policy only): fires when admission is
         # blocked — no free slot, or (paged) too few free pages for the
         # most urgent waiter's prompt (prefix-cache hits shrink that need)
-        if cfg.policy == "priority" and self.scheduler.depth():
-            head = self.scheduler.peek()
-            blocked = (self.pool.free_slots == 0
-                       or (self.paged
-                           and not self._can_admit(head.resume_prompt())))
-            if blocked:
-                running = {s: self.requests[r]
-                           for s, r in self.pool.owner.items()}
-                for slot, _ in self.scheduler.preemption(running):
-                    self._preempt(slot)
+        with tr.span("preempt"):
+            if cfg.policy == "priority" and self.scheduler.depth():
+                head = self.scheduler.peek()
+                blocked = (self.pool.free_slots == 0
+                           or (self.paged
+                               and not self._can_admit(
+                                   head.resume_prompt())))
+                if blocked:
+                    running = {s: self.requests[r]
+                               for s, r in self.pool.owner.items()}
+                    for slot, _ in self.scheduler.preemption(running):
+                        self._preempt(slot)
         # 2. admission: map prefix pages / prefill into free slots.  When
         # the pool declines (slot free but pages aren't), wait for running
         # work to finish: EVERY not-yet-admitted popped request goes back
         # (reversed, so the head of the line ends up most negative = first)
         # — head-of-line blocking, never a silent drop.
-        pending = self.scheduler.next_prefills(self.pool.free_slots)
-        for i, req in enumerate(pending):
-            if not self._admit(req, stream):
-                for r in reversed(pending[i:]):
-                    self.scheduler.push_front(r)
-                break
+        with tr.span("admit"):
+            pending = self.scheduler.next_prefills(self.pool.free_slots)
+            for i, req in enumerate(pending):
+                if not self._admit(req, stream):
+                    for r in reversed(pending[i:]):
+                        self.scheduler.push_front(r)
+                    break
         # 2b. chunked prefill: one chunk per mid-prefill slot per cycle
-        if self._prefilling:
-            self._advance_prefills(stream)
-        self.metrics.sample_queue_depth(self.scheduler.depth())
-        self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
-                                     self.pool.kv_bytes_slotted())
+        with tr.span("prefill"):
+            if self._prefilling:
+                self._advance_prefills(stream)
+        with tr.span("sample"):
+            self.metrics.sample_queue_depth(self.scheduler.depth())
+            self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
+                                         self.pool.kv_bytes_slotted())
         # 3. batched decode over the fixed pool
         for _ in range(cfg.decode_steps):
             if not self._decodable():
                 break
             if self.paged:
-                self._grow_pages()
-                if not self._decodable():
+                with tr.span("decode.host"):
+                    self._grow_pages()
+                    decodable = self._decodable()
+                    if decodable:
+                        # held pages peak right after growth (completion
+                        # evictions come later in this iteration) — sample
+                        # here so kv_bytes_peak sees the true high-water
+                        # mark
+                        self.metrics.sample_kv_bytes(
+                            self.pool.kv_bytes_held(),
+                            self.pool.kv_bytes_slotted())
+                        table, pos = self.pool.decode_view(
+                            mask_slots=tuple(self._prefilling))
+                        toks = jnp.asarray(self._last_tokens[:, None])
+                if not decodable:
                     break
-                # held pages peak right after growth (completion evictions
-                # come later in this iteration) — sample here so the
-                # kv_bytes_peak metric sees the true high-water mark
-                self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
-                                             self.pool.kv_bytes_slotted())
-                table, pos = self.pool.decode_view(
-                    mask_slots=tuple(self._prefilling))
-                toks = jnp.asarray(self._last_tokens[:, None])
-                nxt, self.pool.pages = self._decode(self.params, toks,
-                                                    self.pool.pages, table,
-                                                    pos)
-                self.pool.advance(skip=self._prefilling.keys())
+                with tr.span("decode.device"):
+                    nxt, self.pool.pages = self._decode(self.params, toks,
+                                                        self.pool.pages,
+                                                        table, pos)
+                    self._fence(nxt)
+                with tr.span("decode.host"):
+                    self.pool.advance(skip=self._prefilling.keys())
             else:
-                toks = jnp.asarray(self._last_tokens.reshape(-1, 1, 1))
-                nxt, self.pool.state = self._decode(self.params, toks,
-                                                    self.pool.state)
-            nxt = np.asarray(nxt)
-            self._last_tokens = nxt.copy()
+                with tr.span("decode.host"):
+                    toks = jnp.asarray(self._last_tokens.reshape(-1, 1, 1))
+                with tr.span("decode.device"):
+                    nxt, self.pool.state = self._decode(self.params, toks,
+                                                        self.pool.state)
+                    self._fence(nxt)
             # 4. completion swap-out (mid-prefill slots have no token yet)
-            for slot, rid in sorted(self.pool.owner.items()):
-                if slot in self._prefilling:
-                    continue
-                req = self.requests[rid]
-                if self._emit(req, int(nxt[slot]), stream):
-                    self._complete(slot, req)
-        return self.busy
+            with tr.span("complete"):
+                nxt = np.asarray(nxt)
+                self._last_tokens = nxt.copy()
+                for slot, rid in sorted(self.pool.owner.items()):
+                    if slot in self._prefilling:
+                        continue
+                    req = self.requests[rid]
+                    self.metrics.record_decode_token()
+                    if self._emit(req, int(nxt[slot]), stream):
+                        self._complete(slot, req)
 
     def run(self, stream: Optional[StreamFn] = None) -> Dict[int, List[int]]:
         """Drive the loop until queue and slots drain; returns rid -> tokens."""
         while self.step(stream):
             pass
         return dict(self.results)
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def save_trace(self, path: str) -> Optional[str]:
+        """Write the tracer's ring buffer as a Perfetto-loadable Chrome
+        trace JSON (``{"traceEvents": [...]}``); None when the engine runs
+        untraced (``ServeConfig(trace=False)`` — nothing was recorded)."""
+        if not self.tracer.enabled:
+            return None
+        return write_chrome_trace(self.tracer, path)
 
     # ------------------------------------------------------------------
     # Convenience: serve a closed batch of prompts

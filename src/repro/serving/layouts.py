@@ -124,6 +124,16 @@ class KVLayout:
             return 0
         return max(0, cached_tokens - self.window + 1) // page_size
 
+    # -- observability -----------------------------------------------------
+
+    def describe(self) -> dict:
+        """Flat JSON-friendly identity for trace metadata: which physical
+        page format a trace was captured against (``repro.obs`` stamps it
+        into the Chrome trace's ``otherData`` and the pool's init event),
+        so an attribution number is never read against the wrong layout."""
+        return {"layout": self.name, "leaves": list(self.leaves),
+                "window": self.window, "ring": self.ring}
+
     # -- sharding ----------------------------------------------------------
 
     def page_pspec(self, name: str, leaf, model_size: int):

@@ -6,13 +6,18 @@ is injectable so tests can drive deterministic timelines.
 
 ``summary()`` is the export surface: a flat dict (JSON-friendly) consumed by
 ``launch/serve.py`` (pretty print) and ``benchmarks/serving.py``
-(BENCH_serving.json trajectory).
+(BENCH_serving.json trajectory).  When the engine runs traced
+(``ServeConfig(trace=True)``) the attached ``repro.obs.Tracer``'s per-phase
+seconds fold into the same dict — plan / prefill / decode / other wall
+time, and the prefill-vs-decode throughput split those times enable.
 """
 from __future__ import annotations
 
 import math
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
+
+from repro.obs import NULL_TRACER, phase_snapshot
 
 
 def percentile(xs: List[float], p: float) -> float:
@@ -35,14 +40,22 @@ class ServingMetrics:
 
     Timeline per request: submit -> first_token (TTFT, covers queueing +
     prefill) -> token* (inter-token latency) -> completion.
+
+    ``tracer`` (a ``repro.obs.Tracer`` / ``NULL_TRACER``) is attached by
+    the engine; ``summary()`` folds its per-phase seconds in.  The tracer
+    is engine-owned and survives ``reset()`` — reset it separately when a
+    measured window must start clean.
     """
 
-    def __init__(self, clock: Optional[Callable[[], float]] = None):
+    def __init__(self, clock: Optional[Callable[[], float]] = None,
+                 tracer=None):
         self._clock = clock or time.monotonic
+        self.tracer = tracer
         self.reset()
 
     def reset(self) -> None:
-        """Zero every counter (benchmarks reuse warm engines)."""
+        """Zero every counter (benchmarks reuse warm engines).  The
+        attached tracer is NOT reset — it is engine-owned state."""
         self._submit_t: Dict[int, float] = {}
         self._last_token_t: Dict[int, float] = {}
         self.ttft: List[float] = []
@@ -54,6 +67,7 @@ class ServingMetrics:
         self.rejected = 0
         self.completed = 0
         self.tokens_out = 0
+        self.decode_tokens = 0                     # emitted by decode steps
         self.prefill_tokens = 0
         self.prefix_hit_tokens = 0                 # served from cached pages
         self.prefill_compiles = 0                  # distinct prefill traces
@@ -78,6 +92,12 @@ class ServingMetrics:
         """Prompt tokens actually *run* through prefill (bucket padding and
         prefix-cache hits excluded — this is the FLOPs-proportional count)."""
         self.prefill_tokens += n_prompt_tokens
+
+    def record_decode_token(self) -> None:
+        """A token produced by a batched *decode* step (as opposed to the
+        token a prefill's final logits emit) — the numerator of
+        ``decode_tokens_per_sec``."""
+        self.decode_tokens += 1
 
     def record_prefix_hit(self, n_tokens: int) -> None:
         """Prompt tokens served from shared cached pages instead of being
@@ -136,16 +156,40 @@ class ServingMetrics:
     # -- export ------------------------------------------------------------
 
     def elapsed(self) -> float:
+        """Measurement window in seconds: first ``record_submit`` to the
+        last token/completion event (submit -> last-token, NOT process
+        lifetime — queueing is inside the window, engine idle time after
+        the last completion is not).  0.0 when nothing was ever admitted
+        (e.g. a run where every request was rejected): the throughput
+        fields then report honest zeros while ``rejected`` still counts
+        the shed load."""
         if self._t_start is None or self._t_end is None:
             return 0.0
         return max(self._t_end - self._t_start, 0.0)
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, Union[int, float]]:
+        """Flat JSON-friendly export (int counters + float gauges; an
+        earlier annotation claimed all-float).  Rate fields divide by
+        ``elapsed()`` / traced phase seconds and report 0.0 whenever the
+        denominator is 0 — a rejected-everything run or an untraced engine
+        yields honest zeros, never a ZeroDivisionError.
+
+        ``decode_tokens_per_sec`` / ``prefill_tokens_per_sec`` split the
+        combined ``tokens_per_sec`` (kept for BENCH comparability) by the
+        tracer's accumulated device-phase time: decode tokens over decode
+        kernel seconds, prefill tokens *run* (prefix hits excluded) over
+        prefill kernel seconds.  Both are 0.0 with tracing off — per-phase
+        time does not exist untraced.
+        """
         dt = self.elapsed()
         prompt_tokens = self.prefill_tokens + self.prefix_hit_tokens
+        phases = phase_snapshot(self.tracer if self.tracer is not None
+                                else NULL_TRACER)
+        dec_t, pre_t = phases["decode_time_s"], phases["prefill_time_s"]
         return {
             "completed": self.completed,
             "tokens_out": self.tokens_out,
+            "decode_tokens": self.decode_tokens,
             "prefill_tokens": self.prefill_tokens,
             "prefix_hit_rate": (self.prefix_hit_tokens / prompt_tokens
                                 if prompt_tokens else 0.0),
@@ -153,6 +197,11 @@ class ServingMetrics:
             "compile_count": self.prefill_compiles,
             "elapsed_s": dt,
             "tokens_per_sec": (self.tokens_out / dt) if dt > 0 else 0.0,
+            "decode_tokens_per_sec": (self.decode_tokens / dec_t
+                                      if dec_t > 0 else 0.0),
+            "prefill_tokens_per_sec": (self.prefill_tokens / pre_t
+                                       if pre_t > 0 else 0.0),
+            **phases,
             "ttft_mean_s": sum(self.ttft) / len(self.ttft) if self.ttft else 0.0,
             "ttft_p50_s": percentile(self.ttft, 50),
             "ttft_p99_s": percentile(self.ttft, 99),

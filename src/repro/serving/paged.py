@@ -67,6 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import NULL_TRACER
 from repro.serving.layouts import KV_FULL, KVLayout
 
 P_ = jax.sharding.PartitionSpec
@@ -124,8 +125,11 @@ class PagedKVCachePool:
     def __init__(self, num_slots: int, page_size: int, max_seq_len: int,
                  blank_page_fn, *, num_pages: int = 0, mesh=None,
                  model_size: int = 1, enable_prefix_cache: bool = False,
-                 layout: Optional[KVLayout] = None):
+                 layout: Optional[KVLayout] = None, tracer=None):
         assert num_slots >= 1 and page_size >= 1
+        # cache events (alloc/COW/ring/LRU/prefix hit-miss) + plan spans go
+        # to the engine's tracer; NULL_TRACER keeps every emit a no-op
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.layout = layout or KV_FULL
         self.layout.check_page_size(page_size)
         self.num_slots = num_slots
@@ -230,6 +234,10 @@ class PagedKVCachePool:
         # prompt, same cycle) walk the chain hash once between index changes
         self._index_version = 0
         self._plan_memo: Optional[Tuple[int, Tuple[int, ...], tuple]] = None
+        self.tracer.instant("pool.init", num_pages=self.num_pages,
+                            page_size=page_size,
+                            table_width=self.table_width,
+                            **self.layout.describe())
         self.pages_allocated = 0                             # lifetime counters
         self.pages_freed = 0
         self.peak_pages_held = 0
@@ -305,6 +313,7 @@ class PagedKVCachePool:
                 self._prune_phantoms()
             self._index_version += 1
             self.cached_pages_evicted += 1
+            self.tracer.instant("pool.lru_reclaim", page=pid)
             return pid
         return None
 
@@ -331,6 +340,8 @@ class PagedKVCachePool:
         self._cells[slot][cell] = block
         self.tables[slot, cell] = pid
         self.pages_allocated += 1
+        self.tracer.instant("pool.page_alloc", page=pid, slot=slot,
+                            block=block)
 
     def _alloc_page(self, slot: int, block: int) -> Optional[int]:
         pid = self._grab()
@@ -366,9 +377,11 @@ class PagedKVCachePool:
             self.pages_freed += 1
             if pid in self._block_of_page:
                 self._cached_lru[pid] = None        # most-recent end
+                self.tracer.instant("pool.lru_park", page=pid)
             else:
                 self._free_pages.append(pid)
                 self._free_pages.sort()
+                self.tracer.instant("pool.page_free", page=pid)
 
     def _page_at(self, slot: int, block: int) -> int:
         return self.held[slot][self._blocks[slot].index(block)]
@@ -394,6 +407,8 @@ class PagedKVCachePool:
         self.pages = self._copy(self.pages, jnp.asarray(dst, jnp.int32),
                                 jnp.asarray(src, jnp.int32))
         self.cow_copies += 1
+        self.tracer.instant("pool.cow", src=src, dst=dst, slot=slot,
+                            block=block)
         # src is mapped at most once per slot: replace it in place
         i = self.held[slot].index(src)
         self.held[slot][i] = dst
@@ -435,6 +450,8 @@ class PagedKVCachePool:
                     i = self._blocks[slot].index(cur)
                     self._blocks[slot][i] = b
                     self._cells[slot][cell] = b
+                    self.tracer.instant("pool.ring_rotate", slot=slot,
+                                        page=pid, old_block=cur, block=b)
                 else:
                     # shared/indexed incumbent: COW into a private page and
                     # release the original (it parks in the LRU when
@@ -452,6 +469,9 @@ class PagedKVCachePool:
                                             jnp.asarray(dst, jnp.int32),
                                             jnp.asarray(pid, jnp.int32))
                     self.cow_copies += 1
+                    self.tracer.instant("pool.ring_rotate", slot=slot,
+                                        page=pid, old_block=cur, block=b,
+                                        cow_dst=dst)
                     self._unbind(slot, cur)
                     self._bind(slot, b, dst)
         return True
@@ -490,36 +510,38 @@ class PagedKVCachePool:
         if memo is not None and memo[0] == self._index_version \
                 and memo[1] == tuple(prompt):
             return memo[2]
-        pids: List[Optional[int]] = []
-        hashes: List[int] = []
-        for _, blk, parent, h in chain_blocks(prompt, ps):
-            entry = self._index.get(h)
-            if entry is None or entry[1] != parent or entry[2] != blk:
-                break
-            pids.append(entry[0])
-            hashes.append(h)
-        m = len(pids)
-        total_full = plen // ps
-        while m:
-            full = (m == total_full and m * ps == plen)
-            cached = plen - 1 if full else m * ps
-            start_blk = self.layout.needed_start(cached, ps)
-            dead = [i for i in range(start_blk, m) if pids[i] is None]
-            if not dead:
-                break
-            m = min(dead)           # truncate below the oldest dead block
-        if not m:
-            out = [], None, 0, (0, ps), 0
-        elif m == total_full and m * ps == plen:
-            # the shared read-only blocks end one short of the match; the
-            # COW block itself is already indexed, so commits resume there
-            seed = (m - 1, hashes[m - 2] if m > 1 else ps)
-            out = pids[start_blk:m - 1], pids[m - 1], plen - 1, seed, \
-                start_blk
-        else:
-            out = pids[start_blk:m], None, m * ps, (m, hashes[m - 1]), \
-                start_blk
-        self._plan_memo = (self._index_version, tuple(prompt), out)
+        with self.tracer.span("plan", tokens=plen):
+            pids: List[Optional[int]] = []
+            hashes: List[int] = []
+            for _, blk, parent, h in chain_blocks(prompt, ps):
+                entry = self._index.get(h)
+                if entry is None or entry[1] != parent or entry[2] != blk:
+                    break
+                pids.append(entry[0])
+                hashes.append(h)
+            m = len(pids)
+            total_full = plen // ps
+            while m:
+                full = (m == total_full and m * ps == plen)
+                cached = plen - 1 if full else m * ps
+                start_blk = self.layout.needed_start(cached, ps)
+                dead = [i for i in range(start_blk, m) if pids[i] is None]
+                if not dead:
+                    break
+                m = min(dead)       # truncate below the oldest dead block
+            if not m:
+                out = [], None, 0, (0, ps), 0
+            elif m == total_full and m * ps == plen:
+                # the shared read-only blocks end one short of the match;
+                # the COW block itself is already indexed, so commits
+                # resume there
+                seed = (m - 1, hashes[m - 2] if m > 1 else ps)
+                out = pids[start_blk:m - 1], pids[m - 1], plen - 1, seed, \
+                    start_blk
+            else:
+                out = pids[start_blk:m], None, m * ps, (m, hashes[m - 1]), \
+                    start_blk
+            self._plan_memo = (self._index_version, tuple(prompt), out)
         return out
 
     # -- engine API --------------------------------------------------------
@@ -545,6 +567,14 @@ class PagedKVCachePool:
         if not self._free_slots or \
                 self._alloc_budget(shared, cow_src) < need:
             return None
+        if cached:
+            self.tracer.instant("pool.prefix_hit", rid=rid,
+                                cached_tokens=cached,
+                                shared_pages=len(shared),
+                                cow=cow_src is not None)
+        elif self.enable_prefix_cache:
+            self.tracer.instant("pool.prefix_miss", rid=rid,
+                                prompt_tokens=plen)
         slot = self._free_slots.pop(0)
         assert slot not in self.owner, f"slot {slot} double-assigned"
         self.owner[slot] = rid
@@ -670,6 +700,9 @@ class PagedKVCachePool:
         eviction.  Call when cached K/V stops being valid (weight updates,
         layout switches) or to measure cold-start behaviour on a warm
         engine."""
+        self.tracer.instant("pool.prefix_clear",
+                            cached_pages=len(self._cached_lru),
+                            index_entries=len(self._index))
         self._free_pages.extend(self._cached_lru)
         self._free_pages.sort()
         self._cached_lru.clear()

@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ServeConfig
+from repro.obs import NULL_TRACER
 
 
 @dataclass
@@ -64,9 +65,11 @@ class Scheduler:
     evict (``preemption``); slot bookkeeping itself lives in the KV pool.
     """
 
-    def __init__(self, cfg: ServeConfig):
+    def __init__(self, cfg: ServeConfig, tracer=None):
         cfg.validate()
         self.cfg = cfg
+        # queue-side trace events (engine passes its Tracer; NULL when off)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.waiting: List[Request] = []
         self._seq = itertools.count()
         # requeue sequence: monotone *decrementing* so every re-queued
@@ -81,9 +84,11 @@ class Scheduler:
     def submit(self, req: Request) -> bool:
         """Admit into the waiting queue; False when over ``max_queue``."""
         if len(self.waiting) >= self.cfg.max_queue:
+            self.tracer.instant("queue.reject", rid=req.rid)
             return False
         req.arrival_seq = next(self._seq)
         self.waiting.append(req)
+        self.tracer.counter("queue_depth", len(self.waiting))
         return True
 
     def depth(self) -> int:
@@ -168,3 +173,5 @@ class Scheduler:
         a slot but not the pages for its prompt."""
         req.arrival_seq = next(self._requeue_seq)
         self.waiting.append(req)
+        self.tracer.instant("queue.push_front", rid=req.rid,
+                            preempted=req.preempted)

@@ -1,0 +1,380 @@
+"""Engine tracing + per-phase attribution (repro.obs).
+
+Four layers of guarantees:
+  * tracer mechanics — deterministic timelines under an injectable clock,
+    span open/close balance (including stale re-opens and mid-flight
+    close_all), bounded ring buffer, engine-track-only phase accounting;
+  * exporters — Chrome trace-event schema validity (every event carries
+    ph/ts/pid/tid; one track per request; metadata names), phase snapshot
+    / coverage math, Prometheus text;
+  * disabled path — NULL_TRACER is a strict no-op (shared span singleton,
+    no events, zero phase time) and an untraced engine records nothing;
+  * end-to-end — a traced engine run keeps every lifecycle span balanced
+    through preemption and chunked prefill, its section spans cover
+    >= 95% of the engine-loop wall, and the emitted trace loads as JSON.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ServeConfig, get_config
+from repro.models import registry
+from repro.obs import (ENGINE_TRACK, NULL_TRACER, NullTracer, Tracer,
+                       chrome_trace, phase_coverage, phase_snapshot,
+                       prometheus_text, request_track, write_chrome_trace)
+from repro.serving import ServingEngine, ServingMetrics
+
+
+class FakeClock:
+    """Deterministic monotone clock: every read advances by ``tick``."""
+
+    def __init__(self, tick=1.0):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+def _prompts(rng, vocab, lengths):
+    return [list(rng.integers(0, vocab, (l,))) for l in lengths]
+
+
+# ---------------------------------------------------------------------------
+# Tracer mechanics
+# ---------------------------------------------------------------------------
+
+def test_tracer_deterministic_timeline():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)            # reset() reads the clock once (t0=1)
+    with tr.span("step"):             # enter t=2, exit t=3
+        pass
+    assert tr.phase_seconds == {"step": 1.0}
+    assert tr.phase_counts == {"step": 1}
+    ph, name, track, ts, dur, args = tr.events[-1]
+    assert (ph, name, track, ts, dur, args) == \
+        ("X", "step", ENGINE_TRACK, 2.0, 1.0, None)
+
+
+def test_tracer_nested_spans_accumulate_independently():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    with tr.span("step"):                       # t=2 .. t=5
+        with tr.span("decode.device"):          # t=3 .. t=4
+            pass
+    assert tr.phase_seconds["step"] == 3.0
+    assert tr.phase_seconds["decode.device"] == 1.0
+    # inner span closes first: events land in completion order
+    assert [e[1] for e in tr.events] == ["decode.device", "step"]
+
+
+def test_tracer_request_track_spans_do_not_count_as_phases():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("decode", track=request_track(7)):
+        pass
+    assert tr.phase_seconds == {}               # engine track only
+    assert tr.events[-1][2] == "req7"
+
+
+def test_tracer_begin_end_balance():
+    tr = Tracer(clock=FakeClock())
+    rt = request_track(0)
+    tr.begin("queued", track=rt)
+    assert tr.open_spans() == [(rt, "queued")]
+    assert tr.end("queued", track=rt) is True
+    assert tr.open_spans() == []
+    # closing a never-opened span is a silent no-op (preemption paths
+    # close "whichever of prefill/decode is open" unconditionally)
+    assert tr.end("decode", track=rt) is False
+    assert all(e[1] != "decode" for e in tr.events)
+
+
+def test_tracer_reopen_closes_stale_span():
+    tr = Tracer(clock=FakeClock())
+    tr.begin("prefill", track="req1")
+    tr.begin("prefill", track="req1")           # stale: auto-closed
+    spans = [e for e in tr.events if e[0] == "X"]
+    assert len(spans) == 1 and spans[0][5]["reopened"] is True
+    assert tr.open_spans() == [("req1", "prefill")]
+    tr.close_all(drained=True)
+    assert tr.open_spans() == []
+
+
+def test_tracer_end_merges_args():
+    tr = Tracer(clock=FakeClock())
+    tr.begin("decode", track="req2", slot=3)
+    tr.end("decode", track="req2", tokens=8)
+    assert tr.events[-1][5] == {"slot": 3, "tokens": 8}
+
+
+def test_tracer_ring_buffer_bounds_memory():
+    tr = Tracer(clock=FakeClock(), capacity=4)
+    for i in range(10):
+        tr.instant("ev", i=i)
+    assert len(tr.events) == 4 and tr.dropped == 6
+    assert [e[5]["i"] for e in tr.events] == [6, 7, 8, 9]   # oldest dropped
+
+
+def test_tracer_reset_keeps_clock_and_meta():
+    clk = FakeClock()
+    tr = Tracer(clock=clk, meta={"model": "m"})
+    tr.instant("x")
+    tr.begin("queued", track="req0")
+    tr.reset()
+    assert not tr.events and tr.open_spans() == [] and tr.dropped == 0
+    assert tr.meta == {"model": "m"} and tr.now() > 0
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def _fake_traced_run():
+    """A hand-driven timeline exercising every event kind."""
+    tr = Tracer(clock=FakeClock(), meta={"model": "fake"})
+    with tr.span("step"):
+        with tr.span("admit"):
+            tr.instant("pool.page_alloc", page=1, slot=0)
+        with tr.span("decode.device"):
+            pass
+        tr.counter("queue_depth", 3)
+    tr.begin("decode", track=request_track(0))
+    return tr
+
+
+def test_chrome_trace_schema():
+    tr = _fake_traced_run()
+    doc = chrome_trace(tr)
+    evs = doc["traceEvents"]
+    assert evs, "empty trace"
+    for e in evs:
+        assert {"ph", "ts", "pid", "tid"} <= set(e), e
+    # instant events are scoped; counters carry their value
+    inst = next(e for e in evs if e["ph"] == "i")
+    assert inst["s"] == "t" and inst["args"]["page"] == 1
+    ctr = next(e for e in evs if e["ph"] == "C")
+    assert ctr["args"]["value"] == 3.0
+    # the still-open request span exports as unfinished, not a dangling B
+    open_ev = next(e for e in evs if e.get("args", {}).get("unfinished"))
+    assert open_ev["ph"] == "X" and open_ev["name"] == "decode"
+    assert not any(e["ph"] == "B" for e in evs)
+    # engine track is tid 0; the request track got its own tid + name
+    names = {e["args"]["name"]: e["tid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert names[ENGINE_TRACK] == 0 and "req0" in names
+    assert doc["otherData"]["model"] == "fake"
+    json.dumps(doc)                               # serializable end to end
+
+
+def test_write_chrome_trace_roundtrip(tmp_path):
+    tr = _fake_traced_run()
+    tr.close_all()       # an open span's export reads the (advancing) clock
+    p = write_chrome_trace(tr, str(tmp_path / "t.json"))
+    loaded = json.loads((tmp_path / "t.json").read_text())
+    assert p.endswith("t.json")
+    assert loaded == json.loads(json.dumps(chrome_trace(tr)))
+
+
+def test_phase_snapshot_and_coverage_math():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    with tr.span("step"):                        # 7 ticks total
+        with tr.span("admit"):                   # section: 3 ticks
+            with tr.span("plan"):                # leaf inside a section
+                pass
+        with tr.span("decode.device"):           # section AND leaf
+            pass
+    snap = phase_snapshot(tr)
+    assert snap["step_time_s"] == 7.0
+    assert snap["plan_time_s"] == 1.0
+    assert snap["decode_time_s"] == 1.0
+    assert snap["prefill_time_s"] == 0.0
+    assert snap["other_time_s"] == 5.0           # step - leaves
+    # coverage counts sections (admit + decode.device = 4) over step
+    assert phase_coverage(tr) == pytest.approx(4.0 / 7.0)
+    assert phase_coverage(Tracer(clock=FakeClock())) == 1.0   # nothing traced
+
+
+def test_prometheus_text_exposition():
+    tr = _fake_traced_run()
+    m = ServingMetrics(clock=FakeClock(), tracer=tr)
+    txt = prometheus_text(m.summary(), tr)
+    assert "repro_serving_tokens_per_sec 0.0" in txt
+    assert 'repro_serving_phase_seconds{phase="step"}' in txt
+    assert 'repro_serving_phase_calls{phase="decode.device"} 1' in txt
+
+
+# ---------------------------------------------------------------------------
+# Disabled path (NULL_TRACER)
+# ---------------------------------------------------------------------------
+
+def test_null_tracer_is_strict_noop():
+    n = NULL_TRACER
+    assert isinstance(n, NullTracer) and n.enabled is False
+    # one shared context-manager singleton: no per-call allocation
+    assert n.span("a") is n.span("b", track="req1", x=1)
+    with n.span("step"):
+        pass
+    n.begin("queued", track="req0")
+    assert n.end("queued", track="req0") is False
+    n.instant("pool.cow", src=1, dst=2)
+    n.counter("queue_depth", 5)
+    assert n.events == () and n.phase_seconds == {} and n.open_spans() == []
+    assert n.close_all() == 0 and n.now() == 0.0
+    # exporters accept it without branches
+    assert phase_snapshot(n) == {"step_time_s": 0.0, "plan_time_s": 0.0,
+                                 "prefill_time_s": 0.0, "decode_time_s": 0.0,
+                                 "other_time_s": 0.0}
+    assert phase_coverage(n) == 1.0
+
+
+def test_metrics_summary_stable_schema_untraced():
+    """Rate splits report honest zeros untraced; int counters stay ints;
+    a rejected-everything run divides nothing by zero."""
+    m = ServingMetrics(clock=FakeClock())      # tracer=None -> NULL path
+    m.record_reject()
+    s = m.summary()
+    assert s["rejected"] == 1 and s["elapsed_s"] == 0.0
+    assert s["tokens_per_sec"] == 0.0
+    assert s["decode_tokens_per_sec"] == 0.0
+    assert s["prefill_tokens_per_sec"] == 0.0
+    assert s["step_time_s"] == 0.0 and s["other_time_s"] == 0.0
+    assert isinstance(s["completed"], int)
+    assert isinstance(s["decode_tokens"], int)
+
+
+def test_metrics_split_rates_use_traced_phase_time():
+    tr = Tracer(clock=FakeClock())
+    m = ServingMetrics(clock=FakeClock(), tracer=tr)
+    with tr.span("decode.device"):              # 1 fake second
+        pass
+    with tr.span("prefill.device"):             # 1 fake second
+        pass
+    m.record_prefill(8)
+    for _ in range(4):
+        m.record_decode_token()
+    s = m.summary()
+    assert s["decode_tokens_per_sec"] == 4.0
+    assert s["prefill_tokens_per_sec"] == 8.0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: traced engine runs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    bundle = registry.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_untraced_records_nothing(dense_setup):
+    cfg, params = dense_setup
+    scfg = ServeConfig(max_batch=2, max_seq_len=32, max_new_tokens=4,
+                       decode_steps=2, page_size=8)
+    eng = ServingEngine(cfg, scfg, params=params)
+    assert eng.tracer is NULL_TRACER
+    rng = np.random.default_rng(0)
+    eng.generate(_prompts(rng, cfg.vocab_size, [5, 9]), 4)
+    assert eng.tracer.events == ()
+    assert eng.save_trace("/nonexistent/never-written.json") is None
+    s = eng.metrics.summary()
+    assert s["step_time_s"] == 0.0 and s["decode_tokens_per_sec"] == 0.0
+
+
+def test_engine_traced_spans_balance_and_cover(dense_setup, tmp_path):
+    """Chunked prefill + prefix sharing + mid-prefill completion, traced:
+    lifecycle spans all close, sections cover >= 95% of the step wall,
+    and the trace exports schema-valid."""
+    cfg, params = dense_setup
+    scfg = ServeConfig(max_batch=2, max_seq_len=64, max_new_tokens=4,
+                       decode_steps=2, page_size=8,
+                       prefill_chunk_tokens=8, enable_prefix_cache=True,
+                       trace=True)
+    eng = ServingEngine(cfg, scfg, params=params)
+    assert eng.tracer.enabled and eng.paged
+    rng = np.random.default_rng(3)
+    shared = list(rng.integers(0, cfg.vocab_size, (16,)))
+    prompts = [shared + list(rng.integers(0, cfg.vocab_size, (t,)))
+               for t in (9, 5, 13)] + [[7] * 3]
+    outs = eng.generate(prompts, 4)
+    assert all(len(o) == 4 for o in outs)
+    tr = eng.tracer
+    assert tr.open_spans() == []                 # drained -> balanced
+    assert phase_coverage(tr) >= 0.95
+    s = eng.metrics.summary()
+    assert s["step_time_s"] > 0
+    assert s["step_time_s"] == pytest.approx(
+        s["plan_time_s"] + s["prefill_time_s"] + s["decode_time_s"]
+        + s["other_time_s"])
+    # every decode-loop token is attributed; first tokens come from prefill
+    assert s["decode_tokens"] == s["tokens_out"] - s["completed"]
+    assert s["decode_tokens_per_sec"] > 0 and s["prefill_tokens_per_sec"] > 0
+    names = {e[1] for e in tr.events}
+    assert {"step", "admit", "prefill", "decode.device", "complete",
+            "plan", "prefill.device", "prefill.chunk", "queued", "decode",
+            "request.complete", "pool.page_alloc",
+            "pool.prefix_hit"} <= names
+    # one lifecycle track per request, all schema-valid
+    doc = json.loads(write_chrome_trace(tr, str(tmp_path / "e.json"))
+                     and (tmp_path / "e.json").read_text())
+    evs = doc["traceEvents"]
+    assert all({"ph", "ts", "pid", "tid"} <= set(e) for e in evs)
+    tracks = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {request_track(r) for r in range(len(prompts))} <= tracks
+
+
+def test_engine_traced_preemption_keeps_spans_balanced(dense_setup):
+    """Page pressure forces eviction mid-run (including mid-prefill): the
+    victim's open span closes (preempted=True), it re-queues, and the
+    drained engine ends with zero open spans and identical tokens."""
+    cfg, params = dense_setup
+    base = ServeConfig(max_batch=2, max_seq_len=32, max_new_tokens=12,
+                       decode_steps=2, kv_layout="paged", page_size=4,
+                       num_pages=12)             # worst case would need 17
+    rng = np.random.default_rng(11)
+    prompts = _prompts(rng, cfg.vocab_size, [14, 15])
+    traced = ServingEngine(cfg, base.replace(trace=True), params=params)
+    outs = traced.generate(prompts, 12)
+    assert traced.metrics.preemptions >= 1
+    tr = traced.tracer
+    assert tr.open_spans() == []
+    names = {e[1] for e in tr.events}
+    assert "request.preempt" in names and "queue.push_front" in names
+    preempted = [e for e in tr.events
+                 if e[0] == "X" and e[5] and e[5].get("preempted")]
+    assert preempted, "no span recorded the preemption"
+    # tracing must not perturb scheduling decisions or tokens
+    assert outs == ServingEngine(cfg, base, params=params).generate(
+        prompts, 12)
+    json.dumps(chrome_trace(tr))
+
+
+def test_serve_config_trace_knobs_validate():
+    ServeConfig(trace=True, trace_capacity=1024).validate()
+    with pytest.raises(ValueError):
+        ServeConfig(trace_capacity=0).validate()
+    with pytest.raises(ValueError):
+        ServeConfig(trace="yes").validate()
+
+
+def test_session_trace_passthrough(tmp_path):
+    """The Session surface: serve(..., trace=True) keys a traced engine,
+    session.save_trace writes the Perfetto JSON."""
+    from repro.api import load
+    sess = load("qwen2.5-14b", smoke=True, require=("serve",))
+    rng = np.random.default_rng(5)
+    prompts = _prompts(rng, sess.model.vocab_size, [6, 10])
+    sess.serve(prompts, max_new=3)
+    assert sess.tracer is NULL_TRACER and sess.save_trace("x") is None
+    sess.serve(prompts, max_new=3, trace=True)
+    assert sess.tracer.enabled
+    p = sess.save_trace(str(tmp_path / "s.json"))
+    doc = json.loads((tmp_path / "s.json").read_text())
+    assert p and doc["traceEvents"]
