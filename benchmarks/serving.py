@@ -43,13 +43,21 @@ never enter the throughput trajectory (fencing costs tokens/sec); they
 exist to explain it — e.g. whether the paged-vs-slotted gap on ROADMAP
 open item 1 is host bookkeeping or kernel time.
 
+Untraced passes *omit* the phase-derived keys entirely
+(``repro.obs.TRACED_ONLY_KEYS``): with tracing off those fields were
+emitted as literal ``0.0`` — reading as "zero host overhead" — so the
+schema gate now asserts their absence instead of their presence.
+
 ``--smoke`` runs a seconds-scale workload *per smoke arch* (full, MLA and
 windowed layouts) and asserts the emitted records still carry every
 schema key, so drift breaks CI instead of the next PR's analysis; it also
 writes one Perfetto-loadable Chrome trace per arch (``--trace-dir``) and
-gates on trace-event schema validity plus >= 95% phase coverage of the
-engine-loop wall.  The ``run()`` hook returns harness-style
-``(name, us_per_call, derived)`` rows.
+gates on trace-event schema validity, the pipeline span names
+(``step.plan``/``step.submit``/``step.retire``), >= 95% phase coverage of
+the engine-loop wall, and ``host_overhead_frac <= 0.25`` (the pipelined
+submit/retire engine's bar — the synchronous loop sat at 0.37-0.49).
+The ``run()`` hook returns harness-style ``(name, us_per_call, derived)``
+rows.
 """
 import argparse
 import json
@@ -74,16 +82,22 @@ REQUIRED_KEYS = ("arch", "requests", "slotted", "kv_bytes_saved_ratio",
 REQUIRED_SUMMARY_KEYS = ("tokens_per_sec", "ttft_p50_s", "itl_p50_s",
                          "kv_bytes_peak", "kv_bytes_slotted",
                          "prefill_tokens", "prefix_hit_rate",
-                         "prefill_tokens_saved", "compile_count",
-                         "decode_tokens_per_sec", "prefill_tokens_per_sec",
-                         "step_time_s", "plan_time_s", "prefill_time_s",
-                         "decode_time_s", "other_time_s")
+                         "prefill_tokens_saved", "compile_count")
 REQUIRED_PREFIX_KEYS = ("hit", "cold", "slotted_tokens_per_sec",
                         "prefill_tokens_saved_ratio", "token_identical")
 #: per-arch traced-attribution section (repro.obs): where the cycle goes
 REQUIRED_PHASE_KEYS = ("step_time_s", "plan_frac", "prefill_device_frac",
-                       "decode_device_frac", "other_frac", "coverage",
+                       "decode_device_frac", "other_frac",
+                       "host_overhead_frac", "coverage",
                        "decode_tokens_per_sec", "prefill_tokens_per_sec")
+#: CI bar for host glue between device calls on the traced smoke pass —
+#: the number the pipelined submit/retire refactor drives down (was
+#: 0.49/0.45/0.37 across the smoke archs on the synchronous engine)
+HOST_OVERHEAD_GATE = 0.25
+#: pipeline span names the emitted Chrome trace must carry (smoke gate):
+#: a refactor that silently stops emitting the section spans would void
+#: the attribution math without failing any numeric bar
+REQUIRED_SPAN_NAMES = ("step", "step.plan", "step.submit", "step.retire")
 
 
 def _arch_kw(arch, kw):
@@ -102,6 +116,17 @@ def _arch_kw(arch, kw):
         kw["max_new"] = min(kw["max_new"], max(w // 4, 1))
         kw["prefix_len"] = min(kw["prefix_len"], w)
     return kw
+
+
+def _untraced(summary):
+    """Strip phase-derived keys from an *untraced* pass's summary.  With
+    tracing off per-phase time does not exist, so those fields are
+    structurally ``0.0`` — emitting them into BENCH_serving.json read as
+    "host overhead is zero" / "decode throughput is zero".  Only the
+    fenced attribution pass (:func:`_traced_attribution`) reports phase
+    data; the schema gate asserts the absence."""
+    from repro.obs import TRACED_ONLY_KEYS
+    return {k: v for k, v in summary.items() if k not in TRACED_ONLY_KEYS}
 
 
 def _make_engine(arch, batch, max_seq, max_new, kv_layout, page_size,
@@ -146,7 +171,7 @@ def _serve_once(arch, requests, batch, prompt_len, max_new, kv_layout,
         engine.results.clear()
         out = engine.generate(prompts, max_new)
         assert len(out) == requests and all(len(t) == max_new for t in out)
-        s = engine.metrics.summary()
+        s = _untraced(engine.metrics.summary())
         s["compile_count"] = engine.prefill_compiles  # lifetime, not window
         if best is None or s["tokens_per_sec"] > best["tokens_per_sec"]:
             best = s
@@ -165,7 +190,7 @@ def _traced_attribution(arch, requests, batch, prompt_len, max_new,
     ``trace_path`` is set the Chrome trace JSON (Perfetto-loadable) is
     written there too."""
     import numpy as np
-    from repro.obs import phase_coverage
+    from repro.obs import HOST_OVERHEAD_FRAC, phase_coverage
 
     max_seq = prompt_len + max_new + page_size
     pages = 3 * batch * (-(-max_seq // page_size)) + 1
@@ -188,6 +213,7 @@ def _traced_attribution(arch, requests, batch, prompt_len, max_new,
         "prefill_device_frac": s["prefill_time_s"] / st,
         "decode_device_frac": s["decode_time_s"] / st,
         "other_frac": s["other_time_s"] / st,
+        HOST_OVERHEAD_FRAC: s[HOST_OVERHEAD_FRAC],
         "coverage": phase_coverage(engine.tracer),
         "decode_tokens_per_sec": s["decode_tokens_per_sec"],
         "prefill_tokens_per_sec": s["prefill_tokens_per_sec"],
@@ -241,7 +267,7 @@ def _prefix_workload(arch, requests, batch, prefix_len, max_new, page_size):
             eng.metrics.reset()
             eng.results.clear()
             outs = eng.generate(prompts, max_new)
-            s = eng.metrics.summary()
+            s = _untraced(eng.metrics.summary())
             s["compile_count"] = eng.prefill_compiles
             if best is None or s["tokens_per_sec"] > best[1]["tokens_per_sec"]:
                 best = (outs, s)
@@ -310,11 +336,16 @@ def check_schema(record):
         assert k in record, f"BENCH_serving.json schema drift: missing {k!r}"
     assert ("paged" in record) == bool(record["prefix"]), \
         "schema drift: paged section and prefix workload must co-occur"
+    from repro.obs import TRACED_ONLY_KEYS
     for section in ("paged", "slotted"):
         if record.get(section):
             for k in REQUIRED_SUMMARY_KEYS:
                 assert k in record[section], \
                     f"schema drift: missing {section}.{k}"
+            for k in TRACED_ONLY_KEYS:
+                assert k not in record[section], \
+                    f"schema drift: untraced {section}.{k} would read as " \
+                    "a measured zero — phase data belongs to 'phases' only"
     if record.get("prefix"):
         for k in REQUIRED_PREFIX_KEYS:
             assert k in record["prefix"], f"schema drift: missing prefix.{k}"
@@ -349,6 +380,8 @@ def run(**overrides):
         ("serving_plan_time_frac", 0.0, r["phases"]["plan_frac"]),
         ("serving_decode_device_frac", 0.0,
          r["phases"]["decode_device_frac"]),
+        ("serving_host_overhead_frac", 0.0,
+         r["phases"]["host_overhead_frac"]),
         ("serving_phase_coverage", 0.0, r["phases"]["coverage"]),
     ]
 
@@ -396,16 +429,26 @@ def main():
             assert evs and all({"ph", "ts", "pid", "tid"} <= set(e)
                                for e in evs), \
                 f"trace schema drift in {tp}"
+            names = {e["name"] for e in evs}
+            missing = [n for n in REQUIRED_SPAN_NAMES if n not in names]
+            assert not missing, \
+                f"trace span drift in {tp}: missing {missing} — the " \
+                "pipeline sections stopped being traced"
             ph = record["phases"]
             assert ph["coverage"] >= 0.95, \
                 f"phase spans cover {ph['coverage']:.1%} < 95% of the " \
                 f"engine-loop wall [{arch}]"
+            assert ph["host_overhead_frac"] <= HOST_OVERHEAD_GATE, \
+                f"host_overhead_frac={ph['host_overhead_frac']:.2f} > " \
+                f"{HOST_OVERHEAD_GATE} [{arch}]: host glue between device " \
+                "calls regressed past the pipelined-engine bar"
             hit = (record["prefix"] or {}).get("hit", {})
             print(f"smoke OK [{arch}]: schema intact; "
                   f"prefix_hit_rate={hit.get('prefix_hit_rate', 0.0):.2f} "
                   f"kv_saved={record['kv_bytes_saved_ratio']:.2f} "
                   f"phase_coverage={ph['coverage']:.2f} "
                   f"decode_frac={ph['decode_device_frac']:.2f} "
+                  f"host_overhead={ph['host_overhead_frac']:.2f} "
                   f"(trace: {tp})")
         return
     record = {

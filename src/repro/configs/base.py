@@ -275,6 +275,13 @@ class ServeConfig:
     * ``max_prefills_per_step`` — admission bound: how many *requests* may
       start prefilling per engine cycle (formerly ``prefill_chunk``, which
       remains as a deprecated constructor alias).
+    * ``pipeline_depth`` — engine submit/retire pipelining: 2 (default)
+      overlaps the next cycle's host planning against the in-flight device
+      step (plan N+1 and submit it while N's results are still
+      materializing, retire N afterwards); 1 is the synchronous escape
+      hatch (every cycle retires before the next plans — what
+      ``launch/serve.py --sync`` sets).  Greedy output is token-identical
+      either way; depth changes scheduling latency only.
 
     Observability (``repro.obs``):
 
@@ -296,6 +303,7 @@ class ServeConfig:
     # it equals the default)
     max_prefills_per_step: Optional[int] = None
     decode_steps: int = 4         # decode steps per cycle between admissions
+    pipeline_depth: int = 2       # 2 = async submit/retire overlap, 1 = sync
     eos_token: int = -1           # stop token (-1 disables early stop)
     kv_layout: str = "auto"       # "auto" | "paged" | "slotted"
     page_size: int = 16           # tokens per KV page (paged layout)
@@ -309,8 +317,9 @@ class ServeConfig:
     prefill_chunk: Optional[int] = None
 
     _INT_KNOBS = ("max_batch", "max_queue", "max_seq_len", "max_new_tokens",
-                  "max_prefills_per_step", "decode_steps", "page_size",
-                  "num_pages", "prefill_chunk_tokens", "trace_capacity")
+                  "max_prefills_per_step", "decode_steps", "pipeline_depth",
+                  "num_pages", "page_size", "prefill_chunk_tokens",
+                  "trace_capacity")
 
     def __post_init__(self):
         # normalize numpy integer knobs (e.g. max_batch=arr.shape[0]) so
@@ -363,6 +372,13 @@ class ServeConfig:
             v = getattr(self, knob)
             if not isinstance(v, int) or isinstance(v, bool) or v < least:
                 raise ValueError(f"{knob}={v!r} must be an int >= {least}")
+        # depths beyond 2 would need per-depth retire queues and buy nothing:
+        # one in-flight device step already hides the host plan under it
+        if self.pipeline_depth not in (1, 2):
+            raise ValueError(
+                f"pipeline_depth={self.pipeline_depth!r} must be 1 "
+                "(synchronous submit/retire) or 2 (plan the next cycle "
+                "while one device step is in flight)")
         for knob in ("enable_prefix_cache", "prefill_bucket", "trace"):
             if not isinstance(getattr(self, knob), bool):
                 raise ValueError(f"{knob}={getattr(self, knob)!r} must be "

@@ -56,6 +56,11 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="shared page pool size; 0 = worst case, less "
                          "oversubscribes (engine preempts on pressure)")
+    ap.add_argument("--sync", action="store_true",
+                    help="synchronous escape hatch: pipeline_depth=1 — "
+                         "retire every cycle before planning the next "
+                         "(default pipeline_depth=2 overlaps host planning "
+                         "with the in-flight device step)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are emitted")
     ap.add_argument("--json", action="store_true",
@@ -101,6 +106,7 @@ def main():
         prefill_bucket=not args.no_prefill_bucket,
         decode_steps=args.decode_steps,
         kv_layout=args.kv_layout,
+        pipeline_depth=1 if args.sync else 2,
         num_pages=args.num_pages, trace=bool(args.trace), **page_kw)
     engine = session.engine
     s = engine.metrics.summary()
@@ -130,7 +136,8 @@ def main():
                   f"decode {s['decode_time_s']/st:6.1%}  "
                   f"other {s['other_time_s']/st:6.1%}  "
                   f"of {st:.2f}s engine wall "
-                  f"(decode {s['decode_tokens_per_sec']:.1f} tok/s, "
+                  f"(host_overhead_frac {s['host_overhead_frac']:.2f}; "
+                  f"decode {s['decode_tokens_per_sec']:.1f} tok/s, "
                   f"prefill {s['prefill_tokens_per_sec']:.1f} tok/s)")
         for i, toks in enumerate(outs):
             print(f"  req {i}: {toks[:8]}{'...' if len(toks) > 8 else ''}")

@@ -10,7 +10,9 @@ pool — exportable as a Perfetto-loadable Chrome trace or folded into
 Import discipline: this package depends on the standard library only (no
 jax, no numpy) — it sits below every serving module that emits into it.
 """
-from repro.obs.export import (LEAF_PHASES, STEP_SECTIONS, chrome_trace,
+from repro.obs.export import (HOST_OVERHEAD_FRAC, INFLIGHT_COUNTER,
+                              LEAF_PHASES, PHASE_TIME_KEYS, STEP_SECTIONS,
+                              TRACED_ONLY_KEYS, chrome_trace,
                               phase_coverage, phase_snapshot,
                               prometheus_text, write_chrome_trace)
 from repro.obs.trace import (ENGINE_TRACK, NULL_TRACER, NullTracer, Tracer,
@@ -19,4 +21,5 @@ from repro.obs.trace import (ENGINE_TRACK, NULL_TRACER, NullTracer, Tracer,
 __all__ = ["Tracer", "NullTracer", "NULL_TRACER", "ENGINE_TRACK",
            "request_track", "chrome_trace", "write_chrome_trace",
            "phase_snapshot", "phase_coverage", "prometheus_text",
-           "STEP_SECTIONS", "LEAF_PHASES"]
+           "STEP_SECTIONS", "LEAF_PHASES", "INFLIGHT_COUNTER",
+           "PHASE_TIME_KEYS", "TRACED_ONLY_KEYS", "HOST_OVERHEAD_FRAC"]

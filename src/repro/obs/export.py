@@ -18,17 +18,24 @@ Two consumers, two shapes:
 
 Phase model (engine track span names):
 
-  * ``step`` wraps one engine cycle; the *sections* ``preempt``, ``admit``,
-    ``prefill``, ``sample``, ``decode.host``, ``decode.device`` and
-    ``complete`` tile it (:data:`STEP_SECTIONS` — their sum over a run is
-    the cycle wall time minus loop glue, asserted >= 95% by the tests);
+  * ``step`` wraps one engine cycle; the pipeline *sections* ``step.plan``
+    (pure host planning: scheduler decisions, admission, page-table and
+    chunk construction), ``step.submit`` (device dispatch of the plan) and
+    ``step.retire`` (materialize a completed cycle's tokens: stream,
+    completion, page frees) tile it (:data:`STEP_SECTIONS` — their sum
+    over a run is the cycle wall time minus loop glue, asserted >= 95% by
+    the tests).  With ``pipeline_depth=2`` a step's retire section drains
+    the *previous* cycle, so in a trace submit(N+1) begins before
+    retire(N) ends — the overlap the ``engine.inflight`` counter makes
+    visible in Perfetto;
   * the *leaves* ``plan`` (host-side prefix planning / page bookkeeping,
     nested under whichever section triggered it), ``prefill.device`` and
     ``decode.device`` (jitted calls, fenced with ``block_until_ready`` in
     traced mode) are mutually disjoint, so
     ``other = step - plan - prefill.device - decode.device`` is the
     well-defined "everything else" — scheduling, numpy glue, stream
-    callbacks.
+    callbacks — and ``host_overhead_frac = other / step`` is the number
+    the async-pipeline work drives down (gated <= 0.25 by the CI smoke).
 """
 from __future__ import annotations
 
@@ -38,11 +45,29 @@ from typing import Any, Dict, List
 from repro.obs.trace import ENGINE_TRACK
 
 #: engine-track spans that tile one ``step`` span (coverage denominator)
-STEP_SECTIONS = ("preempt", "admit", "prefill", "sample",
-                 "decode.host", "decode.device", "complete")
+STEP_SECTIONS = ("step.plan", "step.submit", "step.retire")
 
 #: disjoint leaf phases the summary attributes wall time to
 LEAF_PHASES = ("plan", "prefill.device", "decode.device")
+
+#: Perfetto counter track: device cycles submitted but not yet retired
+INFLIGHT_COUNTER = "engine.inflight"
+
+#: named phase keys shared by :func:`phase_snapshot`,
+#: ``ServingMetrics.summary()`` and the bench schema gate — one spelling,
+#: three consumers, no drift
+STEP_TIME_S = "step_time_s"
+PLAN_TIME_S = "plan_time_s"
+PREFILL_TIME_S = "prefill_time_s"
+DECODE_TIME_S = "decode_time_s"
+OTHER_TIME_S = "other_time_s"
+HOST_OVERHEAD_FRAC = "host_overhead_frac"
+PHASE_TIME_KEYS = (STEP_TIME_S, PLAN_TIME_S, PREFILL_TIME_S,
+                   DECODE_TIME_S, OTHER_TIME_S)
+#: phase-derived summary keys that are meaningless untraced (the traced
+#: attribution pass owns them; untraced bench records must omit them)
+TRACED_ONLY_KEYS = PHASE_TIME_KEYS + (
+    HOST_OVERHEAD_FRAC, "decode_tokens_per_sec", "prefill_tokens_per_sec")
 
 
 def chrome_trace(tracer, *, pid: int = 1) -> Dict[str, Any]:
@@ -119,12 +144,14 @@ def phase_snapshot(tracer) -> Dict[str, float]:
     plan = ph.get("plan", 0.0)
     prefill = ph.get("prefill.device", 0.0)
     decode = ph.get("decode.device", 0.0)
+    other = max(step - plan - prefill - decode, 0.0)
     return {
-        "step_time_s": step,
-        "plan_time_s": plan,
-        "prefill_time_s": prefill,
-        "decode_time_s": decode,
-        "other_time_s": max(step - plan - prefill - decode, 0.0),
+        STEP_TIME_S: step,
+        PLAN_TIME_S: plan,
+        PREFILL_TIME_S: prefill,
+        DECODE_TIME_S: decode,
+        OTHER_TIME_S: other,
+        HOST_OVERHEAD_FRAC: (other / step) if step > 0 else 0.0,
     }
 
 
@@ -161,4 +188,7 @@ def prometheus_text(summary: Dict[str, Any], tracer=None,
 
 __all__ = ["chrome_trace", "write_chrome_trace", "phase_snapshot",
            "phase_coverage", "prometheus_text", "STEP_SECTIONS",
-           "LEAF_PHASES"]
+           "LEAF_PHASES", "INFLIGHT_COUNTER", "PHASE_TIME_KEYS",
+           "TRACED_ONLY_KEYS", "STEP_TIME_S", "PLAN_TIME_S",
+           "PREFILL_TIME_S", "DECODE_TIME_S", "OTHER_TIME_S",
+           "HOST_OVERHEAD_FRAC"]

@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with a pipelined submit/retire cycle.
 
 The user supplies a model config (whose registry bundle declares the
 ``ServeContract`` / ``PagedServeContract`` / ``PagedPrefillContract`` decode
@@ -10,26 +10,37 @@ and mesh sharding.  A sequential "one request at a time" mental model in,
 heavy traffic out.  User scripts reach this through ``repro.api``'s
 ``Session.serve`` / ``Session.generate``.
 
-Event loop (one ``step()`` = one cycle):
+Pipelined event loop (one ``step()`` = one cycle, three phases):
 
-  1. preemption  — under the ``priority`` policy, evict low-priority slots
-                   for strictly-higher-priority waiters (state re-prefilled
-                   on resume; emitted tokens are kept).
-  2. admission   — start up to ``max_prefills_per_step`` waiting requests.
-                   On the paged path a request first maps every page of its
-                   prompt that the prefix cache already holds (read-only,
-                   refcounted; copy-on-write when a partially reused page
-                   must be written) — only the uncached suffix is prefilled.
-  3. chunked prefill — each admitted-but-unfinished request runs one
-                   ``prefill_chunk_tokens``-sized chunk of its suffix per
-                   cycle, so a long prompt's prefill interleaves with decode
-                   instead of stalling running streams' inter-token latency.
-  4. decode      — ``decode_steps`` batched decode steps over the *fixed*
-                   slot pool: decode compiles exactly once because the
-                   batch shape never changes; slots still prefilling are
-                   masked to the trash page for the step.
-  5. completion  — finished slots (token budget or EOS) are evicted
-                   individually; their neighbours never notice.
+  plan    — pure host decisions, nothing blocks on the device: priority
+            preemption, admission (prefix-page mapping / slot+page
+            allocation), chunk sizing + page preparation, per-slot decode
+            budgets (``limits``), and lazy page growth for the whole
+            decode span.  Produces an immutable ``_StepPlan``.
+  submit  — dispatch the plan to the device: whole-prompt prefills +
+            state scatters, suffix chunks, then ONE fused decode scan
+            covering all ``decode_steps`` for every decodable slot
+            (``lax.scan`` — one dispatch per cycle instead of one per
+            token).  Host positions advance immediately (deterministic
+            once planned), so the *next* plan can run while this step is
+            still executing.
+  retire  — materialise the *previous* cycle's results (the only host <-
+            device sync on the untraced path) and emit its tokens in the
+            exact order the synchronous engine would have: admission
+            first-tokens, chunk-completion first-tokens, then decode rows
+            step-major / slot-minor.  Completion, EOS cuts, and stream
+            callbacks all happen here.
+
+With ``pipeline_depth=2`` (default) step N+1 plans and submits while step
+N's device work is in flight and retires N afterwards — the device never
+waits for host planning, and the host never blocks mid-cycle.
+``pipeline_depth=1`` retires each cycle immediately after submitting it
+(the synchronous escape hatch, ``--sync`` on the launchers).  Token
+identity is the non-negotiable gate: per-slot decode budgets are computed
+exactly (pending in-flight emissions are subtracted from the remaining
+token budget), speculative rows past an EOS cut are dropped at retire,
+and a preempted victim's in-flight tokens still emit before it can be
+re-admitted — async output matches the depth-1 engine token for token.
 
 Prefill compiles are bounded: prompt/chunk lengths are padded to power-of-
 two buckets with masked tails (``ServeConfig.prefill_bucket``), so the jit
@@ -38,24 +49,21 @@ length (``metrics.compile_count`` tracks traces).  Recurrent families
 (whose state a masked tail would corrupt) keep exact-length prefills.
 
 KV memory is page-granular for every family with a ``KVLayout``
-(``repro.serving.layouts``): per-head k/v pages for full attention,
-ring-wrapped window pages for sliding-window/local attention (a slot holds
-at most ``window`` tokens, pages rotating out of the window free or park
-in the prefix LRU), and latent ckv/krope pages for MLA.  Pages are
-allocated lazily as each request's position crosses page boundaries and
-freed on eviction, so cache bytes held track actual sequence lengths
-instead of ``max_batch x max_seq_len``, and ``num_pages`` may
-oversubscribe — on page pressure the engine preempts the youngest request
-(resume re-prefills; emitted tokens are kept, so greedy output is
-unchanged — and typically re-prefills *from the prefix cache*, since its
-own blocks were committed on first admission).  Recurrent families
-(RG-LRU / RWKV: O(1) state per slot — nothing to page) fall back to the
-slotted pool; ``ServeConfig.kv_layout`` forces either layout.
+(``repro.serving.layouts``); pages are allocated lazily as positions cross
+page boundaries — for the fused scan the whole ``limits[slot]``-long span
+is prepared up front (``ensure_decode_capacity(steps=...)``), ring cells
+rotating / copy-on-writing before the dispatch so the scan writes only
+into private prepared pages.  On page pressure the engine preempts the
+youngest lowest-priority request (resume re-prefills; emitted tokens are
+kept, so greedy output is unchanged).  Recurrent families (RG-LRU / RWKV:
+O(1) state per slot — nothing to page) fall back to the slotted pool;
+``ServeConfig.kv_layout`` forces either layout.
 
 Greedy (argmax) decoding — chosen so batched serving is *token-identical*
 to an unbatched sequential decode of each request, the serving analogue of
-the paper's Fig. 7 equivalence claim (tested in tests/test_serving.py and,
-for prefix hits, tests/test_prefix_cache.py).
+the paper's Fig. 7 equivalence claim (tested in tests/test_serving.py,
+tests/test_prefix_cache.py and, for the pipeline itself,
+tests/test_pipeline.py).
 
 Mesh transparency: pass a ``MeshConfig`` and the engine places parameters
 via the same logical-axis rules as ``TransparentTrainer`` (tensor-parallel
@@ -74,7 +82,7 @@ import numpy as np
 
 from repro.configs.base import MeshConfig, ModelConfig, ServeConfig
 from repro.models import common, registry
-from repro.obs import (NULL_TRACER, Tracer, request_track,
+from repro.obs import (INFLIGHT_COUNTER, NULL_TRACER, Tracer, request_track,
                        write_chrome_trace)
 from repro.serving.kvcache import SlotKVCachePool
 from repro.serving.metrics import ServingMetrics
@@ -109,6 +117,70 @@ class _PrefillJob:
         self.done = done                  # tokens already cached
 
 
+class _AdmitPlan:
+    """A planned whole-prompt admission (slot already allocated).
+
+    ``cached_tok`` set means the full-hit fast path: every prompt block is
+    mapped from the prefix cache AND the pool remembered the greedy next
+    token, so submit dispatches nothing for this admission — it just seeds
+    the device token chain and the slot decodes this same cycle."""
+
+    __slots__ = ("req", "slot", "prompt", "cached_tok")
+
+    def __init__(self, req: Request, slot: int, prompt: Tuple[int, ...],
+                 cached_tok=None):
+        self.req = req
+        self.slot = slot
+        self.prompt = prompt
+        self.cached_tok = cached_tok
+
+
+class _ChunkPlan:
+    """One planned suffix chunk (pages already prepared)."""
+
+    __slots__ = ("job", "slot", "start", "chunk", "completes")
+
+    def __init__(self, job: _PrefillJob, slot: int, start: int, chunk: int,
+                 completes: bool):
+        self.job = job
+        self.slot = slot
+        self.start = start
+        self.chunk = chunk
+        self.completes = completes
+
+
+class _StepPlan:
+    """Immutable output of the plan phase: everything submit dispatches."""
+
+    __slots__ = ("admits", "chunks", "rows", "limits", "mask")
+
+    def __init__(self, admits, chunks, rows, limits, mask):
+        self.admits: List[_AdmitPlan] = admits
+        self.chunks: List[_ChunkPlan] = chunks
+        self.rows: List[Tuple[int, int]] = rows      # (slot, rid), decodable
+        self.limits: Dict[int, int] = limits         # slot -> decode budget
+        self.mask: Tuple[int, ...] = mask            # slots masked to trash
+
+
+class _InFlight:
+    """One submitted-but-not-retired cycle: device handles + emission order.
+
+    ``overrides`` are the prefill-origin first tokens (device scalars —
+    forcing them keeps the host out of the token chain), in the exact order
+    the synchronous engine would have emitted them; ``stack`` is the decode
+    scan's [decode_steps, slots] token matrix, read row-by-row at retire.
+    """
+
+    __slots__ = ("overrides", "rows", "limits", "stack", "n_steps")
+
+    def __init__(self, overrides, rows, limits, stack, n_steps):
+        self.overrides: List[Tuple[int, int, jax.Array]] = overrides
+        self.rows: List[Tuple[int, int]] = rows
+        self.limits: Dict[int, int] = limits
+        self.stack = stack                           # device [n_steps, slots]
+        self.n_steps = n_steps
+
+
 class ServingEngine:
     def __init__(self, model_cfg: ModelConfig,
                  serve_cfg: Optional[ServeConfig] = None, *,
@@ -119,8 +191,10 @@ class ServingEngine:
         self.cfg = serve_cfg or ServeConfig()
         # observability: one engine-owned Tracer (ServeConfig(trace=True))
         # threaded through scheduler, pool and metrics; NULL_TRACER keeps
-        # every emit a no-op attribute call when tracing is off
-        self.tracer = (Tracer(capacity=self.cfg.trace_capacity,
+        # every emit a no-op attribute call when tracing is off.  The
+        # injectable clock is shared with metrics so deterministic tests
+        # see one consistent timeline across both.
+        self.tracer = (Tracer(clock=clock, capacity=self.cfg.trace_capacity,
                               meta={"model": model_cfg.name,
                                     "family": model_cfg.family,
                                     "backend": jax.default_backend()})
@@ -193,6 +267,9 @@ class ServingEngine:
             # attend chunk would wrap onto cells its own queries still need
             self._chunk_cap = self.layout.max_chunk_tokens(
                 self.pool.padded_len)
+            # the fused scan has the same wrap hazard: its span may not
+            # exceed the window (contiguous layouts are unconstrained)
+            self._span_cap = self.layout.max_decode_span(self.cfg.decode_steps)
         else:
             self.pool = SlotKVCachePool(
                 self.cfg.max_batch,
@@ -200,14 +277,22 @@ class ServingEngine:
                 mesh=self.mesh, dp_axes=dp_axes, dp_total=dp_total,
                 model_size=model_size)
             self._cache_len = self.cfg.max_seq_len
+            self._span_cap = self.cfg.decode_steps
 
         self.scheduler = Scheduler(self.cfg, tracer=self.tracer)
         self.metrics = ServingMetrics(clock, tracer=self.tracer)
         self.requests: Dict[int, Request] = {}
         self.results: Dict[int, List[int]] = {}
         self._rid = itertools.count()
-        self._last_tokens = np.zeros((self.cfg.max_batch,), np.int32)
         self._prefilling: Dict[int, _PrefillJob] = {}   # slot -> job
+        # pipeline state: the one submitted-but-not-retired cycle, the
+        # per-request count of its not-yet-emitted tokens (subtracted from
+        # decode budgets so the pipeline never over-generates), and the
+        # device-resident last token per slot (decode feeds decode without
+        # a host round-trip; prefill logits override via one jitted setter)
+        self._inflight: Optional[_InFlight] = None
+        self._pending: Dict[int, int] = {}              # rid -> tokens in flight
+        self._last_toks_dev = jnp.zeros((self.cfg.max_batch,), jnp.int32)
         self.prefill_compiles = 0         # lifetime (metrics.reset survives)
 
         # -- compiled entry points -----------------------------------------
@@ -229,30 +314,74 @@ class ServingEngine:
         # (bucket_len | prompt_len, cache_len) pair
         self._prefill = jax.jit(_counted(self.bundle.serve_prefill_fn),
                                 static_argnames=("cache_len",))
+        # tiny helpers keeping the token chain on-device: force a slot's
+        # next token from prefill logits / read the greedy argmax — each
+        # compiles once
+        self._argmax1 = jax.jit(
+            lambda logits: jnp.argmax(logits[0]).astype(jnp.int32))
+        self._set_tok = jax.jit(
+            lambda toks, slot, tok: toks.at[slot].set(tok))
 
         decode_fn = self.bundle.decode_fn
         paged_decode_fn = self.bundle.paged_decode_fn
         paged_prefill_fn = self.bundle.paged_prefill_fn
-
-        def _decode_step(params, toks, pool_state):
-            """toks [slots,1,1] + pool -> (greedy next token [slots], pool)."""
-            logits, new_state = jax.vmap(decode_fn, in_axes=(None, 0, 0))(
-                params, toks, pool_state)
-            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-            return nxt, new_state
+        n_steps = self.cfg.decode_steps
 
         # backend-selected like core/allreduce: the Pallas paged-attention
         # kernel on TPU (HBM traffic ~ pages held), traced ref gather on CPU
         paged_kernel = jax.default_backend() == "tpu"
 
-        def _decode_step_paged(params, toks, pages, table, pos):
-            """toks [slots,1] against the shared page pool (one batched call
-            — no vmap: all slots gather from the same pages)."""
-            logits, new_pages = paged_decode_fn(
-                params, toks, {"pages": pages, "page_table": table,
-                               "pos": pos}, use_pallas=paged_kernel)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return nxt, new_pages
+        # One fused dispatch per cycle: lax.scan over decode_steps.  Each
+        # slot decodes exactly ``limits[slot]`` tokens; past its budget the
+        # carry freezes — the frozen iterations idempotently replay the
+        # last in-budget step (same token, same prepared position, same
+        # deterministic K/V write), so no slot writes past its span and
+        # the stacked output rows past the budget are ignored at retire.
+        # ``last`` (the next cycle's token chain) is ``stack[-1]`` for any
+        # slot that decoded at all: the frozen replays re-emit the last
+        # in-budget token, so the final stack row IS ``stack[limit-1]``.
+        # A budget below n_steps does NOT mean the request completes —
+        # ``safe_decode_span`` caps continuing ring slots too — so the
+        # chain must stay live; only limit-0 slots keep their input token.
+        # ``packed`` is the pool's fused [slots, width+2] operand — page
+        # table | pos | limits in one upload (see decode_operands); the
+        # slices below are free under jit
+        def _decode_scan_paged(params, toks0, pages, packed):
+            table = packed[:, :-2]
+            pos0 = packed[:, -2]
+            limits = packed[:, -1]
+
+            def body(carry, k):
+                toks, pos, pages = carry
+                logits, pages = paged_decode_fn(
+                    params, toks[:, None],
+                    {"pages": pages, "page_table": table, "pos": pos},
+                    use_pallas=paged_kernel)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                adv = (k + 1) < limits
+                return ((jnp.where(adv, nxt, toks),
+                         jnp.where(adv, pos + 1, pos), pages), nxt)
+            (_, _, pages), stack = jax.lax.scan(
+                body, (toks0, pos0, pages), jnp.arange(n_steps))
+            last = jnp.where(limits >= 1, stack[-1], toks0)
+            return stack, last, pages
+
+        # slotted scan: no freeze needed for state — slots past their
+        # budget only ever complete (and evict/blank) or are free (and are
+        # overwritten by the next insert), exactly the slots the
+        # synchronous engine also decoded junk into
+        def _decode_scan(params, toks0, pool_state, limits):
+            def body(carry, k):
+                toks, state = carry
+                logits, state = jax.vmap(decode_fn, in_axes=(None, 0, 0))(
+                    params, toks[:, None, None], state)
+                nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+                adv = (k + 1) < limits
+                return (jnp.where(adv, nxt, toks), state), nxt
+            (_, state), stack = jax.lax.scan(
+                body, (toks0, pool_state), jnp.arange(n_steps))
+            last = jnp.where(limits >= 1, stack[-1], toks0)
+            return stack, last, state
 
         def _prefill_chunk(params, toks, pages, table, start, n_valid):
             """One request's suffix chunk straight into the page pool
@@ -262,20 +391,20 @@ class ServingEngine:
                                      "start": start, "n_valid": n_valid})
 
         if self.mesh is not None:
-            slots = self.cfg.max_batch
-            tok_axis = (tuple(dp_axes) if dp_total > 1
-                        and slots % dp_total == 0 else None)
-
             def ns(spec):
                 return jax.sharding.NamedSharding(self.mesh, spec)
 
+            # token / limit vectors are tiny [slots] operands — replicated
+            # (the old per-step path dp-sharded toks; at scan granularity
+            # the transfer is once per cycle and replication is simpler)
             if self.paged:
                 self._decode = jax.jit(
-                    _decode_step_paged,
-                    in_shardings=(param_sh, ns(P(None, None)),
+                    _decode_scan_paged,
+                    in_shardings=(param_sh, ns(P(None)),
                                   self.pool.shardings,
-                                  ns(P(None, None)), ns(P(None))),
-                    out_shardings=(ns(P()), self.pool.shardings),
+                                  ns(P(None, None))),
+                    out_shardings=(ns(P(None, None)), ns(P(None)),
+                                   self.pool.shardings),
                     donate_argnums=(2,))
                 if self._prefix_path:
                     self._paged_prefill = jax.jit(
@@ -288,19 +417,19 @@ class ServingEngine:
                         donate_argnums=(2,))
             else:
                 self._decode = jax.jit(
-                    _decode_step,
-                    in_shardings=(param_sh,
-                                  ns(P(tok_axis, None, None)),
-                                  self.pool.shardings),
-                    out_shardings=(ns(P()), self.pool.shardings),
+                    _decode_scan,
+                    in_shardings=(param_sh, ns(P(None)),
+                                  self.pool.shardings, ns(P(None))),
+                    out_shardings=(ns(P(None, None)), ns(P(None)),
+                                   self.pool.shardings),
                     donate_argnums=(2,))
         elif self.paged:
-            self._decode = jax.jit(_decode_step_paged, donate_argnums=(2,))
+            self._decode = jax.jit(_decode_scan_paged, donate_argnums=(2,))
             if self._prefix_path:
                 self._paged_prefill = jax.jit(_counted(_prefill_chunk),
                                               donate_argnums=(2,))
         else:
-            self._decode = jax.jit(_decode_step, donate_argnums=(2,))
+            self._decode = jax.jit(_decode_scan, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     # Submission
@@ -340,7 +469,8 @@ class ServingEngine:
 
     @property
     def busy(self) -> bool:
-        return bool(self.scheduler.depth() or self.pool.owner)
+        return bool(self.scheduler.depth() or self.pool.owner
+                    or self._inflight is not None)
 
     def _emit(self, req: Request, token: int, stream: Optional[StreamFn]):
         first = not req.tokens
@@ -372,11 +502,30 @@ class ServingEngine:
                             tokens=len(req.tokens),
                             preempted=req.preempted)
 
+    def _finalize(self, slot: int, req: Request):
+        """A retired token finished ``req``.  Normally its slot is evicted;
+        if it was preempted *after* this cycle was submitted (the slot now
+        belongs to someone else or is free), the request is a ghost — its
+        in-flight tokens completed it, so it leaves the waiting queue
+        without ever being re-admitted."""
+        if self.pool.owner.get(slot) == req.rid:
+            self._complete(slot, req)
+            return
+        self.scheduler.drop(req)
+        self.results[req.rid] = req.tokens
+        self.metrics.record_completion(req.rid)
+        rt = request_track(req.rid)
+        self.tracer.end("queued", track=rt)    # re-queued by the preemption
+        self.tracer.instant("request.complete", track=rt, rid=req.rid,
+                            tokens=len(req.tokens),
+                            preempted=req.preempted)
+
     def _can_admit(self, prompt) -> bool:
         """Would the paged pool take this prompt right now (slot + pages,
         net of prefix-cache hits)?  Used by the priority policy's
         blocked-admission check only — actual admission goes straight
-        through ``_admit``/``alloc_prefix`` (no double planning)."""
+        through the plan phase's ``alloc_*`` (no double planning: the
+        pool memoizes the prompt plan by chain hash)."""
         return self.pool.can_admit_prompt(prompt) if self._prefix_path \
             else self.pool.can_admit(len(prompt))
 
@@ -390,16 +539,20 @@ class ServingEngine:
         toks[0, :n] = prompt
         return jnp.asarray(toks), n
 
-    def _admit(self, req: Request, stream: Optional[StreamFn]) -> bool:
-        """Place one request; False when the pool cannot take it right now
-        (paged page shortage — the caller re-queues it, never drops it).
-        The pool is the single admission authority: no pre-check re-plans
-        the prompt, so each admission attempt hashes its blocks once."""
+    # ------------------------------------------------------------------
+    # Phase 1: plan (host only — decides, allocates, prepares; no blocking)
+    # ------------------------------------------------------------------
+
+    def _plan_admit(self, req: Request, admits: List[_AdmitPlan]) -> bool:
+        """Reserve a slot (and pages) for one request; False when the pool
+        cannot take it right now (the caller re-queues it, never drops
+        it).  The pool is the single admission authority: no pre-check
+        re-plans the prompt."""
         prompt = req.resume_prompt()
         rt = request_track(req.rid)
         if self._prefix_path:
             # map cached prefix pages read-only; suffix prefills in chunks
-            # (the first chunk runs this same cycle in _advance_prefills)
+            # (the first chunk is planned this same cycle)
             out = self.pool.alloc_prefix(req.rid, prompt)
             if out is None:
                 return False
@@ -410,48 +563,33 @@ class ServingEngine:
             self.tracer.begin("prefill", track=rt,
                               prompt_tokens=len(prompt),
                               prefix_hit_tokens=cached)
-            self._prefilling[slot] = _PrefillJob(req, prompt, cached)
+            if cached >= len(prompt):
+                # full hit + memoized next token (cache_next_token): no
+                # prefill at all — the admission joins this cycle's decode
+                # rows like a completed prefill would
+                admits.append(_AdmitPlan(
+                    req, slot, prompt,
+                    cached_tok=self.pool.cached_next_token(prompt)))
+            else:
+                self._prefilling[slot] = _PrefillJob(req, prompt, cached)
             return True
-        if self.paged and not self.pool.can_admit(len(prompt)):
-            # slot free but pages aren't: don't burn a prefill that
-            # cannot be placed
+        if self.paged:
+            slot = self.pool.alloc_for_insert(req.rid, len(prompt))
+        else:
+            slot = self.pool.alloc(req.rid)
+        if slot is None:
             return False
         self.tracer.end("queued", track=rt)
-        toks, n_valid = self._bucketed_prompt(prompt, self._cache_len)
-        self.tracer.begin("prefill", track=rt, prompt_tokens=len(prompt),
-                          bucket=int(toks.shape[1]))
-        with self.tracer.span("prefill.device", tokens=len(prompt),
-                              bucket=int(toks.shape[1])):
-            if n_valid is None:
-                logits, state = self._prefill(self.params, toks,
-                                              cache_len=self._cache_len)
-            else:
-                logits, state = self._prefill(self.params, toks,
-                                              cache_len=self._cache_len,
-                                              n_valid=jnp.asarray(n_valid,
-                                                                  jnp.int32))
-            self._fence(logits)
-        self.metrics.record_prefill(len(prompt))
-        if self.paged:
-            slot = self.pool.insert(req.rid, state, n_tokens=len(prompt))
-        else:
-            slot = self.pool.insert(req.rid, state)
-        if slot is None:
-            raise RuntimeError("admission with no free slot")
-        token = int(jnp.argmax(logits[0]))
-        self._last_tokens[slot] = token
-        self.tracer.end("prefill", track=rt)
-        self.tracer.begin("decode", track=rt)
-        if self._emit(req, token, stream):
-            self._complete(slot, req)
+        self.tracer.begin("prefill", track=rt, prompt_tokens=len(prompt))
+        admits.append(_AdmitPlan(req, slot, prompt))
         return True
 
-    def _advance_prefills(self, stream: Optional[StreamFn]):
-        """Run one suffix chunk per prefilling slot (chunked prefill): each
-        cycle a long prompt advances ``prefill_chunk_tokens`` tokens while
-        every already-running stream keeps decoding in the same cycle.
-        Ring (windowed) layouts cap chunks at the window and rotate /
-        copy-on-write the cells each chunk will overwrite first."""
+    def _plan_chunks(self, chunks: List[_ChunkPlan]) -> None:
+        """Size one suffix chunk per prefilling slot and prepare its pages
+        (ring rotation / COW).  A slot whose chunk finishes the prompt
+        leaves ``_prefilling`` now — it joins this same cycle's decode
+        rows, exactly when the synchronous engine would have started
+        decoding it."""
         for slot in sorted(self._prefilling):
             job = self._prefilling.get(slot)
             if job is None:                 # preempted by an earlier slot's
@@ -470,42 +608,269 @@ class ServingEngine:
                         not self.pool.prepare_chunk(slot, job.done,
                                                     job.done + chunk - 1):
                     continue
-            width = (bucket_len(chunk, self.pool.padded_len)
-                     if self.cfg.prefill_bucket else chunk)
-            toks = np.zeros((1, width), np.int32)
-            toks[0, :chunk] = job.prompt[job.done:job.done + chunk]
-            rt = request_track(job.req.rid)
-            with self.tracer.span("prefill.chunk", track=rt, chunk=chunk,
-                                  bucket=width, start=job.done):
-                with self.tracer.span("prefill.device", tokens=chunk,
-                                      bucket=width):
-                    logits, self.pool.pages = self._paged_prefill(
-                        self.params, jnp.asarray(toks), self.pool.pages,
-                        jnp.asarray(self.pool.tables[slot]),
-                        jnp.asarray(job.done, jnp.int32),
-                        jnp.asarray(chunk, jnp.int32))
-                    self._fence(logits)
-            self.metrics.record_prefill(chunk)
-            job.done += chunk
-            # register fully-written blocks right away: requests admitted
-            # while this one still chunks can already share its prefix
-            self.pool.commit_prefix(slot, job.prompt[:job.done])
-            if job.done < len(job.prompt):
+            completes = job.done + chunk >= len(job.prompt)
+            chunks.append(_ChunkPlan(job, slot, job.done, chunk, completes))
+            if completes:
+                del self._prefilling[slot]
+
+    def _plan_cycle(self) -> _StepPlan:
+        cfg, tr = self.cfg, self.tracer
+        # requests with un-retired tokens in flight must not be re-admitted
+        # (their resume prompt would miss those tokens); the guard clears
+        # at the next retire
+        skip_rids = frozenset(self._pending)
+        # 1. preemption (priority policy only): fires when admission is
+        # blocked — no free slot, or (paged) too few free pages for the
+        # most urgent waiter's prompt (prefix-cache hits shrink that need)
+        with tr.span("preempt"):
+            if cfg.policy == "priority" and self.scheduler.depth():
+                head = self.scheduler.peek()
+                blocked = (head.rid not in skip_rids
+                           and (self.pool.free_slots == 0
+                                or (self.paged
+                                    and not self._can_admit(
+                                        head.resume_prompt()))))
+                if blocked:
+                    running = {s: self.requests[r]
+                               for s, r in self.pool.owner.items()}
+                    for slot, _ in self.scheduler.preemption(running):
+                        self._preempt(slot)
+        # 2. admission: reserve prefix pages / slots.  When the pool
+        # declines (slot free but pages aren't), wait for running work to
+        # finish: EVERY not-yet-admitted popped request goes back
+        # (reversed, so the head of the line ends up most negative =
+        # first) — head-of-line blocking, never a silent drop.
+        admits: List[_AdmitPlan] = []
+        with tr.span("admit"):
+            pending = self.scheduler.next_prefills(self.pool.free_slots,
+                                                   skip_rids)
+            for i, req in enumerate(pending):
+                if not self._plan_admit(req, admits):
+                    for r in reversed(pending[i:]):
+                        self.scheduler.push_front(r)
+                    break
+        # 2b. chunked prefill: one chunk per mid-prefill slot per cycle
+        chunks: List[_ChunkPlan] = []
+        if self._prefilling:
+            self._plan_chunks(chunks)
+        self.metrics.sample_queue_depth(self.scheduler.depth())
+        # 3. per-slot decode budgets: exactly the tokens the request may
+        # still emit, net of everything already in flight and the first
+        # token this cycle's own prefill will force — the pipeline never
+        # over-generates, so EOS-free runs are token-exact by construction
+        chunk_done = {c.slot for c in chunks if c.completes}
+        override_slots = {a.slot for a in admits} | chunk_done
+        limits: Dict[int, int] = {}
+        for slot, rid in self.pool.owner.items():
+            if slot in self._prefilling:
                 continue
-            del self._prefilling[slot]
-            token = int(jnp.argmax(logits[0]))
-            self._last_tokens[slot] = token
-            self.tracer.end("prefill", track=rt)
-            self.tracer.begin("decode", track=rt)
-            if self._emit(job.req, token, stream):
-                self._complete(slot, job.req)
+            req = self.requests[rid]
+            budget = (req.max_new_tokens - len(req.tokens)
+                      - self._pending.get(rid, 0)
+                      - (1 if slot in override_slots else 0))
+            lim = max(min(budget, cfg.decode_steps, self._span_cap), 0)
+            if lim > 0 and slot in chunk_done and self.paged:
+                # the chunk's blocks aren't committed to the prefix index
+                # until submit — a ring rotation planned now would strand
+                # them (see PagedKVCachePool.safe_decode_span)
+                lim = self.pool.safe_decode_span(slot, lim)
+            limits[slot] = lim
+        # 4. page growth for the whole span (paged): every decodable slot
+        # gets positions pos..pos+limit-1 privately writable before the
+        # scan is dispatched; on starvation preempt until the rest fit
+        if self.paged:
+            while True:
+                starved = self.pool.ensure_decode_capacity(
+                    skip=self._prefilling.keys(), steps=limits)
+                if not starved:
+                    break
+                self._relieve_pressure()
+        # held pages peak right after growth (completion evictions come at
+        # retire) — sample here so kv_bytes_peak sees the high-water mark
+        self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
+                                     self.pool.kv_bytes_slotted())
+        # 5. growth preemption may have evicted work planned above — keep
+        # only what the current ownership map still stands behind (nothing
+        # was dispatched yet, so a drop here is clean)
+        admits = [a for a in admits
+                  if self.pool.owner.get(a.slot) == a.req.rid]
+        chunks = [c for c in chunks
+                  if self.pool.owner.get(c.slot) == c.job.req.rid]
+        rows = [(s, self.pool.owner[s]) for s in sorted(self.pool.owner)
+                if s not in self._prefilling and limits.get(s, 0) > 0]
+        mask = tuple(sorted(s for s in self.pool.owner
+                            if limits.get(s, 0) <= 0))
+        return _StepPlan(admits, chunks, rows,
+                         {s: limits[s] for s, _ in rows}, mask)
+
+    # ------------------------------------------------------------------
+    # Phase 2: submit (dispatch the plan; advance host positions; no sync)
+    # ------------------------------------------------------------------
+
+    def _submit(self, plan: _StepPlan) -> Optional[_InFlight]:
+        cfg, tr = self.cfg, self.tracer
+        overrides: List[Tuple[int, int, jax.Array]] = []
+        for a in plan.admits:
+            rt = request_track(a.req.rid)
+            if a.cached_tok is not None:
+                # full-hit fast path: pages mapped read-only at plan, next
+                # token remembered from an earlier identical prefill — the
+                # admission costs zero device dispatches beyond seeding the
+                # token chain
+                self._last_toks_dev = self._set_tok(self._last_toks_dev,
+                                                    a.slot, a.cached_tok)
+                overrides.append((a.req.rid, a.slot, a.cached_tok))
+                tr.end("prefill", track=rt)
+                tr.begin("decode", track=rt)
+                continue
+            toks, n_valid = self._bucketed_prompt(a.prompt, self._cache_len)
+            with tr.span("prefill.device", tokens=len(a.prompt),
+                         bucket=int(toks.shape[1])):
+                if n_valid is None:
+                    logits, state = self._prefill(self.params, toks,
+                                                  cache_len=self._cache_len)
+                else:
+                    logits, state = self._prefill(
+                        self.params, toks, cache_len=self._cache_len,
+                        n_valid=jnp.asarray(n_valid, jnp.int32))
+                self._fence(logits)
+            self.metrics.record_prefill(len(a.prompt))
+            if self.paged:
+                self.pool.insert_state(a.slot, state)
+            else:
+                self.pool.insert_at(a.slot, state)
+            tok = self._argmax1(logits)
+            self._last_toks_dev = self._set_tok(self._last_toks_dev,
+                                                a.slot, tok)
+            overrides.append((a.req.rid, a.slot, tok))
+            tr.end("prefill", track=rt)
+            tr.begin("decode", track=rt)
+        for c in plan.chunks:
+            job = c.job
+            width = (bucket_len(c.chunk, self.pool.padded_len)
+                     if cfg.prefill_bucket else c.chunk)
+            ctoks = np.zeros((1, width), np.int32)
+            ctoks[0, :c.chunk] = job.prompt[c.start:c.start + c.chunk]
+            rt = request_track(job.req.rid)
+            with tr.span("prefill.chunk", track=rt, chunk=c.chunk,
+                         bucket=width, start=c.start):
+                with tr.span("prefill.device", tokens=c.chunk, bucket=width):
+                    logits, self.pool.pages = self._paged_prefill(
+                        self.params, jnp.asarray(ctoks), self.pool.pages,
+                        jnp.asarray(self.pool.tables[c.slot]),
+                        jnp.asarray(c.start, jnp.int32),
+                        jnp.asarray(c.chunk, jnp.int32))
+                    self._fence(logits)
+            self.metrics.record_prefill(c.chunk)
+            job.done = c.start + c.chunk
+            # register fully-written blocks right away: requests admitted
+            # next cycle can already share this prefix (device order makes
+            # the pages valid before any reader dispatches)
+            self.pool.commit_prefix(c.slot, job.prompt[:job.done])
+            if c.completes:
+                tok = self._argmax1(logits)
+                # remember (prompt -> next token) so a repeat of this exact
+                # prompt can skip prefill entirely (full-hit fast path)
+                self.pool.cache_next_token(job.prompt, tok)
+                self._last_toks_dev = self._set_tok(self._last_toks_dev,
+                                                    c.slot, tok)
+                overrides.append((job.req.rid, c.slot, tok))
+                tr.end("prefill", track=rt)
+                tr.begin("decode", track=rt)
+        stack = None
+        if plan.rows:
+            with tr.span("decode.device", steps=cfg.decode_steps,
+                         rows=len(plan.rows)):
+                if self.paged:
+                    packed = self.pool.decode_operands(
+                        plan.limits, mask_slots=plan.mask)
+                    stack, self._last_toks_dev, self.pool.pages = \
+                        self._decode(self.params, self._last_toks_dev,
+                                     self.pool.pages, packed)
+                else:
+                    limits_dev = jnp.asarray(np.asarray(
+                        [plan.limits.get(s, 0) for s in range(cfg.max_batch)],
+                        np.int32))
+                    stack, self._last_toks_dev, self.pool.state = \
+                        self._decode(self.params, self._last_toks_dev,
+                                     self.pool.state, limits_dev)
+                self._fence(stack)
+            if self.paged:
+                # host positions are deterministic once planned — advance
+                # now so the next plan overlaps the in-flight device step
+                self.pool.advance(steps=plan.limits)
+        for rid, _, _ in overrides:
+            self._pending[rid] = self._pending.get(rid, 0) + 1
+        for slot, rid in plan.rows:
+            self._pending[rid] = self._pending.get(rid, 0) + plan.limits[slot]
+        if not overrides and stack is None:
+            return None
+        return _InFlight(overrides, plan.rows, plan.limits, stack,
+                         cfg.decode_steps)
+
+    # ------------------------------------------------------------------
+    # Phase 3: retire (materialise the previous cycle; emit in sync order)
+    # ------------------------------------------------------------------
+
+    def _dec_pending(self, rid: int, n: int) -> None:
+        if n <= 0:
+            return
+        left = self._pending.get(rid, 0) - n
+        if left > 0:
+            self._pending[rid] = left
+        else:
+            self._pending.pop(rid, None)
+
+    def _retire(self, inf: _InFlight, stream: Optional[StreamFn]) -> None:
+        stack = np.asarray(inf.stack) if inf.stack is not None else None
+        emitted: List[int] = []
+        for rid, slot, tok in inf.overrides:
+            if rid in self.results:
+                continue
+            req = self.requests[rid]
+            emitted.append(rid)
+            if self._emit(req, int(tok), stream):
+                self._finalize(slot, req)
+        # decode rows emit step-major / slot-minor — the synchronous
+        # engine's per-step completion sweep order.  Rows past a slot's
+        # budget or past an EOS cut (``rid in results``) are speculative
+        # device output and are dropped here.
+        for k in range(inf.n_steps):
+            for slot, rid in inf.rows:
+                if k >= inf.limits.get(slot, 0) or rid in self.results:
+                    continue
+                req = self.requests[rid]
+                emitted.append(rid)
+                self.metrics.record_decode_token()
+                if self._emit(req, int(stack[k, slot]), stream):
+                    self._finalize(slot, req)
+        # ghost hygiene: a victim preempted after this cycle was submitted
+        # had its ITL baseline dropped by the preemption — the emissions
+        # above re-seeded it, so drop it again to keep the requeue ->
+        # resume gap out of inter-token latency
+        owned = set(self.pool.owner.values())
+        for rid in emitted:
+            if rid not in self.results and rid not in owned:
+                self.metrics.drop_itl_baseline(rid)
+        # symmetric pending release (EOS cuts don't change what was
+        # dispatched, so the decrement mirrors the submit-side increment)
+        for rid, _, _ in inf.overrides:
+            self._dec_pending(rid, 1)
+        for slot, rid in inf.rows:
+            self._dec_pending(rid, inf.limits.get(slot, 0))
+
+    # ------------------------------------------------------------------
+    # Preemption helpers (shared by plan-phase policies)
+    # ------------------------------------------------------------------
 
     def _preempt(self, slot: int):
         """Evict a running request and put it back at the queue head; its
         emitted tokens fold into the resume prompt (greedy decode, so the
         eventual output is unchanged).  A victim caught mid-prefill simply
         restarts its suffix on resume (its shared prefix pages stay cached,
-        so the lost work is the uncommitted chunks only)."""
+        so the lost work is the uncommitted chunks only).  A victim with
+        un-retired tokens in flight stays un-admittable until they emit
+        (``_pending`` / ``skip_rids``)."""
         victim = self.requests[self.pool.owner[slot]]
         self._prefilling.pop(slot, None)
         self.pool.evict(slot)
@@ -535,124 +900,49 @@ class ServingEngine:
             key=lambda s: (-self.requests[self.pool.owner[s]].priority,
                            self.pool.owner[s])))
 
-    def _grow_pages(self):
-        """Paged pool: make every decoding slot able to write its next token
-        (lazy growth; ring layouts rotate / COW the cell being wrapped
-        into); on page pressure, preempt until the rest fit — even a
-        non-starving victim is evicted, since its freed pages rebalance to
-        the earlier arrivals."""
-        while True:
-            starved = self.pool.ensure_decode_capacity(
-                skip=self._prefilling.keys())
-            if not starved:
-                return
-            self._relieve_pressure()
-
-    def _decodable(self) -> bool:
-        return any(s not in self._prefilling for s in self.pool.owner)
+    # ------------------------------------------------------------------
+    # The cycle
+    # ------------------------------------------------------------------
 
     def step(self, stream: Optional[StreamFn] = None) -> bool:
         """One engine cycle; returns True while work remains.
 
-        Traced (``ServeConfig(trace=True)``), the cycle decomposes into the
-        section spans of ``repro.obs.export.STEP_SECTIONS`` — they tile the
-        enclosing ``step`` span, and the device calls are fenced with
-        ``block_until_ready`` so host vs device time separates.  Untraced,
-        every ``with tracer.span(...)`` is the shared no-op context manager
-        and no fence runs.
+        ``pipeline_depth=2``: plan and submit cycle N+1, then retire cycle
+        N — the host plans against the in-flight device step and the
+        device is never idle waiting for planning.  ``pipeline_depth=1``:
+        retire what was just submitted (synchronous semantics).
+
+        Traced (``ServeConfig(trace=True)``), the cycle decomposes into
+        the section spans of ``repro.obs.export.STEP_SECTIONS``
+        (``step.plan`` / ``step.submit`` / ``step.retire`` tile the
+        enclosing ``step`` span) and the device calls are fenced with
+        ``block_until_ready`` so host vs device time separates.
+        Untraced, every ``with tracer.span(...)`` is the shared no-op
+        context manager and no fence runs.
         """
-        cfg = self.cfg
         tr = self.tracer
         with tr.span("step"):
-            self._step_body(stream, cfg, tr)
+            with tr.span("step.plan"):
+                plan = self._plan_cycle()
+            with tr.span("step.submit"):
+                nxt = self._submit(plan)
+                prev, self._inflight = self._inflight, nxt
+                if prev is not None or nxt is not None:
+                    tr.counter(INFLIGHT_COUNTER,
+                               int(prev is not None) + int(nxt is not None))
+            if self.cfg.pipeline_depth == 1:
+                # prev is always None at depth 1 — retire this very cycle
+                prev, self._inflight = self._inflight, None
+            with tr.span("step.retire", pending=prev is not None):
+                if prev is not None:
+                    self._retire(prev, stream)
+                    tr.counter(INFLIGHT_COUNTER,
+                               int(self._inflight is not None))
         return self.busy
 
-    def _step_body(self, stream: Optional[StreamFn], cfg: ServeConfig,
-                   tr) -> None:
-        # 1. preemption (priority policy only): fires when admission is
-        # blocked — no free slot, or (paged) too few free pages for the
-        # most urgent waiter's prompt (prefix-cache hits shrink that need)
-        with tr.span("preempt"):
-            if cfg.policy == "priority" and self.scheduler.depth():
-                head = self.scheduler.peek()
-                blocked = (self.pool.free_slots == 0
-                           or (self.paged
-                               and not self._can_admit(
-                                   head.resume_prompt())))
-                if blocked:
-                    running = {s: self.requests[r]
-                               for s, r in self.pool.owner.items()}
-                    for slot, _ in self.scheduler.preemption(running):
-                        self._preempt(slot)
-        # 2. admission: map prefix pages / prefill into free slots.  When
-        # the pool declines (slot free but pages aren't), wait for running
-        # work to finish: EVERY not-yet-admitted popped request goes back
-        # (reversed, so the head of the line ends up most negative = first)
-        # — head-of-line blocking, never a silent drop.
-        with tr.span("admit"):
-            pending = self.scheduler.next_prefills(self.pool.free_slots)
-            for i, req in enumerate(pending):
-                if not self._admit(req, stream):
-                    for r in reversed(pending[i:]):
-                        self.scheduler.push_front(r)
-                    break
-        # 2b. chunked prefill: one chunk per mid-prefill slot per cycle
-        with tr.span("prefill"):
-            if self._prefilling:
-                self._advance_prefills(stream)
-        with tr.span("sample"):
-            self.metrics.sample_queue_depth(self.scheduler.depth())
-            self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
-                                         self.pool.kv_bytes_slotted())
-        # 3. batched decode over the fixed pool
-        for _ in range(cfg.decode_steps):
-            if not self._decodable():
-                break
-            if self.paged:
-                with tr.span("decode.host"):
-                    self._grow_pages()
-                    decodable = self._decodable()
-                    if decodable:
-                        # held pages peak right after growth (completion
-                        # evictions come later in this iteration) — sample
-                        # here so kv_bytes_peak sees the true high-water
-                        # mark
-                        self.metrics.sample_kv_bytes(
-                            self.pool.kv_bytes_held(),
-                            self.pool.kv_bytes_slotted())
-                        table, pos = self.pool.decode_view(
-                            mask_slots=tuple(self._prefilling))
-                        toks = jnp.asarray(self._last_tokens[:, None])
-                if not decodable:
-                    break
-                with tr.span("decode.device"):
-                    nxt, self.pool.pages = self._decode(self.params, toks,
-                                                        self.pool.pages,
-                                                        table, pos)
-                    self._fence(nxt)
-                with tr.span("decode.host"):
-                    self.pool.advance(skip=self._prefilling.keys())
-            else:
-                with tr.span("decode.host"):
-                    toks = jnp.asarray(self._last_tokens.reshape(-1, 1, 1))
-                with tr.span("decode.device"):
-                    nxt, self.pool.state = self._decode(self.params, toks,
-                                                        self.pool.state)
-                    self._fence(nxt)
-            # 4. completion swap-out (mid-prefill slots have no token yet)
-            with tr.span("complete"):
-                nxt = np.asarray(nxt)
-                self._last_tokens = nxt.copy()
-                for slot, rid in sorted(self.pool.owner.items()):
-                    if slot in self._prefilling:
-                        continue
-                    req = self.requests[rid]
-                    self.metrics.record_decode_token()
-                    if self._emit(req, int(nxt[slot]), stream):
-                        self._complete(slot, req)
-
     def run(self, stream: Optional[StreamFn] = None) -> Dict[int, List[int]]:
-        """Drive the loop until queue and slots drain; returns rid -> tokens."""
+        """Drive the loop until queue, slots and pipeline drain; returns
+        rid -> tokens."""
         while self.step(stream):
             pass
         return dict(self.results)

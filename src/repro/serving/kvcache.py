@@ -162,13 +162,19 @@ class SlotKVCachePool:
 
     # -- device ops (each compiled once) -----------------------------------
 
+    def insert_at(self, slot: int, one_state) -> None:
+        """Scatter a prefilled single-sequence state into an already
+        ``alloc``-ed slot — the device half of admission.  A pipelined
+        engine allocates in its plan phase (host decision) and dispatches
+        this at submit; the one-shot ``insert`` composes both."""
+        self.state = self._insert(self.state, one_state,
+                                  jnp.asarray(slot, jnp.int32))
+
     def insert(self, rid: int, one_state) -> Optional[int]:
         """Place a prefilled single-sequence state into a free slot."""
         slot = self.alloc(rid)
-        if slot is None:
-            return None
-        self.state = self._insert(self.state, one_state,
-                                  jnp.asarray(slot, jnp.int32))
+        if slot is not None:
+            self.insert_at(slot, one_state)
         return slot
 
     def evict(self, slot: int):

@@ -113,6 +113,16 @@ class KVLayout:
         cells its own early queries (and the snapshot gather) still need."""
         return self.window if self.ring else padded_len
 
+    def max_decode_span(self, n_steps: int) -> int:
+        """Longest decode span one fused multi-step dispatch may write.
+        The pipelined engine prepares a slot's whole span (positions
+        ``pos..pos+span-1``) before dispatching its ``lax.scan`` decode;
+        a ring span longer than the window would wrap onto cells whose
+        keys its own earlier scan iterations still attend — same hazard,
+        same bound as ``max_chunk_tokens``.  Contiguous layouts are
+        unconstrained."""
+        return min(n_steps, self.window) if self.ring else n_steps
+
     def needed_start(self, cached_tokens: int, page_size: int) -> int:
         """First prompt block a new admission must still be able to *read*
         when ``cached_tokens`` are served from the prefix cache: suffix

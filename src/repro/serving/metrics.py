@@ -18,6 +18,7 @@ import time
 from typing import Callable, Dict, List, Optional, Union
 
 from repro.obs import NULL_TRACER, phase_snapshot
+from repro.obs.export import DECODE_TIME_S, PREFILL_TIME_S
 
 
 def percentile(xs: List[float], p: float) -> float:
@@ -142,6 +143,15 @@ class ServingMetrics:
         if rid is not None:
             self._last_token_t.pop(rid, None)
 
+    def drop_itl_baseline(self, rid: int) -> None:
+        """Forget a request's last-token timestamp without counting a
+        preemption.  The pipelined engine's retire phase calls this after
+        emitting a preempted victim's in-flight tokens — those emissions
+        re-seed the baseline ``record_preemption`` had just dropped, and
+        without this the requeue -> resume gap would land in ITL as one
+        giant sample."""
+        self._last_token_t.pop(rid, None)
+
     def sample_queue_depth(self, depth: int) -> None:
         self.queue_depth.append(depth)
 
@@ -183,9 +193,12 @@ class ServingMetrics:
         """
         dt = self.elapsed()
         prompt_tokens = self.prefill_tokens + self.prefix_hit_tokens
+        # phase keys come from repro.obs.export's named constants (shared
+        # with the bench schema gate), including ``host_overhead_frac`` —
+        # the async-pipeline acceptance number
         phases = phase_snapshot(self.tracer if self.tracer is not None
                                 else NULL_TRACER)
-        dec_t, pre_t = phases["decode_time_s"], phases["prefill_time_s"]
+        dec_t, pre_t = phases[DECODE_TIME_S], phases[PREFILL_TIME_S]
         return {
             "completed": self.completed,
             "tokens_out": self.tokens_out,

@@ -36,7 +36,10 @@ page-aligned prompt blocks are registered in a hash-trie index —
 its own prompt blocks and maps every hit read-only (refcount++): those
 positions are never re-prefilled and their pages never duplicated.  A
 prompt *fully* covered by cached blocks reuses the last block's page
-**copy-on-write**.  When a page's refcount drops to zero it parks in an
+**copy-on-write** so the final token can re-run for its logits — unless
+the pool has also memoized that prompt's greedy next token
+(``cache_next_token``), in which case the last block maps read-only like
+the rest and the admission dispatches nothing at all.  When a page's refcount drops to zero it parks in an
 LRU of reusable cached pages and is reclaimed only when the allocator
 runs dry; reclaiming (or rotating out) an indexed page leaves a
 **phantom** entry — ``(None, parent_hash, tokens)`` — so the chain hash
@@ -47,8 +50,10 @@ them as cached anyway (wholly window-masked, no page needed).
 
 Device state is fixed-shape (decode compiles once):
   * ``pages``   {leaf: [L, P, ps, ...]}  — donated through decode
-  * page table  [slots, table_width] int32 — host-owned (numpy),
-    re-uploaded per decode step (tiny; allocation is host bookkeeping)
+  * page table  [slots, table_width] int32 — host-owned (numpy); packed
+    with ``pos`` and the per-slot step budgets into ONE int32 upload per
+    decode cycle (``decode_operands`` — dispatch count, not bytes, is
+    what a cycle pays for on the host side)
   * ``pos``     [slots] int32            — tokens cached per slot
 
 Eviction hygiene: freed pages go back to the allocator without device-side
@@ -229,11 +234,21 @@ class PagedKVCachePool:
         self._block_of_page: Dict[int, int] = {}
         self._commit_cursor: Dict[int, Tuple[int, int]] = {}
         self._cached_lru: "OrderedDict[int, None]" = OrderedDict()
-        # one-entry plan memo keyed on index version: the engine's
-        # blocked-admission probe and the admission itself (often the same
-        # prompt, same cycle) walk the chain hash once between index changes
+        # plan memo keyed by prompt: steady-state traffic repeats prompts
+        # (shared system prompts, resume re-prefills, probe-then-admit in
+        # one cycle), so the chain-hash walk runs once per (prompt, index
+        # epoch) instead of once per admission attempt.  Entries carry the
+        # index version they were computed under and go stale — never
+        # wrong — when the index changes; a bounded LRU caps host memory.
         self._index_version = 0
-        self._plan_memo: Optional[Tuple[int, Tuple[int, ...], tuple]] = None
+        self._plan_cache: "OrderedDict[Tuple[int, ...], Tuple[int, tuple]]" \
+            = OrderedDict()
+        self._plan_cache_cap = 512
+        # greedy next-token memo: prompt -> the device scalar its prefill
+        # argmaxed (see cache_next_token).  Content-addressed truth under
+        # greedy decoding, so unlike the plan memo it needs no version —
+        # only the LRU cap and clear_prefix_cache bound it.
+        self._next_tok: "OrderedDict[Tuple[int, ...], object]" = OrderedDict()
         self.tracer.instant("pool.init", num_pages=self.num_pages,
                             page_size=page_size,
                             table_width=self.table_width,
@@ -297,6 +312,17 @@ class PagedKVCachePool:
         return self._page_budget() - pinned
 
     # -- page plumbing -----------------------------------------------------
+
+    def _take_slot(self, rid: int) -> int:
+        """Pop a free slot and zero its bookkeeping (table row -> trash)."""
+        slot = self._free_slots.pop(0)
+        assert slot not in self.owner, f"slot {slot} double-assigned"
+        self.owner[slot] = rid
+        self.held[slot] = []
+        self._blocks[slot] = []
+        self._cells[slot] = {}
+        self.tables[slot] = 0
+        return slot
 
     def _grab(self) -> Optional[int]:
         """Acquire a raw page: content-free pages first, then reclaim the
@@ -498,18 +524,23 @@ class PagedKVCachePool:
         the *entire* prompt keeps its last block out of the read-only
         mapping and returns it as ``cow_src`` instead: the final prompt
         token must still run (logits), so that page is duplicated
-        copy-on-write and cached_tokens caps at len(prompt) - 1.  The
-        result is memoized until the index next changes, so a probe
-        (``can_admit_prompt``) followed by the admission re-plans nothing.
+        copy-on-write and cached_tokens caps at len(prompt) - 1.  Results
+        are memoized per prompt (bounded LRU) until the index next
+        changes, so a probe (``can_admit_prompt``) followed by the
+        admission — and every repeat of a steady-state prompt between
+        index changes — re-plans nothing.
         """
         ps = self.page_size
         plen = len(prompt)
         if not self.enable_prefix_cache:
             return [], None, 0, (0, ps), 0
-        memo = self._plan_memo
-        if memo is not None and memo[0] == self._index_version \
-                and memo[1] == tuple(prompt):
-            return memo[2]
+        key = tuple(prompt)
+        memo = self._plan_cache.get(key)
+        if memo is not None:
+            if memo[0] == self._index_version:
+                self._plan_cache.move_to_end(key)
+                return memo[1]
+            del self._plan_cache[key]           # stale: index moved on
         with self.tracer.span("plan", tokens=plen):
             pids: List[Optional[int]] = []
             hashes: List[int] = []
@@ -541,7 +572,9 @@ class PagedKVCachePool:
             else:
                 out = pids[start_blk:m], None, m * ps, (m, hashes[m - 1]), \
                     start_blk
-            self._plan_memo = (self._index_version, tuple(prompt), out)
+            self._plan_cache[key] = (self._index_version, out)
+            if len(self._plan_cache) > self._plan_cache_cap:
+                self._plan_cache.popitem(last=False)
         return out
 
     # -- engine API --------------------------------------------------------
@@ -561,6 +594,17 @@ class PagedKVCachePool:
         """
         plen = len(prompt)
         shared, cow_src, cached, seed, start_blk = self._plan(prompt)
+        if cow_src is not None and cached == plen - 1 and \
+                self.cached_next_token(prompt) is not None:
+            # full hit with a remembered next token: the last block joins
+            # the read-only mapping like every other — nothing re-runs, so
+            # nothing writes into a shared page and the COW the last-token
+            # replay would have forced disappears (see cache_next_token).
+            # cached == len(prompt) tells the engine to skip prefill
+            # entirely and seed decode from the memoized token.
+            shared = shared + [cow_src]
+            cow_src = None
+            cached = plen
         total = -(-plen // self.page_size)
         upfront_end = min(total, start_blk + self.table_width)
         need = (upfront_end - start_blk) - len(shared)
@@ -575,13 +619,7 @@ class PagedKVCachePool:
         elif self.enable_prefix_cache:
             self.tracer.instant("pool.prefix_miss", rid=rid,
                                 prompt_tokens=plen)
-        slot = self._free_slots.pop(0)
-        assert slot not in self.owner, f"slot {slot} double-assigned"
-        self.owner[slot] = rid
-        self.held[slot] = []
-        self._blocks[slot] = []
-        self._cells[slot] = {}
-        self.tables[slot] = 0
+        slot = self._take_slot(rid)
         # the commit cursor resumes after the matched prefix — blocks the
         # plan walked are never re-hashed by commit_prefix
         self._commit_cursor[slot] = seed
@@ -645,14 +683,15 @@ class PagedKVCachePool:
             cursor = (i + 1, h)
         self._commit_cursor[slot] = cursor
 
-    def insert(self, rid: int, one_state, n_tokens: int) -> Optional[int]:
-        """Place a prefilled cache (cache_len == padded_len) into a free
-        slot, allocating ceil(n_tokens / page_size) pages.  None when slots
-        or pages are exhausted (caller re-queues the request).  This is the
-        non-sharing path: the scatter writes every table entry, so it must
-        never be handed pages another slot can read.  Contiguous layouts
-        only — a ring cache has no padded contiguous image (the prefix
-        path, ``alloc_prefix`` + paged prefill, serves ring layouts)."""
+    def alloc_for_insert(self, rid: int, n_tokens: int) -> Optional[int]:
+        """Host half of the non-sharing admission: take a slot and allocate
+        ceil(n_tokens / page_size) private pages for it, before any prefill
+        has run.  None when slots or pages are exhausted (caller re-queues
+        the request).  Splitting allocation from the device scatter lets a
+        pipelined engine make the placement decision in its plan phase and
+        dispatch ``insert_state`` at submit.  Contiguous layouts only — a
+        ring cache has no padded contiguous image (the prefix path,
+        ``alloc_prefix`` + paged prefill, serves ring layouts)."""
         if self.layout.ring:
             raise ValueError(
                 "ring (windowed) layouts prefill straight into pages via "
@@ -660,20 +699,27 @@ class PagedKVCachePool:
                 "insert path cannot represent a ring cache")
         if not self.can_admit(n_tokens):
             return None
-        slot = self._free_slots.pop(0)
-        assert slot not in self.owner, f"slot {slot} double-assigned"
-        self.owner[slot] = rid
-        self.held[slot] = []
-        self._blocks[slot] = []
-        self._cells[slot] = {}
-        self.tables[slot] = 0
+        slot = self._take_slot(rid)
         for b in range(-(-n_tokens // self.page_size)):
             self._alloc_page(slot, b)
         self.pos[slot] = n_tokens
+        self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
+        return slot
+
+    def insert_state(self, slot: int, one_state) -> None:
+        """Device half: scatter a prefilled cache (cache_len == padded_len)
+        into the pages ``alloc_for_insert`` bound to ``slot``.  The scatter
+        writes every table entry, so the slot must hold only private pages
+        (which ``alloc_for_insert`` guarantees)."""
         one_kv = {n: one_state[n] for n in self.layout.leaves}
         self.pages = self._insert(self.pages, one_kv,
                                   jnp.asarray(self.tables[slot]))
-        self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
+
+    def insert(self, rid: int, one_state, n_tokens: int) -> Optional[int]:
+        """One-shot admission: ``alloc_for_insert`` + ``insert_state``."""
+        slot = self.alloc_for_insert(rid, n_tokens)
+        if slot is not None:
+            self.insert_state(slot, one_state)
         return slot
 
     def evict(self, slot: int) -> int:
@@ -708,44 +754,114 @@ class PagedKVCachePool:
         self._cached_lru.clear()
         self._index.clear()
         self._block_of_page.clear()
+        # the version bump alone invalidates memoized plans lazily; drop
+        # them eagerly too so a cleared cache frees the host memory as well
         self._index_version += 1
+        self._plan_cache.clear()
+        self._next_tok.clear()
 
-    def ensure_decode_capacity(self, skip=()) -> List[int]:
-        """Make every active slot able to write position ``pos`` (the next
-        decode token): lazily allocate the page a contiguous slot's next
-        block needs; rotate / COW the ring cell a windowed slot is wrapping
-        into.  Returns the slots that could not be extended — the engine
-        preempts to relieve the pressure.  Slots in ``skip`` (still
-        prefilling: pages prepared per chunk, no decode write coming) are
-        left alone."""
+    def cache_next_token(self, prompt: Sequence[int], tok) -> None:
+        """Remember the greedy token that follows ``prompt`` — the device
+        scalar its prefill argmaxed, stored WITHOUT syncing.  Greedy
+        decoding is deterministic, so (prompt -> next token) is
+        content-addressed truth: a later admission whose prompt is fully
+        covered by cached blocks skips its last-token replay — and the COW
+        of the shared page that replay would have written into — and seeds
+        decode straight from the memo (``alloc_prefix`` reports
+        ``cached == len(prompt)``).  That turns a steady-state repeat
+        admission from two device dispatches (copy + bucketed 1-token
+        prefill) into zero."""
+        if not self.enable_prefix_cache:
+            return
+        key = tuple(int(t) for t in prompt)
+        self._next_tok[key] = tok
+        self._next_tok.move_to_end(key)
+        if len(self._next_tok) > self._plan_cache_cap:
+            self._next_tok.popitem(last=False)
+
+    def cached_next_token(self, prompt: Sequence[int]):
+        """The memoized greedy next token for ``prompt`` (device scalar),
+        or None."""
+        return self._next_tok.get(tuple(int(t) for t in prompt))
+
+    def ensure_decode_capacity(self, skip=(), steps=None) -> List[int]:
+        """Make every active slot able to write its next decode span:
+        positions ``pos .. pos + steps[slot] - 1`` (``steps`` maps slot ->
+        span length; absent or None means 1 — the single-step legacy
+        shape).  Lazily allocates the pages a contiguous slot's next blocks
+        need; rotates / COWs the ring cells a windowed slot wraps into —
+        the multi-block sweep is the same ``_ensure_writable`` walk chunked
+        prefill uses, so a ``decode_steps``-long on-device scan can write
+        its whole span into prepared private pages.  Returns the slots
+        that could not be extended — the engine preempts to relieve the
+        pressure.  Slots in ``skip`` (still prefilling, or masked out of
+        this cycle's scan) are left alone."""
         starved = []
         for slot in self.active_slots:
             if slot in skip:
                 continue
+            n = 1 if steps is None else int(steps.get(slot, 1))
+            if n <= 0:
+                continue
             pos = int(self.pos[slot])
-            if not self._ensure_writable(slot, pos, pos):
+            if not self._ensure_writable(slot, pos, pos + n - 1):
                 starved.append(slot)
         self.peak_pages_held = max(self.peak_pages_held, self.pages_held)
         return starved
 
-    def decode_view(self, mask_slots=()) -> Tuple[jax.Array, jax.Array]:
-        """(page_table, pos) device operands for one decode step.  Slots in
-        ``mask_slots`` (mid-prefill) present an all-trash table and pos 0,
-        so the fixed-shape decode can run while they fill."""
-        if mask_slots:
-            tables = self.tables.copy()
-            pos = self.pos.copy()
-            for s in mask_slots:
-                tables[s] = 0
-                pos[s] = 0
-            return jnp.asarray(tables), jnp.asarray(pos)
-        return jnp.asarray(self.tables), jnp.asarray(self.pos)
+    def safe_decode_span(self, slot: int, n: int) -> int:
+        """Longest prefix of the decode span ``pos..pos+n-1`` whose writes
+        need no ring rotation: every block is already bound to the slot or
+        lands in a free cell.  The pipelined engine caps a chunk-completing
+        slot's *same-cycle* decode span with this — its chunk's blocks are
+        only committed to the prefix index at submit, so a rotation planned
+        *before* that would see an unindexed incumbent and rename its page
+        in place, stranding the just-prefilled block outside the index
+        (content stays correct; the cached prefix would be silently lost).
+        One cycle later the blocks are indexed and rotation parks them in
+        the LRU as usual.  Contiguous layouts never rotate: ``n``."""
+        if not self.layout.ring:
+            return n
+        ps = self.page_size
+        pos = int(self.pos[slot])
+        for k in range(n):
+            b = (pos + k) // ps
+            cur = self._cells[slot].get(self.layout.cell(b, self.table_width))
+            if cur is not None and cur != b:
+                return k
+        return n
 
-    def advance(self, skip=()) -> None:
-        """One decode step happened: every decoding slot cached one token."""
+    def decode_operands(self, limits: Dict[int, int],
+                        mask_slots=()) -> jax.Array:
+        """One packed ``[slots, table_width + 2]`` int32 device operand for
+        a decode dispatch: the page table, per-slot position and per-slot
+        step budget travel as a single upload and are sliced apart inside
+        the jitted scan (free — XLA fuses the slices).  Packing matters
+        because at serving batch sizes the per-cycle cost is *dispatch
+        count*, not bytes: one ``device_put`` here replaces the three
+        (table, pos, limits) the unpacked path paid every cycle.  Slots in
+        ``mask_slots`` (mid-prefill or not scheduled this cycle) present an
+        all-trash table, pos 0 and budget 0, so the fixed-shape decode can
+        run while they fill."""
+        packed = np.empty((self.num_slots, self.table_width + 2), np.int32)
+        packed[:, :-2] = self.tables
+        packed[:, -2] = self.pos
+        packed[:, -1] = [limits.get(s, 0) for s in range(self.num_slots)]
+        if mask_slots:
+            packed[list(mask_slots)] = 0
+        return jnp.asarray(packed)
+
+    def advance(self, skip=(), steps=None) -> None:
+        """A decode dispatch happened: every decoding slot cached
+        ``steps[slot]`` tokens (1 when ``steps`` is None — the legacy
+        single-step shape).  The pipelined engine calls this at submit
+        time: the host position is deterministic once the span is planned,
+        so the next cycle's plan can run against it while the device step
+        is still in flight."""
         for slot in self.owner:
             if slot not in skip:
-                self.pos[slot] += 1
+                self.pos[slot] += (1 if steps is None
+                                   else int(steps.get(slot, 0)))
 
     # -- telemetry ---------------------------------------------------------
 

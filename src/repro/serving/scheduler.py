@@ -112,13 +112,27 @@ class Scheduler:
 
     # -- batching ----------------------------------------------------------
 
-    def next_prefills(self, free_slots: int) -> List[Request]:
+    def next_prefills(self, free_slots: int,
+                      skip_rids=frozenset()) -> List[Request]:
         """Pop up to min(free_slots, max_prefills_per_step) requests to
-        start prefilling now."""
+        start prefilling now.
+
+        ``skip_rids`` holds requests that must not be admitted this cycle —
+        the pipelined engine passes the rids with device results still in
+        flight (a preempted victim's un-retired tokens would be missing
+        from its resume prompt).  The guard keeps head-of-line order: a
+        skipped head *blocks* admission rather than letting later arrivals
+        jump it, matching the synchronous engine's strict ordering; the
+        skip clears at the next retire, one cycle later.
+        """
         n = min(free_slots, self.cfg.max_prefills_per_step, len(self.waiting))
         if n <= 0:
             return []
-        picked = self._sorted_waiting()[:n]
+        picked = []
+        for r in self._sorted_waiting()[:n]:
+            if r.rid in skip_rids:
+                break
+            picked.append(r)
         for r in picked:
             self.waiting.remove(r)
         return picked
@@ -166,6 +180,17 @@ class Scheduler:
         """
         req.preempted += 1
         self.push_front(req)
+
+    def drop(self, req: Request) -> bool:
+        """Remove a waiting request outright (no requeue).  The pipelined
+        engine needs this when a preempted-and-requeued request's in-flight
+        tokens turn out to *complete* it at retire time — the finished
+        request must not be re-admitted and re-served."""
+        try:
+            self.waiting.remove(req)
+            return True
+        except ValueError:
+            return False
 
     def push_front(self, req: Request) -> None:
         """Put a popped-but-not-admitted request back at the queue head

@@ -155,24 +155,49 @@ def test_paged_preemption_identity(kind):
 
 
 def test_mla_cow_isolation_on_fully_cached_prompt():
-    """A fully page-aligned cached MLA prompt re-admits via copy-on-write:
-    the shared latent pages stay bit-identical while the copy is written."""
+    """A fully page-aligned cached MLA prompt re-admits without touching
+    the shared latent pages, through either full-hit regime:
+
+      * last-token replay + copy-on-write — when the blocks are indexed
+        but the exact prompt's next token is unknown (here: committed by
+        a longer prompt that extends it);
+      * the zero-dispatch fast path — once the exact prompt has run, its
+        greedy next token is memoized (``cache_next_token``) and the
+        re-admission skips the replay AND the COW entirely.
+
+    In both, the shared pages stay bit-identical while decode writes."""
     cfg = _cfg("mla")
     rng = np.random.default_rng(9)
     prompt = list(rng.integers(0, cfg.vocab_size, (16,)))   # 2 full pages
     ep = _engine(cfg, "paged", decode_steps=1, max_new_tokens=8)
-    ra = ep.submit(prompt, max_new_tokens=8)
-    ep.step()                              # A admitted + committed
+    # A extends the prompt: its commit indexes the two full blocks, but the
+    # next-token memo is keyed by A's *full* prompt — B must COW-replay
+    ra = ep.submit(prompt + list(rng.integers(0, cfg.vocab_size, (3,))),
+                   max_new_tokens=8)
+    ep.run()
     from repro.serving.paged import block_hashes
     shared = [ep.pool._index[h][0] for h in block_hashes(prompt, 8)]
     assert shared and all(p is not None for p in shared)
     snap = {pid: (np.asarray(ep.pool.pages["ckv"][:, pid]),
                   np.asarray(ep.pool.pages["krope"][:, pid]))
             for pid in shared}
+    assert ep.pool.cached_next_token(prompt) is None
     rb = ep.submit(prompt, max_new_tokens=8)
     out = ep.run()
-    assert ep.pool.cow_copies >= 1
-    assert out[ra] == out[rb]
+    assert ep.pool.cow_copies >= 1         # replay regime: COW taken
+    for pid, (c0, k0) in snap.items():
+        np.testing.assert_array_equal(
+            np.asarray(ep.pool.pages["ckv"][:, pid]), c0)
+        np.testing.assert_array_equal(
+            np.asarray(ep.pool.pages["krope"][:, pid]), k0)
+    # B's completion memoized its next token: an exact repeat now takes
+    # the fast path — no new COW, same tokens, shared pages still intact
+    cows = ep.pool.cow_copies
+    assert ep.pool.cached_next_token(prompt) is not None
+    rc = ep.submit(prompt, max_new_tokens=8)
+    out2 = ep.run()
+    assert ep.pool.cow_copies == cows
+    assert out2[rc] == out[rb]
     for pid, (c0, k0) in snap.items():
         np.testing.assert_array_equal(
             np.asarray(ep.pool.pages["ckv"][:, pid]), c0)

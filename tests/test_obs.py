@@ -181,20 +181,24 @@ def test_write_chrome_trace_roundtrip(tmp_path):
 def test_phase_snapshot_and_coverage_math():
     clk = FakeClock()
     tr = Tracer(clock=clk)
-    with tr.span("step"):                        # 7 ticks total
-        with tr.span("admit"):                   # section: 3 ticks
+    with tr.span("step"):                        # 11 ticks total
+        with tr.span("step.plan"):               # pipeline section: 3 ticks
             with tr.span("plan"):                # leaf inside a section
                 pass
-        with tr.span("decode.device"):           # section AND leaf
+        with tr.span("step.submit"):             # section: 3 ticks
+            with tr.span("decode.device"):       # leaf: 1 tick
+                pass
+        with tr.span("step.retire"):             # section: 1 tick
             pass
     snap = phase_snapshot(tr)
-    assert snap["step_time_s"] == 7.0
+    assert snap["step_time_s"] == 11.0
     assert snap["plan_time_s"] == 1.0
     assert snap["decode_time_s"] == 1.0
     assert snap["prefill_time_s"] == 0.0
-    assert snap["other_time_s"] == 5.0           # step - leaves
-    # coverage counts sections (admit + decode.device = 4) over step
-    assert phase_coverage(tr) == pytest.approx(4.0 / 7.0)
+    assert snap["other_time_s"] == 9.0           # step - leaves
+    assert snap["host_overhead_frac"] == pytest.approx(9.0 / 11.0)
+    # coverage counts the pipeline sections (3 + 3 + 1 = 7) over step
+    assert phase_coverage(tr) == pytest.approx(7.0 / 11.0)
     assert phase_coverage(Tracer(clock=FakeClock())) == 1.0   # nothing traced
 
 
@@ -227,7 +231,8 @@ def test_null_tracer_is_strict_noop():
     # exporters accept it without branches
     assert phase_snapshot(n) == {"step_time_s": 0.0, "plan_time_s": 0.0,
                                  "prefill_time_s": 0.0, "decode_time_s": 0.0,
-                                 "other_time_s": 0.0}
+                                 "other_time_s": 0.0,
+                                 "host_overhead_frac": 0.0}
     assert phase_coverage(n) == 1.0
 
 
@@ -316,10 +321,10 @@ def test_engine_traced_spans_balance_and_cover(dense_setup, tmp_path):
     assert s["decode_tokens"] == s["tokens_out"] - s["completed"]
     assert s["decode_tokens_per_sec"] > 0 and s["prefill_tokens_per_sec"] > 0
     names = {e[1] for e in tr.events}
-    assert {"step", "admit", "prefill", "decode.device", "complete",
-            "plan", "prefill.device", "prefill.chunk", "queued", "decode",
-            "request.complete", "pool.page_alloc",
-            "pool.prefix_hit"} <= names
+    assert {"step", "step.plan", "step.submit", "step.retire", "admit",
+            "prefill", "decode.device", "plan", "prefill.device",
+            "prefill.chunk", "queued", "decode", "request.complete",
+            "pool.page_alloc", "pool.prefix_hit"} <= names
     # one lifecycle track per request, all schema-valid
     doc = json.loads(write_chrome_trace(tr, str(tmp_path / "e.json"))
                      and (tmp_path / "e.json").read_text())
