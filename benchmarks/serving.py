@@ -43,6 +43,15 @@ never enter the throughput trajectory (fencing costs tokens/sec); they
 exist to explain it — e.g. whether the paged-vs-slotted gap on ROADMAP
 open item 1 is host bookkeeping or kernel time.
 
+Since the sampling/spec PR the record carries a ``spec`` section:
+repetitive decode-dominated traffic (constant-token prompts drive the tiny
+random models into argmax cycles the bigram drafter replays) served twice
+— speculative decoding on and off, both at ``pipeline_depth=1`` — with
+``accept_rate``, the spec-on/spec-off throughput ratio (``speedup``), and
+output identity (spec only ever changes speed, never tokens).  ``--smoke``
+gates on identity plus spec engagement, and on ``accept_rate > 0`` for the
+headline arch.
+
 Untraced passes *omit* the phase-derived keys entirely
 (``repro.obs.TRACED_ONLY_KEYS``): with tracing off those fields were
 emitted as literal ``0.0`` — reading as "zero host overhead" — so the
@@ -76,15 +85,19 @@ BENCH_ARCHS = ("deepseek-v2-lite-16b", "mixtral-8x22b")
 SMOKE_ARCHS = ("qwen2.5-14b",) + BENCH_ARCHS
 
 #: schema gate: every emitted record must carry these (CI --smoke asserts);
-#: 'paged'/'prefix' are required only for archs with a paged decode path
+#: 'paged'/'prefix'/'spec' are required only for archs with a paged decode
+#: path ('spec' additionally needs the spec_serve capability)
 REQUIRED_KEYS = ("arch", "requests", "slotted", "kv_bytes_saved_ratio",
-                 "prefix", "phases")
+                 "prefix", "spec", "phases")
 REQUIRED_SUMMARY_KEYS = ("tokens_per_sec", "ttft_p50_s", "itl_p50_s",
                          "kv_bytes_peak", "kv_bytes_slotted",
                          "prefill_tokens", "prefix_hit_rate",
                          "prefill_tokens_saved", "compile_count")
 REQUIRED_PREFIX_KEYS = ("hit", "cold", "slotted_tokens_per_sec",
                         "prefill_tokens_saved_ratio", "token_identical")
+#: speculative-decoding workload section (repetitive traffic, spec on/off)
+REQUIRED_SPEC_KEYS = ("on", "off", "accept_rate", "speedup",
+                      "token_identical")
 #: per-arch traced-attribution section (repro.obs): where the cycle goes
 REQUIRED_PHASE_KEYS = ("step_time_s", "plan_frac", "prefill_device_frac",
                        "decode_device_frac", "other_frac",
@@ -137,7 +150,8 @@ def _make_engine(arch, batch, max_seq, max_new, kv_layout, page_size,
     cfg = get_config(arch, smoke=True)
     scfg = ServeConfig(max_batch=batch, max_queue=64, max_seq_len=max_seq,
                        max_new_tokens=max_new, max_prefills_per_step=2,
-                       decode_steps=4, kv_layout=kv_layout,
+                       decode_steps=serve_kw.pop("decode_steps", 4),
+                       kv_layout=kv_layout,
                        page_size=page_size, **serve_kw)
     return cfg, ServingEngine(cfg, scfg, seed=0)
 
@@ -186,9 +200,13 @@ def _traced_attribution(arch, requests, batch, prompt_len, max_new,
 
     Deliberately separate from the measured passes: fencing serializes
     dispatch and costs throughput, so traced numbers feed the attribution
-    fractions only, never the tokens_per_sec trajectory.  When
-    ``trace_path`` is set the Chrome trace JSON (Perfetto-loadable) is
-    written there too."""
+    fractions only, never the tokens_per_sec trajectory.  Best-of-3
+    windows, same policy (and same reason) as the measured passes'
+    best-of-5: the box is shared, and a scheduler interruption between
+    fenced dispatches lands entirely in host-attributed time, so the
+    lowest-glue window is the closest to the engine's true overhead.
+    When ``trace_path`` is set the Chrome trace JSON (Perfetto-loadable)
+    of the last window is written there too."""
     import numpy as np
     from repro.obs import HOST_OVERHEAD_FRAC, phase_coverage
 
@@ -201,26 +219,30 @@ def _traced_attribution(arch, requests, batch, prompt_len, max_new,
                            size=requests)
     prompts = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lengths]
     engine.generate(prompts, max_new)     # compile warm-up
-    engine.tracer.reset()                 # measured traced window only
-    engine.metrics.reset()
-    engine.results.clear()
-    engine.generate(prompts, max_new)
-    s = engine.metrics.summary()
-    st = s["step_time_s"] or 1.0
-    out = {
-        "step_time_s": s["step_time_s"],
-        "plan_frac": s["plan_time_s"] / st,
-        "prefill_device_frac": s["prefill_time_s"] / st,
-        "decode_device_frac": s["decode_time_s"] / st,
-        "other_frac": s["other_time_s"] / st,
-        HOST_OVERHEAD_FRAC: s[HOST_OVERHEAD_FRAC],
-        "coverage": phase_coverage(engine.tracer),
-        "decode_tokens_per_sec": s["decode_tokens_per_sec"],
-        "prefill_tokens_per_sec": s["prefill_tokens_per_sec"],
-    }
+    best = None
+    for _ in range(3):
+        engine.tracer.reset()             # measured traced window only
+        engine.metrics.reset()
+        engine.results.clear()
+        engine.generate(prompts, max_new)
+        s = engine.metrics.summary()
+        st = s["step_time_s"] or 1.0
+        out = {
+            "step_time_s": s["step_time_s"],
+            "plan_frac": s["plan_time_s"] / st,
+            "prefill_device_frac": s["prefill_time_s"] / st,
+            "decode_device_frac": s["decode_time_s"] / st,
+            "other_frac": s["other_time_s"] / st,
+            HOST_OVERHEAD_FRAC: s[HOST_OVERHEAD_FRAC],
+            "coverage": phase_coverage(engine.tracer),
+            "decode_tokens_per_sec": s["decode_tokens_per_sec"],
+            "prefill_tokens_per_sec": s["prefill_tokens_per_sec"],
+        }
+        if best is None or out[HOST_OVERHEAD_FRAC] < best[HOST_OVERHEAD_FRAC]:
+            best = out
     if trace_path:
         engine.save_trace(trace_path)
-    return out
+    return best
 
 
 def _prefix_workload(arch, requests, batch, prefix_len, max_new, page_size):
@@ -286,19 +308,81 @@ def _prefix_workload(arch, requests, batch, prefix_len, max_new, page_size):
     }
 
 
+def _spec_workload(arch, batch, page_size, spec_tokens=8, max_new=32,
+                   passes=5):
+    """Speculative decoding on repetitive decode-dominated traffic: the
+    regime n-gram drafting targets (templated output, code, retrieval
+    echoes — continuations the history already contains).
+
+    Constant-token prompts push the tiny random models into short argmax
+    cycles the bigram drafter replays, so acceptance is non-trivial and
+    the recorded ``speedup`` (spec-on vs spec-off tokens/sec) reflects
+    verify-one-forward replacing several decode dispatches.  Both arms run
+    ``pipeline_depth=1``: at depth 2 a speculating slot alternates
+    verify/idle cycles (the host needs the retired history to draft), so
+    depth-1 isolates the drafting win from pipelining effects.  Both arms
+    also run ``decode_steps=1`` and ``batch <= 2`` — the interactive
+    low-ITL regime that speculation targets, where the baseline pays one
+    dispatch per token.  At ``decode_steps=4`` the engine already
+    amortises dispatches 4x inside the fused multi-step scan, and at
+    high batch it amortises one decode dispatch across every slot while
+    verify forwards run one per speculating slot (the classic
+    spec-decode crossover: a win for interactive traffic, a wash or
+    loss for saturated batch throughput) — in either regime the
+    recorded ratio would measure dispatch amortisation, not drafting.
+    Output identity between the arms is part of the record — spec only
+    ever changes speed."""
+    import numpy as np
+    from repro.configs import get_config
+
+    vocab = get_config(arch, smoke=True).vocab_size
+    batch = min(batch, 2)
+    requests = 2 * batch
+    prompt_len = 16
+    prompts = [[(1 + i) % vocab] * prompt_len for i in range(requests)]
+    max_seq = prompt_len + max_new + page_size
+    pages = 3 * batch * (-(-max_seq // page_size)) + 1
+
+    def serve(enable):
+        _, eng = _make_engine(arch, batch, max_seq, max_new, "paged",
+                              page_size, num_pages=pages, pipeline_depth=1,
+                              decode_steps=1, enable_spec=enable,
+                              spec_tokens=spec_tokens)
+        eng.generate(prompts, max_new)        # compile + cache warm-up
+        best = None
+        for _ in range(passes):
+            eng.metrics.reset()
+            eng.results.clear()
+            outs = eng.generate(prompts, max_new)
+            s = _untraced(eng.metrics.summary())
+            if best is None or s["tokens_per_sec"] > best[1]["tokens_per_sec"]:
+                best = (outs, s)
+        return best
+
+    out_on, on = serve(True)
+    out_off, off = serve(False)
+    return {
+        "requests": requests, "prompt_len": prompt_len, "max_new": max_new,
+        "spec_tokens": spec_tokens, "on": on, "off": off,
+        "accept_rate": on["accept_rate"],
+        "speedup": on["tokens_per_sec"] / max(off["tokens_per_sec"], 1e-9),
+        "token_identical": out_on == out_off,
+    }
+
+
 def _bench(trace_path=None, **kw):
     """{'paged': summary, 'slotted': summary, 'kv_bytes_saved_ratio': x,
-    'prefix': {...}, 'phases': {...}}.
+    'prefix': {...}, 'spec': {...}, 'phases': {...}}.
 
     Archs without a paged decode path (recurrent families — no KVLayout)
-    bench the slotted layout only: no 'paged'/'prefix' section, ratio 0.
-    'phases' always runs (a separate traced pass — see
+    bench the slotted layout only: no 'paged'/'prefix'/'spec' section,
+    ratio 0.  'phases' always runs (a separate traced pass — see
     ``_traced_attribution``)."""
     from repro.configs import get_config
     from repro.models import registry
 
-    paged_ok = "paged_serve" in registry.build(
-        get_config(kw["arch"], smoke=True)).capabilities()
+    caps = registry.build(get_config(kw["arch"], smoke=True)).capabilities()
+    paged_ok = "paged_serve" in caps
     record = {}
     for layout in (("paged", "slotted") if paged_ok else ("slotted",)):
         is_paged, s = _serve_once(kw["arch"], kw["requests"], kw["batch"],
@@ -320,6 +404,10 @@ def _bench(trace_path=None, **kw):
         record["prefix"] = _prefix_workload(
             kw["arch"], kw["requests"], kw["batch"], kw["prefix_len"],
             kw["max_new"], kw["page_size"])
+    record["spec"] = {}
+    if paged_ok and "spec_serve" in caps:
+        record["spec"] = _spec_workload(kw["arch"], kw["batch"],
+                                        kw["page_size"])
     record["phases"] = _traced_attribution(
         kw["arch"], kw["requests"], kw["batch"], kw["prompt_len"],
         kw["max_new"], kw["page_size"], trace_path=trace_path)
@@ -349,6 +437,11 @@ def check_schema(record):
     if record.get("prefix"):
         for k in REQUIRED_PREFIX_KEYS:
             assert k in record["prefix"], f"schema drift: missing prefix.{k}"
+    if record.get("spec"):
+        for k in REQUIRED_SPEC_KEYS:
+            assert k in record["spec"], f"schema drift: missing spec.{k}"
+        assert "drafted_tokens" in record["spec"]["on"], \
+            "schema drift: spec.on summary lost the drafted_tokens counter"
     for k in REQUIRED_PHASE_KEYS:
         assert k in record["phases"], f"schema drift: missing phases.{k}"
     for arch, sub in record.get("archs", {}).items():
@@ -376,6 +469,10 @@ def run(**overrides):
          px.get("hit", {}).get("prefix_hit_rate", 0.0)),
         ("serving_prefill_tokens_saved_ratio", 0.0,
          px.get("prefill_tokens_saved_ratio", 0.0)),
+        ("serving_spec_accept_rate", 0.0,
+         (r.get("spec") or {}).get("accept_rate", 0.0)),
+        ("serving_spec_speedup", 0.0,
+         (r.get("spec") or {}).get("speedup", 0.0)),
         ("serving_prefill_compile_count", 0.0, p["compile_count"]),
         ("serving_plan_time_frac", 0.0, r["phases"]["plan_frac"]),
         ("serving_decode_device_frac", 0.0,
@@ -442,6 +539,25 @@ def main():
                 f"host_overhead_frac={ph['host_overhead_frac']:.2f} > " \
                 f"{HOST_OVERHEAD_GATE} [{arch}]: host glue between device " \
                 "calls regressed past the pipelined-engine bar"
+            sp = record["spec"]
+            if sp:
+                assert sp["token_identical"], \
+                    f"spec changed tokens [{arch}] — verification must " \
+                    "replay the engine's own sampler exactly"
+                assert sp["on"]["drafted_tokens"] > 0, \
+                    f"spec never engaged on the repetitive workload [{arch}]"
+                if arch == SMOKE_ARCHS[0]:
+                    assert sp["accept_rate"] > 0, \
+                        "spec accepted nothing on the repetitive workload " \
+                        f"[{arch}] — verify/accept plumbing is broken"
+                    # headline arch must actually profit: one batched
+                    # verify emitting ~accept_rate * spec_tokens tokens
+                    # has to beat per-token decode dispatches.  Ring
+                    # archs clamp drafts to 1 (cell aliasing) and are
+                    # recorded but not gated.
+                    assert sp["speedup"] >= 1.0, \
+                        f"spec-on slower than spec-off [{arch}]: " \
+                        f"{sp['speedup']:.2f}x on the repetitive workload"
             hit = (record["prefix"] or {}).get("hit", {})
             print(f"smoke OK [{arch}]: schema intact; "
                   f"prefix_hit_rate={hit.get('prefix_hit_rate', 0.0):.2f} "
@@ -449,6 +565,8 @@ def main():
                   f"phase_coverage={ph['coverage']:.2f} "
                   f"decode_frac={ph['decode_device_frac']:.2f} "
                   f"host_overhead={ph['host_overhead_frac']:.2f} "
+                  f"accept_rate={(sp or {}).get('accept_rate', 0.0):.2f} "
+                  f"spec_speedup={(sp or {}).get('speedup', 0.0):.2f} "
                   f"(trace: {tp})")
         return
     record = {

@@ -391,7 +391,7 @@ class Session:
     def serve(self, requests: Sequence[Sequence[int]], *,
               max_new: Optional[int] = None, stream=None,
               serve_cfg: Optional[ServeConfig] = None,
-              **serve_overrides) -> List[List[int]]:
+              sampling=None, **serve_overrides) -> List[List[int]]:
         """Continuous-batching generation for a closed batch of prompts
         (lists of token ids); returns one token list per prompt, in order.
 
@@ -399,8 +399,11 @@ class Session:
         ``ServeConfig`` field overrides as keyword arguments
         (``policy="priority"``, ``kv_layout="paged"``,
         ``enable_prefix_cache=False``, ``prefill_chunk_tokens=256``, ...).
-        Greedy decode is token-identical to serving each prompt alone —
-        including when a prompt's prefix is served from cached pages.
+        ``sampling`` is one ``repro.serving.SamplingParams`` for every
+        prompt or a per-prompt list (None = greedy).  Decode — greedy or
+        sampled — is token-identical to serving each prompt alone:
+        sampling keys its PRNG per request by (seed, token index), never
+        by batch state.
         """
         self._require("serve")
         prompts = [list(map(int, p)) for p in requests]
@@ -410,10 +413,11 @@ class Session:
         else:
             cfg = self._serve_cfg(prompts, max_new, serve_overrides)
         eng = self._engine_for(cfg)
-        return eng.generate(prompts, max_new, stream=stream)
+        return eng.generate(prompts, max_new, stream=stream,
+                            sampling=sampling)
 
     def generate(self, prompts, max_new: int = 16, *, stream=None,
-                 **serve_overrides):
+                 sampling=None, **serve_overrides):
         """One-shot convenience over :meth:`serve`: accepts one prompt (flat
         token sequence -> returns one token list) or a batch of prompts."""
         self._require("serve")
@@ -422,7 +426,7 @@ class Session:
                                    for t in seq)
         batch = [seq] if single else seq
         outs = self.serve(batch, max_new=max_new, stream=stream,
-                          **serve_overrides)
+                          sampling=sampling, **serve_overrides)
         return outs[0] if single else outs
 
     def __repr__(self):

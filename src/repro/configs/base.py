@@ -275,6 +275,18 @@ class ServeConfig:
     * ``max_prefills_per_step`` — admission bound: how many *requests* may
       start prefilling per engine cycle (formerly ``prefill_chunk``, which
       remains as a deprecated constructor alias).
+    Speculative decoding (``serving/spec.py``; paged layout only):
+
+    * ``enable_spec`` — let the engine draft continuation tokens from each
+      request's own history (n-gram prompt lookup) and verify them in one
+      paged forward per slot.  Verification replays the engine's own
+      sampler at every drafted position, so output is token-identical to
+      ``enable_spec=False`` for greedy and sampled requests alike — the
+      knob only trades host drafting + one verify forward against the
+      decode steps the accepted tokens would have cost.
+    * ``spec_tokens`` — maximum draft tokens proposed (and verified) per
+      slot per cycle.
+
     * ``pipeline_depth`` — engine submit/retire pipelining: 2 (default)
       overlaps the next cycle's host planning against the in-flight device
       step (plan N+1 and submit it while N's results are still
@@ -308,6 +320,8 @@ class ServeConfig:
     kv_layout: str = "auto"       # "auto" | "paged" | "slotted"
     page_size: int = 16           # tokens per KV page (paged layout)
     num_pages: int = 0            # shared page pool size (0 = worst case)
+    spec_tokens: int = 4          # max draft tokens per slot per cycle
+    enable_spec: bool = True      # n-gram speculative decoding (paged)
     enable_prefix_cache: bool = True   # share prompt-prefix pages (paged)
     prefill_bucket: bool = True        # power-of-two prefill length buckets
     prefill_chunk_tokens: int = 0      # chunked prefill size (0 = whole)
@@ -319,7 +333,7 @@ class ServeConfig:
     _INT_KNOBS = ("max_batch", "max_queue", "max_seq_len", "max_new_tokens",
                   "max_prefills_per_step", "decode_steps", "pipeline_depth",
                   "num_pages", "page_size", "prefill_chunk_tokens",
-                  "trace_capacity")
+                  "spec_tokens", "trace_capacity")
 
     def __post_init__(self):
         # normalize numpy integer knobs (e.g. max_batch=arr.shape[0]) so
@@ -367,7 +381,7 @@ class ServeConfig:
                             ("max_seq_len", 2), ("max_new_tokens", 1),
                             ("max_prefills_per_step", 1), ("decode_steps", 1),
                             ("page_size", 1), ("num_pages", 0),
-                            ("prefill_chunk_tokens", 0),
+                            ("prefill_chunk_tokens", 0), ("spec_tokens", 1),
                             ("trace_capacity", 1)):
             v = getattr(self, knob)
             if not isinstance(v, int) or isinstance(v, bool) or v < least:
@@ -379,7 +393,8 @@ class ServeConfig:
                 f"pipeline_depth={self.pipeline_depth!r} must be 1 "
                 "(synchronous submit/retire) or 2 (plan the next cycle "
                 "while one device step is in flight)")
-        for knob in ("enable_prefix_cache", "prefill_bucket", "trace"):
+        for knob in ("enable_prefix_cache", "enable_spec", "prefill_bucket",
+                     "trace"):
             if not isinstance(getattr(self, knob), bool):
                 raise ValueError(f"{knob}={getattr(self, knob)!r} must be "
                                  "a bool")

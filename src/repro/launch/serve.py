@@ -56,6 +56,22 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="shared page pool size; 0 = worst case, less "
                          "oversubscribes (engine preempts on pressure)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for every request "
+                         "(0 = greedy argmax, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep the k highest logits before sampling "
+                         "(0 disables the filter)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest prob mass "
+                         ">= top_p (1.0 disables the filter)")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="max draft tokens per speculative verify "
+                         "(paged layouts; see --no-spec)")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="disable speculative decoding (n-gram drafting + "
+                         "one-forward verification; output tokens are "
+                         "identical either way — spec only changes speed)")
     ap.add_argument("--sync", action="store_true",
                     help="synchronous escape hatch: pipeline_depth=1 — "
                          "retire every cycle before planning the next "
@@ -90,6 +106,16 @@ def main():
             print(f"  req {rid} -> {tok}{'  [done]' if done else ''}",
                   flush=True)
 
+    # --seed doubles as the sampling seed: with --temperature > 0 every
+    # request draws from the same per-request (seed, token index) keyed
+    # PRNG, so a rerun with identical flags reproduces its tokens exactly
+    sampling = None
+    if args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0:
+        from repro.serving import SamplingParams
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.seed)
+
     seq_cap = args.prompt_len + args.max_new
     # without --page-size the Session auto-sizes pages from the model's
     # KVLayout (shrinks for short runs, tiles swa/local windows); an
@@ -107,7 +133,9 @@ def main():
         decode_steps=args.decode_steps,
         kv_layout=args.kv_layout,
         pipeline_depth=1 if args.sync else 2,
-        num_pages=args.num_pages, trace=bool(args.trace), **page_kw)
+        num_pages=args.num_pages, trace=bool(args.trace),
+        spec_tokens=args.spec_tokens, enable_spec=not args.no_spec,
+        sampling=sampling, **page_kw)
     engine = session.engine
     s = engine.metrics.summary()
     if args.json:
@@ -129,6 +157,10 @@ def main():
               f"{s['prefill_tokens_saved']} served from prefix cache "
               f"(hit rate {s['prefix_hit_rate']:.2f}), "
               f"{s['compile_count']} compiles")
+        if s["drafted_tokens"]:
+            print(f"  spec     {s['drafted_tokens']} drafted, "
+                  f"{s['accepted_tokens']} accepted "
+                  f"(accept_rate {s['accept_rate']:.2f})")
         if s["step_time_s"] > 0:
             st = s["step_time_s"]
             print(f"  phases plan {s['plan_time_s']/st:6.1%}  "

@@ -105,9 +105,28 @@ class PagedPrefillContract(Protocol):
                  use_pallas: bool = False) -> Tuple[Any, Any]: ...
 
 
+@runtime_checkable
+class PagedVerifyContract(Protocol):
+    """Speculative-decode verify forward (the spec-decode path):
+    ``(params, tokens, state, *, use_pallas=False) -> (logits [S, V],
+    pages)`` with the same ``state`` as ``PagedPrefillContract``.
+
+    ``tokens`` [1, S] holds one slot's last committed token followed by
+    its draft tokens (fixed width ``spec_tokens + 1``; the tail past
+    ``n_valid`` is masked into the trash page).  Unlike the prefill
+    contract the head runs over *every* position: row ``j`` predicts
+    sequence index ``start + 1 + j``, which is exactly what the engine
+    replays its per-request sampler over to find the accepted draft
+    prefix.  Declaring this contract flips on the engine's
+    ``spec_serve`` capability (see ``ServeConfig.enable_spec``)."""
+
+    def __call__(self, params, tokens, state, *,
+                 use_pallas: bool = False) -> Tuple[Any, Any]: ...
+
+
 #: capability names a bundle may declare (see ModelBundle.capabilities)
 CAPABILITIES = ("train", "serve", "paged_serve", "prefix_serve",
-                "bucketed_prefill")
+                "spec_serve", "bucketed_prefill")
 
 
 @dataclass
@@ -137,6 +156,9 @@ class ModelBundle:
     # into the page pool, the mechanism behind prefix caching and chunked
     # prefill.  Same layout gate as paged_decode_fn.
     paged_prefill_fn: Optional[PagedPrefillContract] = None
+    # Speculative-decode verify contract (``PagedVerifyContract``): the
+    # all-position-logits sibling of paged_prefill_fn.  Same layout gate.
+    paged_verify_fn: Optional[PagedVerifyContract] = None
     # Physical page layout of the decode cache (None = slotted only); the
     # engine hands this to ``PagedKVCachePool`` and validates page-size /
     # window compatibility against it.
@@ -160,6 +182,9 @@ class ModelBundle:
         ``"prefix_serve"``     — ``paged_prefill_fn``
                                  (``PagedPrefillContract``) enables prefix-
                                  cache page sharing + chunked prefill;
+        ``"spec_serve"``       — ``paged_verify_fn``
+                                 (``PagedVerifyContract``) enables n-gram
+                                 speculative decoding;
         ``"bucketed_prefill"`` — serve_prefill_fn takes ``n_valid`` (the
                                  engine may pad prompts to power-of-two
                                  buckets with masked tails).
@@ -175,6 +200,8 @@ class ModelBundle:
             caps.add("paged_serve")
             if self.paged_prefill_fn is not None:
                 caps.add("prefix_serve")
+            if self.paged_verify_fn is not None:
+                caps.add("spec_serve")
         return frozenset(caps)
 
     def param_structs(self):
@@ -231,6 +258,8 @@ def _build_lm(cfg: ModelConfig) -> ModelBundle:
         paged_prefill_fn=(functools.partial(transformer.lm_paged_prefill,
                                             cfg)
                           if layout is not None else None),
+        paged_verify_fn=(functools.partial(transformer.lm_paged_verify, cfg)
+                         if layout is not None else None),
         kv_layout=layout,
         # masked bucket tails need the *slotted* prefill cache to hold the
         # whole bucket (no ring wrap): true for the contiguous layouts,

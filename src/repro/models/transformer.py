@@ -293,7 +293,8 @@ def lm_prefill(cfg, params, tokens, *, cache_len: int = 0,
 
 
 def lm_paged_prefill(cfg, params, tokens, state, *, use_pallas: bool = False):
-    """Prefill one request's (suffix) chunk straight into the paged pool.
+    """Prefill one request's (suffix) chunk straight into the paged pool
+    (forward body shared with ``lm_paged_verify``).
 
     tokens [1, S] — S is a padded power-of-two bucket; state:
       * ``pages``      {"k","v"}: [L, P, ps, KV, hd] — global page pool
@@ -314,6 +315,29 @@ def lm_paged_prefill(cfg, params, tokens, state, *, use_pallas: bool = False):
     pages) vs MLA's latent ckv/krope pages.
     """
     del use_pallas
+    x, n_valid, new_pages = _paged_forward(cfg, params, tokens, state)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = lm_head(cfg, params, last)
+    return logits[:, 0], new_pages
+
+
+def lm_paged_verify(cfg, params, tokens, state, *, use_pallas: bool = False):
+    """Speculative-decode verify forward: the drafted span runs through
+    the same paged-prefill scatter (accepted tokens' K/V lands straight
+    in the request's pages) but the head runs over *every* position —
+    logits [S, V], one row per input token, row ``j`` predicting
+    sequence index ``start + 1 + j``.  The engine replays its sampler
+    over these rows to decide the accepted prefix; invalid tail rows
+    (``j >= n_valid``) are masked into the trash page exactly like a
+    bucketed prefill tail and their logits are simply ignored."""
+    del use_pallas
+    x, _, new_pages = _paged_forward(cfg, params, tokens, state)
+    logits = lm_head(cfg, params, x)
+    return logits[0], new_pages
+
+
+def _paged_forward(cfg, params, tokens, state):
+    """Shared paged prefill/verify body -> (x [1,S,d], n_valid, new_pages)."""
     params = cast_tree(params, cfg.compute_dtype)
     cd = jnp.dtype(cfg.compute_dtype)
     S = tokens.shape[1]
@@ -346,9 +370,7 @@ def lm_paged_prefill(cfg, params, tokens, state, *, use_pallas: bool = False):
 
     x, new_pages = jax.lax.scan(body, x, (params["layers"], state["pages"]))
     x = apply_norm(cfg, params["final_norm"], x)
-    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
-    logits = lm_head(cfg, params, last)
-    return logits[:, 0], new_pages
+    return x, n_valid, new_pages
 
 
 def lm_decode(cfg, params, tokens, caches):

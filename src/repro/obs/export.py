@@ -20,22 +20,24 @@ Phase model (engine track span names):
 
   * ``step`` wraps one engine cycle; the pipeline *sections* ``step.plan``
     (pure host planning: scheduler decisions, admission, page-table and
-    chunk construction), ``step.submit`` (device dispatch of the plan) and
-    ``step.retire`` (materialize a completed cycle's tokens: stream,
-    completion, page frees) tile it (:data:`STEP_SECTIONS` — their sum
-    over a run is the cycle wall time minus loop glue, asserted >= 95% by
-    the tests).  With ``pipeline_depth=2`` a step's retire section drains
-    the *previous* cycle, so in a trace submit(N+1) begins before
-    retire(N) ends — the overlap the ``engine.inflight`` counter makes
-    visible in Perfetto;
+    chunk construction), ``step.draft`` (host n-gram drafting for
+    speculative decoding — near-zero when spec is off), ``step.submit``
+    (device dispatch of the plan) and ``step.retire`` (materialize a
+    completed cycle's tokens: stream, completion, page frees) tile it
+    (:data:`STEP_SECTIONS` — their sum over a run is the cycle wall time
+    minus loop glue, asserted >= 95% by the tests).  With
+    ``pipeline_depth=2`` a step's retire section drains the *previous*
+    cycle, so in a trace submit(N+1) begins before retire(N) ends — the
+    overlap the ``engine.inflight`` counter makes visible in Perfetto;
   * the *leaves* ``plan`` (host-side prefix planning / page bookkeeping,
-    nested under whichever section triggered it), ``prefill.device`` and
-    ``decode.device`` (jitted calls, fenced with ``block_until_ready`` in
-    traced mode) are mutually disjoint, so
-    ``other = step - plan - prefill.device - decode.device`` is the
-    well-defined "everything else" — scheduling, numpy glue, stream
-    callbacks — and ``host_overhead_frac = other / step`` is the number
-    the async-pipeline work drives down (gated <= 0.25 by the CI smoke).
+    nested under whichever section triggered it), ``prefill.device``,
+    ``decode.device`` and ``verify.device`` (jitted calls, fenced with
+    ``block_until_ready`` in traced mode) are mutually disjoint, so
+    ``other = step - plan - step.draft - prefill.device - decode.device
+    - verify.device`` is the well-defined "everything else" — scheduling,
+    numpy glue, stream callbacks — and ``host_overhead_frac = other /
+    step`` is the number the async-pipeline work drives down (gated
+    <= 0.25 by the CI smoke).
 """
 from __future__ import annotations
 
@@ -45,10 +47,10 @@ from typing import Any, Dict, List
 from repro.obs.trace import ENGINE_TRACK
 
 #: engine-track spans that tile one ``step`` span (coverage denominator)
-STEP_SECTIONS = ("step.plan", "step.submit", "step.retire")
+STEP_SECTIONS = ("step.plan", "step.draft", "step.submit", "step.retire")
 
 #: disjoint leaf phases the summary attributes wall time to
-LEAF_PHASES = ("plan", "prefill.device", "decode.device")
+LEAF_PHASES = ("plan", "prefill.device", "decode.device", "verify.device")
 
 #: Perfetto counter track: device cycles submitted but not yet retired
 INFLIGHT_COUNTER = "engine.inflight"
@@ -58,12 +60,14 @@ INFLIGHT_COUNTER = "engine.inflight"
 #: three consumers, no drift
 STEP_TIME_S = "step_time_s"
 PLAN_TIME_S = "plan_time_s"
+DRAFT_TIME_S = "draft_time_s"
 PREFILL_TIME_S = "prefill_time_s"
 DECODE_TIME_S = "decode_time_s"
+VERIFY_TIME_S = "verify_time_s"
 OTHER_TIME_S = "other_time_s"
 HOST_OVERHEAD_FRAC = "host_overhead_frac"
-PHASE_TIME_KEYS = (STEP_TIME_S, PLAN_TIME_S, PREFILL_TIME_S,
-                   DECODE_TIME_S, OTHER_TIME_S)
+PHASE_TIME_KEYS = (STEP_TIME_S, PLAN_TIME_S, DRAFT_TIME_S, PREFILL_TIME_S,
+                   DECODE_TIME_S, VERIFY_TIME_S, OTHER_TIME_S)
 #: phase-derived summary keys that are meaningless untraced (the traced
 #: attribution pass owns them; untraced bench records must omit them)
 TRACED_ONLY_KEYS = PHASE_TIME_KEYS + (
@@ -142,14 +146,18 @@ def phase_snapshot(tracer) -> Dict[str, float]:
     ph = tracer.phase_seconds
     step = ph.get("step", 0.0)
     plan = ph.get("plan", 0.0)
+    draft = ph.get("step.draft", 0.0)
     prefill = ph.get("prefill.device", 0.0)
     decode = ph.get("decode.device", 0.0)
-    other = max(step - plan - prefill - decode, 0.0)
+    verify = ph.get("verify.device", 0.0)
+    other = max(step - plan - draft - prefill - decode - verify, 0.0)
     return {
         STEP_TIME_S: step,
         PLAN_TIME_S: plan,
+        DRAFT_TIME_S: draft,
         PREFILL_TIME_S: prefill,
         DECODE_TIME_S: decode,
+        VERIFY_TIME_S: verify,
         OTHER_TIME_S: other,
         HOST_OVERHEAD_FRAC: (other / step) if step > 0 else 0.0,
     }
@@ -190,5 +198,5 @@ __all__ = ["chrome_trace", "write_chrome_trace", "phase_snapshot",
            "phase_coverage", "prometheus_text", "STEP_SECTIONS",
            "LEAF_PHASES", "INFLIGHT_COUNTER", "PHASE_TIME_KEYS",
            "TRACED_ONLY_KEYS", "STEP_TIME_S", "PLAN_TIME_S",
-           "PREFILL_TIME_S", "DECODE_TIME_S", "OTHER_TIME_S",
-           "HOST_OVERHEAD_FRAC"]
+           "DRAFT_TIME_S", "PREFILL_TIME_S", "DECODE_TIME_S",
+           "VERIFY_TIME_S", "OTHER_TIME_S", "HOST_OVERHEAD_FRAC"]

@@ -10,8 +10,11 @@ from repro.serving.kvcache import SlotKVCachePool, pool_pspecs
 from repro.serving.layouts import KVLayout, layout_for
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import PagedKVCachePool, paged_pspecs
+from repro.serving.sampling import GREEDY, SamplingParams
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.spec import DrafterPool, NGramDrafter
 
 __all__ = ["ServingEngine", "SlotKVCachePool", "PagedKVCachePool",
            "KVLayout", "layout_for", "pool_pspecs", "paged_pspecs",
-           "ServingMetrics", "Request", "Scheduler"]
+           "ServingMetrics", "Request", "Scheduler", "SamplingParams",
+           "GREEDY", "NGramDrafter", "DrafterPool"]

@@ -59,11 +59,31 @@ kept, so greedy output is unchanged).  Recurrent families (RG-LRU / RWKV:
 O(1) state per slot — nothing to page) fall back to the slotted pool;
 ``ServeConfig.kv_layout`` forces either layout.
 
-Greedy (argmax) decoding — chosen so batched serving is *token-identical*
-to an unbatched sequential decode of each request, the serving analogue of
-the paper's Fig. 7 equivalence claim (tested in tests/test_serving.py,
-tests/test_prefix_cache.py and, for the pipeline itself,
-tests/test_pipeline.py).
+Decoding is greedy (argmax) by default and per-request sampled on demand
+(``submit(..., sampling=SamplingParams(...))``): the sampler keys a
+counter-based PRNG by (request seed, absolute token index) — see
+``repro.serving.sampling`` — so batched serving stays *token-identical*
+to an unbatched sequential decode of each request whatever the batch
+composition, slot assignment, KV layout, mesh or pipeline depth: the
+serving analogue of the paper's Fig. 7 equivalence claim (tested in
+tests/test_serving.py, tests/test_prefix_cache.py, tests/test_sampling.py
+and, for the pipeline itself, tests/test_pipeline.py).  Temperature 0 is
+lowered to argmax, so all-greedy traffic dispatches the exact greedy scan
+(byte-identical tokens, no extra compiles).  The constructor's ``seed``
+initialises *parameters* only (when ``params`` is None) — sampling seeds
+are strictly per-request, never global engine state.
+
+Speculative decoding (``ServeConfig.enable_spec``, paged layouts with a
+``PagedVerifyContract``): a host-side n-gram drafter proposes up to
+``spec_tokens`` continuations per eligible slot; submit runs ONE verify
+forward over [last token, drafts] (prefill-style scatter, so accepted KV
+lands directly in the slot's pages); retire accepts the longest prefix of
+drafts that deterministically replays what the non-speculative engine
+would have emitted, rewinds the slot past the first mismatch and emits
+accepted tokens + the correction token.  Because verification replays the
+exact sampler (argmax when greedy), spec-on output is token-identical to
+spec-off — speculation only changes *when* tokens are computed, never
+*which*.
 
 Mesh transparency: pass a ``MeshConfig`` and the engine places parameters
 via the same logical-axis rules as ``TransparentTrainer`` (tensor-parallel
@@ -87,7 +107,10 @@ from repro.obs import (INFLIGHT_COUNTER, NULL_TRACER, Tracer, request_track,
 from repro.serving.kvcache import SlotKVCachePool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import PagedKVCachePool
+from repro.serving.sampling import (GREEDY, PACKED_WIDTH, SamplingParams,
+                                    pack_params, sample_tokens)
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.spec import DrafterPool
 
 P = jax.sharding.PartitionSpec
 
@@ -149,10 +172,27 @@ class _ChunkPlan:
         self.completes = completes
 
 
-class _StepPlan:
-    """Immutable output of the plan phase: everything submit dispatches."""
+class _SpecPlan:
+    """One planned speculative verify: a slot whose decode row is swapped
+    for a single drafted-token verification forward this cycle."""
 
-    __slots__ = ("admits", "chunks", "rows", "limits", "mask")
+    __slots__ = ("req", "slot", "drafts", "start", "m")
+
+    def __init__(self, req: Request, slot: int, drafts: Tuple[int, ...],
+                 start: int, m: int):
+        self.req = req
+        self.slot = slot
+        self.drafts = drafts              # m drafted token ids
+        self.start = start                # pool pos = index of last token
+        self.m = m
+
+
+class _StepPlan:
+    """Output of the plan phase: everything submit dispatches.  The draft
+    phase (``_plan_spec``) may swap decode rows for ``specs`` entries
+    before submit; after that the plan is frozen."""
+
+    __slots__ = ("admits", "chunks", "rows", "limits", "mask", "specs")
 
     def __init__(self, admits, chunks, rows, limits, mask):
         self.admits: List[_AdmitPlan] = admits
@@ -160,6 +200,7 @@ class _StepPlan:
         self.rows: List[Tuple[int, int]] = rows      # (slot, rid), decodable
         self.limits: Dict[int, int] = limits         # slot -> decode budget
         self.mask: Tuple[int, ...] = mask            # slots masked to trash
+        self.specs: List[_SpecPlan] = []             # draft-phase verify jobs
 
 
 class _InFlight:
@@ -168,17 +209,22 @@ class _InFlight:
     ``overrides`` are the prefill-origin first tokens (device scalars —
     forcing them keeps the host out of the token chain), in the exact order
     the synchronous engine would have emitted them; ``stack`` is the decode
-    scan's [decode_steps, slots] token matrix, read row-by-row at retire.
+    scan's [decode_steps, slots] token matrix, read row-by-row at retire;
+    ``specs`` holds the cycle's speculative verifies as one batched
+    triple (plans, emit [N, width], nacc [N]) — all slots share a single
+    device dispatch and a single host sync at retire.
     """
 
-    __slots__ = ("overrides", "rows", "limits", "stack", "n_steps")
+    __slots__ = ("overrides", "rows", "limits", "stack", "n_steps", "specs")
 
-    def __init__(self, overrides, rows, limits, stack, n_steps):
+    def __init__(self, overrides, rows, limits, stack, n_steps, specs=None):
         self.overrides: List[Tuple[int, int, jax.Array]] = overrides
         self.rows: List[Tuple[int, int]] = rows
         self.limits: Dict[int, int] = limits
         self.stack = stack                           # device [n_steps, slots]
         self.n_steps = n_steps
+        self.specs: Optional[Tuple[List[_SpecPlan], jax.Array, jax.Array]] = \
+            specs
 
 
 class ServingEngine:
@@ -225,6 +271,9 @@ class ServingEngine:
             param_sh = common.logical_to_mesh(self.bundle.specs, self.mesh,
                                               rules)
         if params is None:
+            # ``seed`` initialises parameters ONLY.  Sampling randomness is
+            # strictly per-request (SamplingParams.seed + absolute token
+            # index) — engine-level state never leaks into token draws.
             params = self.bundle.init_params(jax.random.PRNGKey(seed))
         if self.mesh is not None:
             params = jax.device_put(params, param_sh)
@@ -246,6 +295,11 @@ class ServingEngine:
         # prefix-cache page sharing + chunked prefill need the paged
         # prefill contract (engine writes pages in place, no state scatter)
         self._prefix_path = self.paged and "prefix_serve" in caps
+        # speculative decoding needs the all-position verify head
+        # (PagedVerifyContract -> "spec_serve"); ServeConfig.enable_spec
+        # gates it per deployment, slotted layouts have no page rewind
+        self._spec_path = (self.paged and "spec_serve" in caps
+                           and self.cfg.enable_spec)
         # masked-tail power-of-two bucketing of whole-prompt prefills
         self._bucket_slotted = (self.cfg.prefill_bucket
                                 and "bucketed_prefill" in caps)
@@ -294,6 +348,15 @@ class ServingEngine:
         self._pending: Dict[int, int] = {}              # rid -> tokens in flight
         self._last_toks_dev = jnp.zeros((self.cfg.max_batch,), jnp.int32)
         self.prefill_compiles = 0         # lifetime (metrics.reset survives)
+        # speculative decoding: per-request n-gram drafters plus the slots
+        # whose verify is in flight (those slots must not decode, draft
+        # again, or be preempted until the verify retires)
+        self._drafters = DrafterPool()
+        self._spec_wait: set = set()
+        # host mirror of each slot's next sampling index (= prompt+tokens
+        # length); the slotted sampled scan needs it as an operand (the
+        # paged pool carries pos on-device already)
+        self._slot_pos = np.zeros((self.cfg.max_batch,), np.int64)
 
         # -- compiled entry points -----------------------------------------
         # prefill compiles are counted at trace time: a wrapper bump runs
@@ -319,13 +382,20 @@ class ServingEngine:
         # compiles once
         self._argmax1 = jax.jit(
             lambda logits: jnp.argmax(logits[0]).astype(jnp.int32))
+        # sampled sibling of _argmax1: draw the prefill-origin first token
+        # with the request's packed params at its absolute index
+        self._sample1 = jax.jit(
+            lambda logits, packed, idx: sample_tokens(
+                logits, packed[None, :], idx[None])[0])
         self._set_tok = jax.jit(
             lambda toks, slot, tok: toks.at[slot].set(tok))
 
         decode_fn = self.bundle.decode_fn
         paged_decode_fn = self.bundle.paged_decode_fn
         paged_prefill_fn = self.bundle.paged_prefill_fn
+        paged_verify_fn = self.bundle.paged_verify_fn
         n_steps = self.cfg.decode_steps
+        spec_width = self.cfg.spec_tokens + 1   # last token + drafts
 
         # backend-selected like core/allreduce: the Pallas paged-attention
         # kernel on TPU (HBM traffic ~ pages held), traced ref gather on CPU
@@ -383,12 +453,107 @@ class ServingEngine:
             last = jnp.where(limits >= 1, stack[-1], toks0)
             return stack, last, state
 
+        # sampled twins of the two scans: one extra packed [slots, 4]
+        # operand (bitcast temperature/top_p | top_k | seed, see
+        # sampling.pack_params) and the absolute token index threaded into
+        # the counter-based PRNG.  Rows whose request is greedy lower to
+        # argmax inside sample_tokens, so mixed batches stay exact; all-
+        # greedy cycles dispatch the plain scans above (byte identity, no
+        # sampling operand, no recompile of the greedy path).
+        def _decode_scan_paged_sampled(params, toks0, pages, packed, samp):
+            table = packed[:, :-2]
+            pos0 = packed[:, -2]
+            limits = packed[:, -1]
+
+            def body(carry, k):
+                toks, pos, pages = carry
+                logits, pages = paged_decode_fn(
+                    params, toks[:, None],
+                    {"pages": pages, "page_table": table, "pos": pos},
+                    use_pallas=paged_kernel)
+                # the input token sits at pos -> its successor's absolute
+                # index is pos + 1; frozen rows idempotently replay the
+                # same index, same draw
+                nxt = sample_tokens(logits, samp, pos + 1)
+                adv = (k + 1) < limits
+                return ((jnp.where(adv, nxt, toks),
+                         jnp.where(adv, pos + 1, pos), pages), nxt)
+            (_, _, pages), stack = jax.lax.scan(
+                body, (toks0, pos0, pages), jnp.arange(n_steps))
+            last = jnp.where(limits >= 1, stack[-1], toks0)
+            return stack, last, pages
+
+        def _decode_scan_sampled(params, toks0, pool_state, limits, samp,
+                                 pos0):
+            def body(carry, k):
+                toks, state, pos = carry
+                logits, state = jax.vmap(decode_fn, in_axes=(None, 0, 0))(
+                    params, toks[:, None, None], state)
+                nxt = sample_tokens(logits[:, 0, :], samp, pos)
+                adv = (k + 1) < limits
+                return (jnp.where(adv, nxt, toks), state,
+                        jnp.where(adv, pos + 1, pos)), nxt
+            (_, state, _), stack = jax.lax.scan(
+                body, (toks0, pool_state, pos0), jnp.arange(n_steps))
+            last = jnp.where(limits >= 1, stack[-1], toks0)
+            return stack, last, state
+
         def _prefill_chunk(params, toks, pages, table, start, n_valid):
             """One request's suffix chunk straight into the page pool
             (pages donated; the scalar/table operands are tiny uploads)."""
             return paged_prefill_fn(params, toks,
                                     {"pages": pages, "page_table": table,
                                      "start": start, "n_valid": n_valid})
+
+        verify_tw = self.pool.table_width if self.paged else 0
+
+        def _verify_step(params, toks, pages, packed):
+            """One batched speculative verify: every speculating slot's
+            [last token, drafts] row forwards through the all-position
+            head in a single dispatch (a scan threads the shared pool
+            through the rows), then the sampler deterministically replays
+            at every drafted index and the accepted prefix is counted
+            on-device.
+
+            ``toks`` is [N, spec_width]; ``packed`` is one int32 matrix —
+            ``[page table | start | n_valid | sampling params | drafts]``
+            per row — so a cycle's whole verify work ships as two host
+            uploads however many slots speculate.  Logits row j predicts
+            absolute index ``start + 1 + j``; draft j is accepted iff it
+            equals exactly the token the non-speculative engine would
+            emit there (argmax when greedy, the counter-keyed draw
+            otherwise), so acceptance never changes the output stream.
+            Padding drafts are -1 and auto-reject, clamping ``nacc`` to
+            the real draft count; all-padding rows (``n_valid`` 0) mask
+            every position into the trash page."""
+            table = packed[:, :verify_tw]
+            start = packed[:, verify_tw]
+            n_valid = packed[:, verify_tw + 1]
+            samp = packed[:, verify_tw + 2:verify_tw + 2 + PACKED_WIDTH]
+            drafts = packed[:, verify_tw + 2 + PACKED_WIDTH:]
+
+            def body(pages, row):
+                t, tab, st, nv = row
+                logits, pages = paged_verify_fn(
+                    params, t[None], {"pages": pages, "page_table": tab,
+                                      "start": st, "n_valid": nv})
+                return pages, logits
+
+            pages, stack = jax.lax.scan(body, pages,
+                                        (toks, table, start, n_valid))
+            n = stack.shape[0]
+            idx = start[:, None] + 1 + jnp.arange(spec_width,
+                                                  dtype=jnp.int32)[None, :]
+            rows = jnp.broadcast_to(samp[:, None, :],
+                                    (n, spec_width, PACKED_WIDTH))
+            emit = sample_tokens(
+                stack.reshape(n * spec_width, -1),
+                rows.reshape(n * spec_width, PACKED_WIDTH),
+                idx.reshape(n * spec_width)).reshape(n, spec_width)
+            match = (emit[:, :-1] == drafts) & (drafts >= 0)
+            nacc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                           axis=1)
+            return emit, nacc, pages
 
         if self.mesh is not None:
             def ns(spec):
@@ -406,6 +571,14 @@ class ServingEngine:
                     out_shardings=(ns(P(None, None)), ns(P(None)),
                                    self.pool.shardings),
                     donate_argnums=(2,))
+                self._decode_sampled = jax.jit(
+                    _decode_scan_paged_sampled,
+                    in_shardings=(param_sh, ns(P(None)),
+                                  self.pool.shardings,
+                                  ns(P(None, None)), ns(P(None, None))),
+                    out_shardings=(ns(P(None, None)), ns(P(None)),
+                                   self.pool.shardings),
+                    donate_argnums=(2,))
                 if self._prefix_path:
                     self._paged_prefill = jax.jit(
                         _counted(_prefill_chunk),
@@ -413,6 +586,15 @@ class ServingEngine:
                                       self.pool.shardings, ns(P(None)),
                                       ns(P()), ns(P())),
                         out_shardings=(ns(P(None, None)),
+                                       self.pool.shardings),
+                        donate_argnums=(2,))
+                if self._spec_path:
+                    self._verify = jax.jit(
+                        _verify_step,
+                        in_shardings=(param_sh, ns(P(None, None)),
+                                      self.pool.shardings,
+                                      ns(P(None, None))),
+                        out_shardings=(ns(P(None, None)), ns(P(None)),
                                        self.pool.shardings),
                         donate_argnums=(2,))
             else:
@@ -423,23 +605,43 @@ class ServingEngine:
                     out_shardings=(ns(P(None, None)), ns(P(None)),
                                    self.pool.shardings),
                     donate_argnums=(2,))
+                self._decode_sampled = jax.jit(
+                    _decode_scan_sampled,
+                    in_shardings=(param_sh, ns(P(None)),
+                                  self.pool.shardings, ns(P(None)),
+                                  ns(P(None, None)), ns(P(None))),
+                    out_shardings=(ns(P(None, None)), ns(P(None)),
+                                   self.pool.shardings),
+                    donate_argnums=(2,))
         elif self.paged:
             self._decode = jax.jit(_decode_scan_paged, donate_argnums=(2,))
+            self._decode_sampled = jax.jit(_decode_scan_paged_sampled,
+                                           donate_argnums=(2,))
             if self._prefix_path:
                 self._paged_prefill = jax.jit(_counted(_prefill_chunk),
                                               donate_argnums=(2,))
+            if self._spec_path:
+                self._verify = jax.jit(_verify_step, donate_argnums=(2,))
         else:
             self._decode = jax.jit(_decode_scan, donate_argnums=(2,))
+            self._decode_sampled = jax.jit(_decode_scan_sampled,
+                                           donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     # Submission
     # ------------------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: Optional[int] = None,
-               priority: int = 0, deadline: Optional[float] = None
+               priority: int = 0, deadline: Optional[float] = None,
+               sampling: Optional[SamplingParams] = None
                ) -> Optional[int]:
         """Queue one request.  Returns its id, or None when the admission
-        queue is full (caller sheds load / retries)."""
+        queue is full (caller sheds load / retries).
+
+        ``sampling`` (default greedy) travels with the request: its seed
+        plus the token's absolute index fully determine every draw, so the
+        output is a pure function of (prompt, params) — independent of
+        batch composition, slot assignment or engine configuration."""
         prompt = tuple(int(t) for t in prompt)
         max_new = (self.cfg.max_new_tokens if max_new_tokens is None
                    else max_new_tokens)
@@ -451,9 +653,15 @@ class ServingEngine:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
                 f"slot capacity max_seq_len={self.cfg.max_seq_len}")
+        if sampling is None:
+            sampling = GREEDY
+        elif not isinstance(sampling, SamplingParams):
+            raise TypeError(
+                f"sampling must be a SamplingParams, got {type(sampling)}")
         rid = next(self._rid)
         req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new,
-                      priority=priority, deadline=deadline)
+                      priority=priority, deadline=deadline,
+                      sampling=sampling)
         if not self.scheduler.submit(req):
             self.metrics.record_reject()
             return None
@@ -508,6 +716,7 @@ class ServingEngine:
         belongs to someone else or is free), the request is a ghost — its
         in-flight tokens completed it, so it leaves the waiting queue
         without ever being re-admitted."""
+        self._drafters.drop(req.rid)
         if self.pool.owner.get(slot) == req.rid:
             self._complete(slot, req)
             return
@@ -552,8 +761,12 @@ class ServingEngine:
         rt = request_track(req.rid)
         if self._prefix_path:
             # map cached prefix pages read-only; suffix prefills in chunks
-            # (the first chunk is planned this same cycle)
-            out = self.pool.alloc_prefix(req.rid, prompt)
+            # (the first chunk is planned this same cycle).  The greedy
+            # next-token memo only holds for greedy requests — a sampled
+            # request re-prefills its final position and draws its own
+            # first token (use_memo=False caps the hit at plen - 1)
+            out = self.pool.alloc_prefix(req.rid, prompt,
+                                         use_memo=req.sampling.greedy)
             if out is None:
                 return False
             slot, cached = out
@@ -631,8 +844,11 @@ class ServingEngine:
                                     and not self._can_admit(
                                         head.resume_prompt()))))
                 if blocked:
+                    # slots with a speculative verify in flight cannot be
+                    # evicted (their retire rewinds pool state in place)
                     running = {s: self.requests[r]
-                               for s, r in self.pool.owner.items()}
+                               for s, r in self.pool.owner.items()
+                               if s not in self._spec_wait}
                     for slot, _ in self.scheduler.preemption(running):
                         self._preempt(slot)
         # 2. admission: reserve prefix pages / slots.  When the pool
@@ -664,6 +880,12 @@ class ServingEngine:
         for slot, rid in self.pool.owner.items():
             if slot in self._prefilling:
                 continue
+            if slot in self._spec_wait:
+                # verify in flight: the slot's pos/token chain is only
+                # known after retire — it sits this cycle out (depth 2
+                # alternates verify / idle cycles per spec slot)
+                limits[slot] = 0
+                continue
             req = self.requests[rid]
             budget = (req.max_new_tokens - len(req.tokens)
                       - self._pending.get(rid, 0)
@@ -684,7 +906,13 @@ class ServingEngine:
                     skip=self._prefilling.keys(), steps=limits)
                 if not starved:
                     break
-                self._relieve_pressure()
+                if not self._relieve_pressure():
+                    # every evictable tenant has a verify in flight —
+                    # starved slots idle one cycle rather than corrupting
+                    # an un-retired speculative state
+                    for s in starved:
+                        limits[s] = 0
+                    break
         # held pages peak right after growth (completion evictions come at
         # retire) — sample here so kv_bytes_peak sees the high-water mark
         self.metrics.sample_kv_bytes(self.pool.kv_bytes_held(),
@@ -704,6 +932,86 @@ class ServingEngine:
                          {s: limits[s] for s, _ in rows}, mask)
 
     # ------------------------------------------------------------------
+    # Phase 1b: draft (host n-gram proposals; swaps decode rows for
+    # verify jobs — runs under the ``step.draft`` trace section)
+    # ------------------------------------------------------------------
+
+    def _plan_spec(self, plan: _StepPlan) -> None:
+        """Pick decode rows to speculate on and draft their continuations.
+
+        A slot is eligible when the host knows its full token history (no
+        un-retired emissions: ``_pending`` is zero and no override was
+        planned this cycle) and the drafter proposes at least one token.
+        The chosen slot's decode row becomes one verify forward over
+        [last token, drafts]; its budget covers at most the draft count +
+        the correction token, so acceptance can never over-generate.
+        Capacity for the m+1-position write span is ensured here; on
+        starvation the slot simply keeps its normal decode row — drafting
+        never preempts anyone.
+
+        Pipelined engines (depth > 1) plan while the previous cycle is
+        still in flight, so a busy slot never has a complete history at
+        plan time and could never bootstrap.  When the drafter already
+        holds a continuation for the known prefix, the slot idles for one
+        cycle (limit 0) so the in-flight tail retires; the next plan then
+        drafts from complete history, and verify/idle alternation sustains
+        itself from there."""
+        if not self._spec_path or not plan.rows:
+            return
+        cfg = self.cfg
+        override_slots = ({a.slot for a in plan.admits}
+                          | {c.slot for c in plan.chunks if c.completes})
+        for slot, rid in list(plan.rows):
+            if slot in override_slots:
+                continue
+            req = self.requests[rid]
+            pending = self._pending.get(rid, 0)
+            if pending:
+                if (req.tokens and plan.limits.get(slot, 0) > 0
+                        and req.max_new_tokens - len(req.tokens)
+                        - pending > 1
+                        and self._drafters.propose(
+                            rid, req.prompt + tuple(req.tokens), 1)):
+                    plan.limits[slot] = 0      # stall: drain, draft next
+                continue
+            if not req.tokens:
+                continue
+            budget = req.max_new_tokens - len(req.tokens)
+            k = min(cfg.spec_tokens, budget - 1)
+            if self.pool.layout.window:
+                # ring cells alias position p with p - window: each
+                # optimistic verify write clobbers the oldest in-window
+                # entry, and a rejection cannot restore it (ring rewind
+                # keeps cells).  A single draft only ever clobbers the
+                # one position that has already left every window a later
+                # token can attend to, so windowed slots draft 1.
+                k = 1
+            if k < 1:
+                continue
+            drafts = self._drafters.propose(
+                rid, req.prompt + tuple(req.tokens), k)
+            if not drafts:
+                continue
+            m = len(drafts)
+            # ring windows: the m+1-token write span must stay
+            # rotation-free (verify scatters like a chunk, no rotation)
+            span = self.pool.safe_decode_span(slot, m + 1)
+            if span < 2:
+                continue
+            if span < m + 1:
+                m = span - 1
+                drafts = drafts[:m]
+            others = [s for s in self.pool.active_slots if s != slot]
+            if self.pool.ensure_decode_capacity(skip=others,
+                                                steps={slot: m + 1}):
+                continue        # page-starved: fall back to plain decode
+            plan.specs.append(_SpecPlan(req, slot, drafts,
+                                        int(self.pool.pos[slot]), m))
+            plan.rows = [r for r in plan.rows if r[0] != slot]
+            plan.limits.pop(slot, None)
+            plan.mask = tuple(sorted(set(plan.mask) | {slot}))
+
+    # ------------------------------------------------------------------
     # Phase 2: submit (dispatch the plan; advance host positions; no sync)
     # ------------------------------------------------------------------
 
@@ -719,6 +1027,7 @@ class ServingEngine:
                 # token chain
                 self._last_toks_dev = self._set_tok(self._last_toks_dev,
                                                     a.slot, a.cached_tok)
+                self._slot_pos[a.slot] = len(a.prompt) + 1
                 overrides.append((a.req.rid, a.slot, a.cached_tok))
                 tr.end("prefill", track=rt)
                 tr.begin("decode", track=rt)
@@ -739,9 +1048,15 @@ class ServingEngine:
                 self.pool.insert_state(a.slot, state)
             else:
                 self.pool.insert_at(a.slot, state)
-            tok = self._argmax1(logits)
+            if a.req.sampling.greedy:
+                tok = self._argmax1(logits)
+            else:
+                tok = self._sample1(
+                    logits, jnp.asarray(pack_params(a.req.sampling)),
+                    jnp.asarray(len(a.prompt), jnp.int32))
             self._last_toks_dev = self._set_tok(self._last_toks_dev,
                                                 a.slot, tok)
+            self._slot_pos[a.slot] = len(a.prompt) + 1
             overrides.append((a.req.rid, a.slot, tok))
             tr.end("prefill", track=rt)
             tr.begin("decode", track=rt)
@@ -768,45 +1083,128 @@ class ServingEngine:
             # the pages valid before any reader dispatches)
             self.pool.commit_prefix(c.slot, job.prompt[:job.done])
             if c.completes:
-                tok = self._argmax1(logits)
-                # remember (prompt -> next token) so a repeat of this exact
-                # prompt can skip prefill entirely (full-hit fast path)
-                self.pool.cache_next_token(job.prompt, tok)
+                if job.req.sampling.greedy:
+                    tok = self._argmax1(logits)
+                    # remember (prompt -> next token) so a repeat of this
+                    # exact prompt can skip prefill entirely (full-hit
+                    # fast path); the memo is greedy-only — a sampled
+                    # request's first token depends on its seed
+                    self.pool.cache_next_token(job.prompt, tok)
+                else:
+                    tok = self._sample1(
+                        logits, jnp.asarray(pack_params(job.req.sampling)),
+                        jnp.asarray(len(job.prompt), jnp.int32))
                 self._last_toks_dev = self._set_tok(self._last_toks_dev,
                                                     c.slot, tok)
+                self._slot_pos[c.slot] = len(job.prompt) + 1
                 overrides.append((job.req.rid, c.slot, tok))
                 tr.end("prefill", track=rt)
                 tr.begin("decode", track=rt)
         stack = None
         if plan.rows:
+            # all-greedy cycles take the plain argmax scan (byte-identical
+            # dispatch to the pre-sampling engine); any sampled row routes
+            # the whole cycle through the sampled twin, whose greedy rows
+            # still lower to argmax inside sample_tokens
+            sampled = any(not self.requests[rid].sampling.greedy
+                          for _, rid in plan.rows)
+            samp_dev = None
+            if sampled:
+                samp = np.stack(
+                    [pack_params(self.requests[self.pool.owner[s]].sampling
+                                 if s in self.pool.owner else GREEDY)
+                     for s in range(cfg.max_batch)])
+                samp_dev = jnp.asarray(samp)
             with tr.span("decode.device", steps=cfg.decode_steps,
-                         rows=len(plan.rows)):
+                         rows=len(plan.rows), sampled=sampled):
                 if self.paged:
                     packed = self.pool.decode_operands(
                         plan.limits, mask_slots=plan.mask)
-                    stack, self._last_toks_dev, self.pool.pages = \
-                        self._decode(self.params, self._last_toks_dev,
-                                     self.pool.pages, packed)
+                    if sampled:
+                        stack, self._last_toks_dev, self.pool.pages = \
+                            self._decode_sampled(
+                                self.params, self._last_toks_dev,
+                                self.pool.pages, packed, samp_dev)
+                    else:
+                        stack, self._last_toks_dev, self.pool.pages = \
+                            self._decode(self.params, self._last_toks_dev,
+                                         self.pool.pages, packed)
                 else:
                     limits_dev = jnp.asarray(np.asarray(
                         [plan.limits.get(s, 0) for s in range(cfg.max_batch)],
                         np.int32))
-                    stack, self._last_toks_dev, self.pool.state = \
-                        self._decode(self.params, self._last_toks_dev,
-                                     self.pool.state, limits_dev)
+                    if sampled:
+                        pos_dev = jnp.asarray(
+                            self._slot_pos.astype(np.int32))
+                        stack, self._last_toks_dev, self.pool.state = \
+                            self._decode_sampled(
+                                self.params, self._last_toks_dev,
+                                self.pool.state, limits_dev, samp_dev,
+                                pos_dev)
+                    else:
+                        stack, self._last_toks_dev, self.pool.state = \
+                            self._decode(self.params, self._last_toks_dev,
+                                         self.pool.state, limits_dev)
                 self._fence(stack)
             if self.paged:
                 # host positions are deterministic once planned — advance
                 # now so the next plan overlaps the in-flight device step
                 self.pool.advance(steps=plan.limits)
+            for slot, _ in plan.rows:
+                self._slot_pos[slot] += plan.limits[slot]
+        # speculative verifies: one batched fixed-width forward covering
+        # every drafted slot this cycle ([last token, drafts, pad] per
+        # row), after the decode scan so the donated page buffer threads
+        # through in dispatch order.  The row count pads to the next
+        # power of two (a handful of compiles per engine) with inert
+        # rows: table 0 routes writes to the trash page, n_valid 0 masks
+        # them, drafts -1 auto-reject.  Two host uploads total — the
+        # token rows and one packed int32 matrix carrying
+        # [page table | start | n_valid | sampling | drafts] per row.
+        specs: Optional[Tuple[List[_SpecPlan], jax.Array, jax.Array]] = None
+        if plan.specs:
+            width = cfg.spec_tokens + 1
+            tw = self.pool.table_width
+            n = len(plan.specs)
+            n_pad = 1 << (n - 1).bit_length()
+            toks = np.zeros((n_pad, width), np.int32)
+            packed = np.zeros((n_pad, tw + 2 + PACKED_WIDTH + width - 1),
+                              np.int32)
+            packed[:, tw + 2 + PACKED_WIDTH:] = -1
+            total = 0
+            for i, sp in enumerate(plan.specs):
+                toks[i, 0] = sp.req.tokens[-1]
+                toks[i, 1:1 + sp.m] = sp.drafts
+                packed[i, :tw] = self.pool.tables[sp.slot]
+                packed[i, tw] = sp.start
+                packed[i, tw + 1] = sp.m + 1
+                packed[i, tw + 2:tw + 2 + PACKED_WIDTH] = \
+                    pack_params(sp.req.sampling)
+                packed[i, tw + 2 + PACKED_WIDTH:
+                       tw + 2 + PACKED_WIDTH + sp.m] = sp.drafts
+                total += sp.m + 1
+            with tr.span("verify.device", tokens=total, rows=n):
+                emit, nacc, self.pool.pages = self._verify(
+                    self.params, jnp.asarray(toks), self.pool.pages,
+                    jnp.asarray(packed))
+                self._fence(emit)
+            for sp in plan.specs:
+                # optimistic host advance over the whole drafted span;
+                # retire rewinds past the first mismatch
+                self.pool.advance(steps={sp.slot: sp.m + 1})
+                self._slot_pos[sp.slot] += sp.m + 1
+                self._spec_wait.add(sp.slot)
+                self._pending[sp.req.rid] = (self._pending.get(sp.req.rid, 0)
+                                             + sp.m + 1)
+            specs = (list(plan.specs), emit, nacc)
         for rid, _, _ in overrides:
             self._pending[rid] = self._pending.get(rid, 0) + 1
         for slot, rid in plan.rows:
             self._pending[rid] = self._pending.get(rid, 0) + plan.limits[slot]
-        if not overrides and stack is None:
+        if not overrides and stack is None and specs is None:
             return None
         return _InFlight(overrides, plan.rows, plan.limits, stack,
-                         cfg.decode_steps)
+                         cfg.decode_steps, specs)
 
     # ------------------------------------------------------------------
     # Phase 3: retire (materialise the previous cycle; emit in sync order)
@@ -844,6 +1242,37 @@ class ServingEngine:
                 self.metrics.record_decode_token()
                 if self._emit(req, int(stack[k, slot]), stream):
                     self._finalize(slot, req)
+        # speculative verifies: sync the whole cycle's accept counts and
+        # emitted rows in one host transfer each, rewind each slot past
+        # its first mismatch (freeing over-allocated tail pages) and emit
+        # accepted drafts + the correction token — exactly the tokens
+        # sequential decode would have produced, just computed in one
+        # batched forward instead of sum(nacc + 1) steps
+        if inf.specs is not None:
+            sps, emit_dev, nacc_dev = inf.specs
+            emit_all = np.asarray(emit_dev)
+            nacc_all = np.asarray(nacc_dev)
+            for i, sp in enumerate(sps):
+                req, slot = sp.req, sp.slot
+                self._spec_wait.discard(slot)
+                self._dec_pending(req.rid, sp.m + 1)
+                nacc = int(nacc_all[i])
+                self.metrics.record_spec(sp.m, nacc)
+                if (self.pool.owner.get(slot) != req.rid
+                        or req.rid in self.results):
+                    continue    # defensive: spec slots are never preempted
+                emit = emit_all[i]
+                new_pos = sp.start + 1 + nacc   # last accepted index
+                self.pool.rewind(slot, new_pos)
+                self._slot_pos[slot] = new_pos + 1
+                self._last_toks_dev = self._set_tok(
+                    self._last_toks_dev, slot, int(emit[nacc]))
+                for j in range(nacc + 1):
+                    emitted.append(req.rid)
+                    self.metrics.record_decode_token()
+                    if self._emit(req, int(emit[j]), stream):
+                        self._finalize(slot, req)
+                        break
         # ghost hygiene: a victim preempted after this cycle was submitted
         # had its ITL baseline dropped by the preemption — the emissions
         # above re-seeded it, so drop it again to keep the requeue ->
@@ -885,20 +1314,27 @@ class ServingEngine:
                             preemptions=victim.preempted)
         self.tracer.begin("queued", track=rt, resumed=True)
 
-    def _relieve_pressure(self, prefer_not: Optional[int] = None):
+    def _relieve_pressure(self, prefer_not: Optional[int] = None) -> bool:
         """Preempt the lowest-priority, youngest running request to free
         pages — preferring a victim other than ``prefer_not`` (a slot
         mid-prefill that triggered the pressure preempts itself only when
         it is the lone tenant).  Recency is judged by rid (monotone
         submission order): ``arrival_seq`` goes negative on requeue, so it
-        cannot rank original arrivals."""
-        candidates = [s for s in self.pool.active_slots if s != prefer_not]
+        cannot rank original arrivals.  Slots with a speculative verify in
+        flight are never victims (their retire rewinds pool state in
+        place); returns False when that leaves no candidate."""
+        candidates = [s for s in self.pool.active_slots
+                      if s != prefer_not and s not in self._spec_wait]
         if not candidates:
-            candidates = self.pool.active_slots
+            candidates = [s for s in self.pool.active_slots
+                          if s not in self._spec_wait]
+        if not candidates:
+            return False
         self._preempt(max(
             candidates,
             key=lambda s: (-self.requests[self.pool.owner[s]].priority,
                            self.pool.owner[s])))
+        return True
 
     # ------------------------------------------------------------------
     # The cycle
@@ -924,6 +1360,8 @@ class ServingEngine:
         with tr.span("step"):
             with tr.span("step.plan"):
                 plan = self._plan_cycle()
+            with tr.span("step.draft", rows=len(plan.rows)):
+                self._plan_spec(plan)
             with tr.span("step.submit"):
                 nxt = self._submit(plan)
                 prev, self._inflight = self._inflight, nxt
@@ -964,19 +1402,31 @@ class ServingEngine:
     # ------------------------------------------------------------------
 
     def generate(self, prompts, max_new_tokens: Optional[int] = None,
-                 stream: Optional[StreamFn] = None) -> List[List[int]]:
+                 stream: Optional[StreamFn] = None,
+                 sampling=None) -> List[List[int]]:
         """Submit ``prompts`` (list of token lists) and run to completion.
+
+        ``sampling`` is one ``SamplingParams`` applied to every prompt, or
+        a per-prompt list (None entries mean greedy).
 
         A closed batch larger than ``max_queue`` is fed with backpressure:
         when the admission queue is full the engine cycles until it drains
         (running requests finish and free slots), then keeps submitting —
         no request of a closed batch is ever shed.
         """
+        if sampling is None or isinstance(sampling, SamplingParams):
+            per_req = [sampling] * len(prompts)
+        else:
+            per_req = list(sampling)
+            if len(per_req) != len(prompts):
+                raise ValueError(
+                    f"sampling list length {len(per_req)} != "
+                    f"{len(prompts)} prompts")
         rids = []
-        for p in prompts:
+        for p, sp in zip(prompts, per_req):
             while self.scheduler.depth() >= self.cfg.max_queue:
                 self.step(stream)
-            rid = self.submit(p, max_new_tokens)
+            rid = self.submit(p, max_new_tokens, sampling=sp)
             if rid is None:
                 raise RuntimeError("queue admitted past max_queue")
             rids.append(rid)

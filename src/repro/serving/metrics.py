@@ -69,6 +69,8 @@ class ServingMetrics:
         self.completed = 0
         self.tokens_out = 0
         self.decode_tokens = 0                     # emitted by decode steps
+        self.drafted_tokens = 0                    # speculative proposals
+        self.accepted_tokens = 0                   # proposals that matched
         self.prefill_tokens = 0
         self.prefix_hit_tokens = 0                 # served from cached pages
         self.prefill_compiles = 0                  # distinct prefill traces
@@ -99,6 +101,15 @@ class ServingMetrics:
         token a prefill's final logits emit) — the numerator of
         ``decode_tokens_per_sec``."""
         self.decode_tokens += 1
+
+    def record_spec(self, drafted: int, accepted: int) -> None:
+        """One speculative verify retired: ``drafted`` tokens were
+        proposed, ``accepted`` of them matched the engine's own output
+        (``accept_rate = accepted / drafted`` in the summary).  The
+        accepted tokens themselves also flow through
+        ``record_decode_token`` — they are real output tokens."""
+        self.drafted_tokens += drafted
+        self.accepted_tokens += accepted
 
     def record_prefix_hit(self, n_tokens: int) -> None:
         """Prompt tokens served from shared cached pages instead of being
@@ -203,6 +214,10 @@ class ServingMetrics:
             "completed": self.completed,
             "tokens_out": self.tokens_out,
             "decode_tokens": self.decode_tokens,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "accept_rate": (self.accepted_tokens / self.drafted_tokens
+                            if self.drafted_tokens else 0.0),
             "prefill_tokens": self.prefill_tokens,
             "prefix_hit_rate": (self.prefix_hit_tokens / prompt_tokens
                                 if prompt_tokens else 0.0),

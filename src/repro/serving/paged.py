@@ -579,8 +579,8 @@ class PagedKVCachePool:
 
     # -- engine API --------------------------------------------------------
 
-    def alloc_prefix(self, rid: int, prompt: Sequence[int]
-                     ) -> Optional[Tuple[int, int]]:
+    def alloc_prefix(self, rid: int, prompt: Sequence[int], *,
+                     use_memo: bool = True) -> Optional[Tuple[int, int]]:
         """Allocate a slot for ``prompt``, mapping the longest cached
         page-aligned prefix read-only and private pages for the rest.
 
@@ -591,10 +591,16 @@ class PagedKVCachePool:
         until its chunked prefill completes.  Ring layouts allocate at most
         one table-width of pages up front: later blocks reuse cells in
         place (``prepare_chunk`` rotates them ahead of each write).
+
+        ``use_memo=False`` skips the greedy next-token memo promotion:
+        sampled requests must re-run the last prompt token for its
+        logits (the memo is the *greedy* continuation), so their full
+        hits stay at ``len(prompt) - 1`` cached tokens with a COW last
+        page.
         """
         plen = len(prompt)
         shared, cow_src, cached, seed, start_blk = self._plan(prompt)
-        if cow_src is not None and cached == plen - 1 and \
+        if use_memo and cow_src is not None and cached == plen - 1 and \
                 self.cached_next_token(prompt) is not None:
             # full hit with a remembered next token: the last block joins
             # the read-only mapping like every other — nothing re-runs, so
@@ -850,6 +856,27 @@ class PagedKVCachePool:
         if mask_slots:
             packed[list(mask_slots)] = 0
         return jnp.asarray(packed)
+
+    def rewind(self, slot: int, new_pos: int) -> None:
+        """Roll a slot's position back after a rejected speculative suffix.
+
+        The speculative verify advanced ``pos`` optimistically past its
+        drafted span; positions ``new_pos..`` now hold unverified K/V
+        that nothing will ever read (decode attends ``0..pos`` and the
+        next writes cover them — the same hygiene argument as page
+        reuse, see module docstring), so only host bookkeeping moves:
+        ``pos`` drops to ``new_pos`` and — contiguous layouts — blocks
+        wholly past the new position unbind, freeing their pages.  Ring
+        layouts keep their cells bound: the verify span was planned
+        rotation-free (``safe_decode_span``), so every touched block is
+        already the cell's incumbent and will simply be rewritten in
+        place as the sequence re-grows."""
+        assert new_pos >= 1, new_pos
+        if not self.layout.ring:
+            last_blk = (new_pos - 1) // self.page_size
+            for b in [b for b in self._blocks[slot] if b > last_blk]:
+                self._unbind(slot, b)
+        self.pos[slot] = new_pos
 
     def advance(self, skip=(), steps=None) -> None:
         """A decode dispatch happened: every decoding slot cached

@@ -13,7 +13,9 @@ Policies
                     lowest-priority running one preempts it: the victim's
                     slot is evicted and the victim re-queued with its
                     generated tokens folded into the prompt, so its eventual
-                    output is unchanged (greedy decode is deterministic).
+                    output is unchanged (greedy decode is deterministic, and
+                    sampled decode keys its PRNG by absolute token index —
+                    see ``serving/sampling.py`` — so resume replays exactly).
 
 ``max_prefills_per_step`` (formerly ``prefill_chunk``, kept as a deprecated
 ``ServeConfig`` alias) bounds how many *requests* may start prefilling per
@@ -33,6 +35,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ServeConfig
 from repro.obs import NULL_TRACER
+from repro.serving.sampling import GREEDY, SamplingParams
 
 
 @dataclass
@@ -43,6 +46,7 @@ class Request:
     max_new_tokens: int
     priority: int = 0                     # higher = more urgent
     deadline: Optional[float] = None      # absolute time, policy tiebreak
+    sampling: SamplingParams = GREEDY     # per-request generation params
     arrival_seq: int = 0                  # monotone admission counter
     # runtime state (owned by the engine)
     tokens: List[int] = field(default_factory=list)   # generated so far

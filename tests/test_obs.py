@@ -230,7 +230,9 @@ def test_null_tracer_is_strict_noop():
     assert n.close_all() == 0 and n.now() == 0.0
     # exporters accept it without branches
     assert phase_snapshot(n) == {"step_time_s": 0.0, "plan_time_s": 0.0,
+                                 "draft_time_s": 0.0,
                                  "prefill_time_s": 0.0, "decode_time_s": 0.0,
+                                 "verify_time_s": 0.0,
                                  "other_time_s": 0.0,
                                  "host_overhead_frac": 0.0}
     assert phase_coverage(n) == 1.0
@@ -315,8 +317,8 @@ def test_engine_traced_spans_balance_and_cover(dense_setup, tmp_path):
     s = eng.metrics.summary()
     assert s["step_time_s"] > 0
     assert s["step_time_s"] == pytest.approx(
-        s["plan_time_s"] + s["prefill_time_s"] + s["decode_time_s"]
-        + s["other_time_s"])
+        s["plan_time_s"] + s["draft_time_s"] + s["prefill_time_s"]
+        + s["decode_time_s"] + s["verify_time_s"] + s["other_time_s"])
     # every decode-loop token is attributed; first tokens come from prefill
     assert s["decode_tokens"] == s["tokens_out"] - s["completed"]
     assert s["decode_tokens_per_sec"] > 0 and s["prefill_tokens_per_sec"] > 0

@@ -1,0 +1,331 @@
+"""Per-request sampling + speculative decoding (serving/sampling.py,
+serving/spec.py, engine integration).
+
+The product guarantee under test: a request's tokens are a pure function
+of (prompt, SamplingParams) — the counter-based PRNG keys every draw by
+(request seed, absolute token index), so batch composition, slot
+assignment, preemption/resume, paged vs slotted layout, a 2x2 mesh, warm
+vs cold prefix caches and the pipeline depth must all be invisible in the
+output.  Speculative decoding rides the same guarantee: verification
+deterministically replays the engine's own sampler at each drafted
+position, so spec-on output is token-identical to spec-off, greedy and
+sampled alike.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import MeshConfig, ServeConfig, get_config
+from repro.serving import GREEDY, SamplingParams, ServingEngine
+from repro.serving.sampling import pack_params, sample_tokens
+from repro.serving.spec import NGramDrafter
+
+ARCHS = {
+    "full": ("qwen2.5-14b", {}),
+    "mla": ("deepseek-v2-lite-16b", {}),
+    "ring": ("mixtral-8x22b", {}),
+}
+
+#: one non-trivial sampled config reused across the matrix
+SAMPLED = SamplingParams(temperature=0.8, top_k=8, top_p=0.9, seed=13)
+
+
+def _cfg(kind):
+    arch, overrides = ARCHS[kind]
+    cfg = get_config(arch, smoke=True)
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def _prompts(rng, vocab, lengths):
+    return [list(rng.integers(0, vocab, (l,))) for l in lengths]
+
+
+def _rep_prompt(vocab, n=12, a=7, b=3):
+    """A repetitive prompt the n-gram drafter can always propose from."""
+    return ([a % vocab, b % vocab] * n)[:n]
+
+
+def _engine(cfg, depth=1, params=None, mesh_cfg=None, **kw):
+    base = dict(max_batch=2, max_seq_len=40, max_new_tokens=5,
+                decode_steps=2, kv_layout="paged",
+                page_size=8 if cfg.attn_kind == "mla" else 4,
+                pipeline_depth=depth)
+    base.update(kw)
+    return ServingEngine(cfg, ServeConfig(**base), params=params,
+                         mesh_cfg=mesh_cfg)
+
+
+# ---------------------------------------------------------------------------
+# Config seams: SamplingParams + ServeConfig spec knobs validate loudly
+# ---------------------------------------------------------------------------
+
+def test_sampling_params_validate():
+    p = SamplingParams(temperature=0.5, top_k=4, top_p=0.9, seed=7)
+    assert not p.greedy and GREEDY.greedy
+    assert SamplingParams(temperature=0.0).greedy
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    for bad_p in (0.0, 1.5, -0.2):
+        with pytest.raises(ValueError, match="top_p"):
+            SamplingParams(top_p=bad_p)
+    for bad_s in (-1, 2 ** 31):
+        with pytest.raises(ValueError, match="seed"):
+            SamplingParams(seed=bad_s)
+
+
+def test_serve_config_spec_knobs_validate():
+    ServeConfig(spec_tokens=8, enable_spec=False).validate()
+    with pytest.raises(ValueError, match="spec_tokens"):
+        ServeConfig(spec_tokens=0).validate()
+    with pytest.raises(ValueError, match="enable_spec"):
+        ServeConfig(enable_spec="yes").validate()
+
+
+def test_engine_rejects_non_sampling_params():
+    eng = _engine(_cfg("full"))
+    with pytest.raises(TypeError, match="sampling"):
+        eng.submit([1, 2, 3], sampling={"temperature": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# The sampler itself (pure device function)
+# ---------------------------------------------------------------------------
+
+def test_sample_tokens_greedy_and_determinism():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(4, 32)).astype(np.float32)
+    idx = np.arange(4, dtype=np.int32) + 10
+    packed = np.stack([pack_params(GREEDY)] * 4)
+    out = np.asarray(sample_tokens(logits, packed, idx))
+    assert (out == logits.argmax(-1)).all()        # temp 0 -> argmax
+    # top_k=1 pins the support to the argmax whatever the temperature
+    packed1 = np.stack([pack_params(SamplingParams(
+        temperature=2.0, top_k=1, seed=5))] * 4)
+    out1 = np.asarray(sample_tokens(logits, packed1, idx))
+    assert (out1 == logits.argmax(-1)).all()
+    # pure function of (logits, params, idx): row position is irrelevant
+    packed_s = np.stack([pack_params(SAMPLED)] * 4)
+    a = np.asarray(sample_tokens(logits, packed_s, idx))
+    b = np.asarray(sample_tokens(logits[::-1], packed_s[::-1], idx[::-1]))
+    assert (a == b[::-1]).all()
+    # ... but the counter index matters (different position, fresh draw)
+    low_t = np.stack([pack_params(SamplingParams(
+        temperature=5.0, seed=3))] * 4)
+    flat = np.zeros((4, 32), np.float32)           # uniform -> index decides
+    x = np.asarray(sample_tokens(flat, low_t, idx))
+    y = np.asarray(sample_tokens(flat, low_t, idx + 17))
+    assert (x != y).any()
+
+
+def test_ngram_drafter_proposes_continuations():
+    d = NGramDrafter(ngram=2)
+    hist = [1, 2, 3, 1, 2, 3, 1, 2]
+    assert d.propose(hist, 3) == (3, 1, 2)         # replay after [1, 2]
+    assert d.propose(hist + [9], 3) == ()          # unseen suffix [2, 9]
+    assert d.propose(hist, 0) == ()
+
+
+# ---------------------------------------------------------------------------
+# Reproducibility matrix: same (prompt, params) -> same tokens, everywhere
+# ---------------------------------------------------------------------------
+
+def test_sampled_invariant_to_batch_composition():
+    """The target request emits the same tokens served alone, batched with
+    greedy neighbours, and batched with other sampled requests."""
+    cfg = _cfg("full")
+    rng = np.random.default_rng(3)
+    target = _prompts(rng, cfg.vocab_size, [9])[0]
+    others = _prompts(rng, cfg.vocab_size, [7, 12, 5])
+    e = _engine(cfg, max_batch=2)
+    alone = e.generate([target], 5, sampling=SAMPLED)[0]
+    e2 = _engine(cfg, params=e.params, max_batch=2)
+    mixed = e2.generate([others[0], target, others[1]], 5,
+                        sampling=[None, SAMPLED, None])
+    assert mixed[1] == alone
+    e3 = _engine(cfg, params=e.params, max_batch=2)
+    allsamp = e3.generate(
+        [others[2], target], 5,
+        sampling=[SamplingParams(temperature=1.3, seed=99), SAMPLED])
+    assert allsamp[1] == alone
+
+
+@pytest.mark.parametrize("kind", sorted(ARCHS))
+def test_sampled_pipeline_depth_invariant(kind):
+    cfg = _cfg(kind)
+    rng = np.random.default_rng(4)
+    prompts = _prompts(rng, cfg.vocab_size, [7, 12, 5])
+    samp = [SAMPLED, None, SamplingParams(temperature=1.1, top_p=0.8,
+                                          seed=21)]
+    e1 = _engine(cfg, depth=1)
+    out1 = e1.generate(prompts, 5, sampling=samp)
+    e2 = _engine(cfg, depth=2, params=e1.params)
+    assert e2.generate(prompts, 5, sampling=samp) == out1
+
+
+def test_sampled_paged_matches_slotted():
+    cfg = _cfg("full")
+    rng = np.random.default_rng(5)
+    prompts = _prompts(rng, cfg.vocab_size, [6, 11])
+    e_paged = _engine(cfg)
+    out_paged = e_paged.generate(prompts, 5, sampling=SAMPLED)
+    e_slot = _engine(cfg, params=e_paged.params, kv_layout="slotted")
+    assert e_slot.generate(prompts, 5, sampling=SAMPLED) == out_paged
+
+
+def test_sampled_under_mesh_matches_single_device():
+    cfg = _cfg("full")
+    rng = np.random.default_rng(6)
+    prompts = _prompts(rng, cfg.vocab_size, [7, 11, 6, 9])
+    mesh_cfg = MeshConfig(shape=(2, 2), axis_names=("data", "model"))
+    e_mesh = _engine(cfg, depth=2, mesh_cfg=mesh_cfg, max_batch=4)
+    out_mesh = e_mesh.generate(prompts, 4, sampling=SAMPLED)
+    e_one = _engine(cfg, params=e_mesh.params, max_batch=4)
+    assert e_one.generate(prompts, 4, sampling=SAMPLED) == out_mesh
+
+
+def test_sampled_warm_vs_cold_prefix_cache():
+    """A warm prefix cache changes how much prefill runs, never which
+    tokens come out; the greedy next-token memo must not serve a sampled
+    request's first token."""
+    cfg = _cfg("full")
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, cfg.vocab_size, [12, 12])
+    prompts[1] = list(prompts[0])                  # identical prompts
+    eng = _engine(cfg, depth=2, enable_prefix_cache=True)
+    # greedy pass seeds the prefix cache AND the next-token memo
+    greedy_out = eng.generate(prompts, 5)
+    assert greedy_out[0] == greedy_out[1]
+    eng.metrics.reset()
+    eng.results.clear()
+    cold = _engine(cfg, params=eng.params,
+                   enable_prefix_cache=False).generate(
+        [prompts[0]], 5, sampling=SAMPLED)[0]
+    warm = eng.generate(prompts, 5, sampling=SAMPLED)
+    assert warm[0] == warm[1] == cold
+    assert eng.metrics.prefix_hit_tokens > 0       # pages were shared
+    assert cold != greedy_out[0]                   # sampling actually sampled
+
+
+def test_sampled_preemption_resume_exact():
+    """Page pressure evicts a sampled request mid-run; on resume it lands
+    in a different slot with a longer prompt — the counter-keyed PRNG
+    must replay the identical continuation."""
+    cfg = _cfg("full")
+    rng = np.random.default_rng(11)
+    prompts = _prompts(rng, cfg.vocab_size, [14, 15])
+    kw = dict(max_seq_len=32, max_new_tokens=12)
+    e_calm = _engine(cfg, **kw)
+    out_calm = e_calm.generate(prompts, 12, sampling=SAMPLED)
+    e_tight = _engine(cfg, depth=2, params=e_calm.params, num_pages=12, **kw)
+    out_tight = e_tight.generate(prompts, 12, sampling=SAMPLED)
+    assert e_tight.metrics.preemptions >= 1
+    assert out_tight == out_calm
+
+
+def test_greedy_params_identical_to_default_path():
+    """temperature=0 through the sampling machinery is byte-identical to
+    the plain greedy engine — including in a mixed batch, where greedy
+    rows ride the sampled scan."""
+    cfg = _cfg("full")
+    rng = np.random.default_rng(8)
+    prompts = _prompts(rng, cfg.vocab_size, [7, 12])
+    e = _engine(cfg)
+    plain = e.generate(prompts, 5)
+    e2 = _engine(cfg, params=e.params)
+    explicit = e2.generate(prompts, 5, sampling=SamplingParams())
+    assert explicit == plain
+    e3 = _engine(cfg, params=e.params, max_batch=2)
+    mixed = e3.generate([prompts[0], prompts[1]], 5,
+                        sampling=[None, SAMPLED])
+    assert mixed[0] == plain[0]
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: spec-on == spec-off, tokens and pool hygiene
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", sorted(ARCHS))
+def test_spec_identity_greedy(kind):
+    """Repetitive prompts make the drafter propose every cycle; accepted
+    or rejected, the output must match the spec-off engine exactly."""
+    cfg = _cfg(kind)
+    rng = np.random.default_rng(2)
+    prompts = [_rep_prompt(cfg.vocab_size, a=1, b=1),
+               _prompts(rng, cfg.vocab_size, [9])[0],
+               _rep_prompt(cfg.vocab_size, n=16, a=1, b=1)]
+    kw = dict(max_seq_len=48, max_new_tokens=16, spec_tokens=4)
+    e_off = _engine(cfg, enable_spec=False, **kw)
+    out_off = e_off.generate(prompts, 16)
+    e_on = _engine(cfg, params=e_off.params, enable_spec=True, **kw)
+    out_on = e_on.generate(prompts, 16)
+    assert e_on.metrics.drafted_tokens > 0, "spec never engaged"
+    assert out_on == out_off
+    # drained clean: no spec wait, no held pages, symmetric pending
+    assert not e_on._spec_wait and not e_on._pending
+    assert e_on.pool.pages_held == 0
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_spec_identity_sampled(depth):
+    """Verification replays the sampled distribution too: spec-on output
+    with temperature > 0 is identical to spec-off at both depths."""
+    cfg = _cfg("full")
+    rng = np.random.default_rng(14)
+    prompts = [_rep_prompt(cfg.vocab_size),
+               _prompts(rng, cfg.vocab_size, [8])[0]]
+    # top_k=1 rides the sampled lowering (temp > 0 -> categorical) while
+    # keeping the output cyclic enough for the bigram drafter to engage;
+    # the second request samples freely and must match spec-off too
+    samp = [SamplingParams(temperature=0.7, top_k=1, seed=42),
+            SamplingParams(temperature=0.6, top_k=4, seed=42)]
+    kw = dict(max_seq_len=48, max_new_tokens=14, spec_tokens=4)
+    e_off = _engine(cfg, enable_spec=False, **kw)
+    out_off = e_off.generate(prompts, 14, sampling=samp)
+    e_on = _engine(cfg, depth=depth, params=e_off.params, enable_spec=True,
+                   **kw)
+    out_on = e_on.generate(prompts, 14, sampling=samp)
+    assert e_on.metrics.drafted_tokens > 0
+    assert out_on == out_off
+
+
+def test_spec_acceptance_happens():
+    """Greedy decode of a tiny model falls into an argmax cycle; once the
+    generated history repeats, drafts are the model's own continuation
+    and must be accepted (accept_rate > 0), shrinking decode dispatches
+    without changing a single token."""
+    cfg = _cfg("full")
+    prompts = [_rep_prompt(cfg.vocab_size, n=8)]
+    kw = dict(max_seq_len=64, max_new_tokens=32, spec_tokens=8)
+    e_off = _engine(cfg, enable_spec=False, **kw)
+    out_off = e_off.generate(prompts, 32)
+    e_on = _engine(cfg, params=e_off.params, enable_spec=True, **kw)
+    out_on = e_on.generate(prompts, 32)
+    assert out_on == out_off
+    m = e_on.metrics
+    assert m.drafted_tokens > 0 and m.accepted_tokens > 0
+    s = m.summary()
+    assert 0.0 < s["accept_rate"] <= 1.0
+    assert s["accepted_tokens"] == m.accepted_tokens
+
+
+def test_spec_traced_phases_and_metrics(tmp_path):
+    """Traced spec run: step.draft and verify.device appear, the section
+    spans still tile the step (coverage >= 0.95), and the spec counters
+    flow through summary() and prometheus_text."""
+    from repro.obs import phase_coverage, prometheus_text
+    cfg = _cfg("full")
+    eng = _engine(cfg, depth=2, max_seq_len=64, max_new_tokens=24,
+                  spec_tokens=8, trace=True)
+    eng.generate([_rep_prompt(cfg.vocab_size, n=8)], 24)
+    tr = eng.tracer
+    assert tr.open_spans() == []
+    assert phase_coverage(tr) >= 0.95
+    names = {e[1] for e in tr.events}
+    assert {"step.draft", "verify.device"} <= names
+    s = eng.metrics.summary()
+    assert s["drafted_tokens"] > 0
+    assert s["verify_time_s"] > 0 and s["draft_time_s"] > 0
+    txt = prometheus_text(s, tr)
+    assert "repro_serving_accept_rate" in txt
+    assert 'repro_serving_phase_seconds{phase="verify.device"}' in txt
