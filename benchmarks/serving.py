@@ -98,11 +98,15 @@ REQUIRED_PREFIX_KEYS = ("hit", "cold", "slotted_tokens_per_sec",
 #: speculative-decoding workload section (repetitive traffic, spec on/off)
 REQUIRED_SPEC_KEYS = ("on", "off", "accept_rate", "speedup",
                       "token_identical")
-#: per-arch traced-attribution section (repro.obs): where the cycle goes
+#: per-arch traced-attribution section (repro.obs): where the cycle goes;
+#: ``prefill_kernel`` records whether the Pallas paged kernels (decode +
+#: chunked prefill + verify) drove the pass — backend-selected, so the
+#: trajectory's prefill_device_frac is attributable to the right path
 REQUIRED_PHASE_KEYS = ("step_time_s", "plan_frac", "prefill_device_frac",
                        "decode_device_frac", "other_frac",
                        "host_overhead_frac", "coverage",
-                       "decode_tokens_per_sec", "prefill_tokens_per_sec")
+                       "decode_tokens_per_sec", "prefill_tokens_per_sec",
+                       "prefill_kernel")
 #: CI bar for host glue between device calls on the traced smoke pass —
 #: the number the pipelined submit/retire refactor drives down (was
 #: 0.49/0.45/0.37 across the smoke archs on the synchronous engine)
@@ -237,6 +241,7 @@ def _traced_attribution(arch, requests, batch, prompt_len, max_new,
             "coverage": phase_coverage(engine.tracer),
             "decode_tokens_per_sec": s["decode_tokens_per_sec"],
             "prefill_tokens_per_sec": s["prefill_tokens_per_sec"],
+            "prefill_kernel": bool(engine.paged_kernel),
         }
         if best is None or out[HOST_OVERHEAD_FRAC] < best[HOST_OVERHEAD_FRAC]:
             best = out
@@ -564,6 +569,8 @@ def main():
                   f"kv_saved={record['kv_bytes_saved_ratio']:.2f} "
                   f"phase_coverage={ph['coverage']:.2f} "
                   f"decode_frac={ph['decode_device_frac']:.2f} "
+                  f"prefill_frac={ph['prefill_device_frac']:.2f} "
+                  f"prefill_kernel={ph['prefill_kernel']} "
                   f"host_overhead={ph['host_overhead_frac']:.2f} "
                   f"accept_rate={(sp or {}).get('accept_rate', 0.0):.2f} "
                   f"spec_speedup={(sp or {}).get('speedup', 0.0):.2f} "

@@ -327,6 +327,12 @@ class ServeConfig:
     prefill_chunk_tokens: int = 0      # chunked prefill size (0 = whole)
     trace: bool = False                # repro.obs engine tracing (fenced)
     trace_capacity: int = 1 << 16      # trace ring-buffer bound (events)
+    # Pallas paged-attention kernels (decode + chunked prefill + verify).
+    # None = auto (kernels on TPU, jnp gather path elsewhere); True forces
+    # the kernels everywhere (interpret mode off-TPU — slow but correct,
+    # what the CI smoke job and the kernel-identity tests run); False
+    # forces the jnp gather path even on TPU.
+    use_pallas: Optional[bool] = None
     # deprecated alias for max_prefills_per_step (folded in __post_init__)
     prefill_chunk: Optional[int] = None
 
@@ -398,6 +404,11 @@ class ServeConfig:
             if not isinstance(getattr(self, knob), bool):
                 raise ValueError(f"{knob}={getattr(self, knob)!r} must be "
                                  "a bool")
+        if self.use_pallas is not None \
+                and not isinstance(self.use_pallas, bool):
+            raise ValueError(
+                f"use_pallas={self.use_pallas!r} must be None (auto: "
+                "kernels on TPU only) or a bool")
         # slotted never pages, so page_size is inert there; "auto" may
         # resolve to paged, so it must satisfy the block-hashing constraint
         if self.enable_prefix_cache and self.kv_layout != "slotted" \

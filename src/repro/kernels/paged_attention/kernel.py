@@ -1,12 +1,14 @@
-"""Paged-attention decode TPU kernels (vLLM-style, scalar-prefetched pages).
+"""Paged-attention TPU kernels (vLLM-style, scalar-prefetched pages).
 
 One decode step attends each slot's single query against a cache scattered
-across a global page pool.  The page table is a *scalar-prefetch* operand
-(``pltpu.PrefetchScalarGridSpec``): BlockSpec index maps read it to decide
-which physical page to DMA into VMEM for each grid step, so HBM traffic is
-``pages_held``, not ``slots x max_pages`` — the whole point of paging.
+across a global page pool; one prefill chunk attends a *block of causal
+queries* against the same pages.  The page table is a *scalar-prefetch*
+operand (``pltpu.PrefetchScalarGridSpec``): BlockSpec index maps read it to
+decide which physical page to DMA into VMEM for each grid step, so HBM
+traffic is ``pages_held``, not ``slots x max_pages`` — the whole point of
+paging.
 
-Two kernels, one per page geometry (see ``repro.serving.layouts``):
+Decode kernels, one per page geometry (see ``repro.serving.layouts``):
 
   * ``paged_attention_kernel`` — per-head k/v pages for GQA, covering both
     the contiguous ("kv") and ring-wrapped ("window") layouts.  For the
@@ -20,16 +22,38 @@ Two kernels, one per page geometry (see ``repro.serving.layouts``):
     the kernel's HBM traffic is the *compressed* cache — the reason MLA
     pages at the latent rank instead of materialized heads.
 
-Grid: ``(slots[, KV], n_table)`` with the page dimension sequential
-("arbitrary"); the online-softmax state (m, l, acc) lives in VMEM scratch
-and carries across a slot's pages, exactly like the kv-block dimension of
-``flash_attention``.  Pages past a slot's valid cells are skipped at grid
-level (``pl.when``) — their table entries point at the trash page (page 0)
-and cost no MXU cycles.
+Chunked-prefill kernels (one bucketed chunk of a single request; the
+engine's ``paged_prefill_apply`` / ``lm_paged_verify`` path):
 
-Layouts (see ref.py): q [slots, KV, G, hd]; k/v pages [P, ps, KV, hd];
-q_lat [slots, H, R]; ckv pages [P, ps, R]; page_table [slots, n_table]
-int32; lengths [slots] int32.
+  * ``paged_prefill_kernel`` — contiguous pages already hold the chunk's
+    freshly written K/V (positions ``start..start+n_valid-1``), so the
+    chunk's causal queries attend pages only: key validity is the
+    written-so-far bound ``idx < start + n_valid`` AND the causal horizon
+    ``idx <= start + i``.
+  * ``paged_ring_prefill_kernel`` — snapshot-before-write semantics: the
+    chunk's writes wrap onto ring cells its own early queries still need,
+    so the kernel streams the *pre-write* ring snapshot (ring-arithmetic
+    key positions, same ``p >= 0`` liveness mask as decode) plus the
+    chunk's own K/V as a separate blocked operand, matching the jnp
+    path's gather-before-write contract.
+  * ``paged_mla_prefill_kernel`` — absorbed MLA: latent-space queries
+    against ckv/krope pages, output stays latent (the caller up-projects
+    through W_uv) — per-head K/V are never materialized.
+
+Grid: ``(slots | KV[, n_q_blocks], n_table)`` with the page dimension
+sequential ("arbitrary"); the online-softmax state (m, l, acc) lives in
+VMEM scratch and carries across a slot's pages, exactly like the kv-block
+dimension of ``flash_attention``.  Pages past a slot's valid cells are
+skipped at grid level (``pl.when``) — their table entries point at the
+trash page (page 0) and cost no MXU cycles.  Prefill additionally skips
+(a) whole query blocks past the chunk's ``n_valid`` tail (a mostly-empty
+bucket no longer pays full attention tiles for its padding rows) and
+(b) pages past each query block's causal horizon.
+
+Layouts (see ref.py): q [slots, KV, G, hd] (prefill: [S, KV, G, hd]);
+k/v pages [P, ps, KV, hd]; q_lat [slots, H, R]; ckv pages [P, ps, R];
+page_table [slots, n_table] int32 (prefill: one row [n_table]); lengths
+[slots] int32 (prefill: meta [2] int32 = start, n_valid).
 """
 from __future__ import annotations
 
@@ -233,3 +257,364 @@ def paged_mla_kernel(q_lat, q_rope, ckv_pages, krope_pages, page_table,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(page_table, lengths, q_lat, q_rope, ckv_pages, krope_pages)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: one bucketed chunk of a single request vs its pages
+# ---------------------------------------------------------------------------
+
+def _prefill_q_block(S: int) -> int:
+    """Query-block height: the whole bucket up to 128 rows, 128-row tiles
+    beyond (buckets are powers of two, so 128 divides any larger S)."""
+    return S if S % 128 else 128
+
+
+def _online_update(m_scr, l_scr, acc_scr, sc, v):
+    """One masked score block folded into the (m, l, acc) scratch state."""
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    pr = jnp.exp(sc - m_new)
+    l_scr[...] = l_prev * corr + jnp.sum(pr, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        pr, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
+def _paged_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_scr, l_scr, acc_scr, *, scale: float,
+                          page_size: int, n_table: int, q_block: int,
+                          groups: int):
+    qi = pl.program_id(1)
+    p = pl.program_id(2)
+    start = meta_ref[0]
+    n_valid = meta_ref[1]
+    q0 = qi * q_block
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    limit = start + n_valid                    # keys written so far
+    base = p * page_size
+    # grid-level skips: a bucket-tail query block (all padding rows) costs
+    # no MXU cycles, and a page only scores when it holds a key some query
+    # of this block can see (written bound AND the block's causal horizon)
+    horizon = jnp.minimum(limit, start + q0 + q_block)
+
+    @pl.when((q0 < n_valid) & (base < horizon))
+    def _compute():
+        hd = q_ref.shape[-1]
+        q = q_ref[:, 0].astype(jnp.float32).reshape(-1, hd)  # [qb*G, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)               # [ps, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        sc = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [qb*G, ps]
+        r = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+        c = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        qpos = start + q0 + r // groups        # row r = query (r // G)
+        kidx = base + c
+        sc = jnp.where((kidx < limit) & (kidx <= qpos), sc, NEG_INF)
+        _online_update(m_scr, l_scr, acc_scr, sc, v)
+
+    @pl.when(p == n_table - 1)
+    def _finish():
+        qb, _, G, hd = o_ref.shape
+        o_ref[:, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)) \
+            .reshape(qb, G, hd).astype(o_ref.dtype)
+
+
+def paged_prefill_kernel(q, k_pages, v_pages, page_table, meta, *,
+                         interpret: bool = False):
+    """Contiguous-layout chunked prefill.  q: [S, KV, G, hd] — one
+    request's bucketed chunk (post-rope); k/v_pages: [P, ps, KV, hd] —
+    the pool AFTER the chunk's K/V were scattered in; page_table: [n]
+    int32 — this request's row (0-padded tail = trash); meta: [2] int32 =
+    (start, n_valid).  Query i holds absolute position ``start + i``;
+    padding rows (i >= n_valid) are skipped at grid level and come back 0.
+
+    Returns [S, KV, G, hd] in q.dtype.
+    """
+    S, KV, G, hd = q.shape
+    ps = k_pages.shape[1]
+    n_table = page_table.shape[0]
+    qb = _prefill_q_block(S)
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale,
+                               page_size=ps, n_table=n_table, q_block=qb,
+                               groups=G)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(KV, S // qb, n_table),
+        in_specs=[
+            pl.BlockSpec((qb, 1, G, hd),
+                         lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda h, qi, p, pt, mt: (pt[p], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda h, qi, p, pt, mt: (pt[p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((qb, 1, G, hd),
+                               lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qb * G, 1), jnp.float32),    # m
+            pltpu.VMEM((qb * G, 1), jnp.float32),    # l
+            pltpu.VMEM((qb * G, hd), jnp.float32),   # acc
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, KV, G, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, meta, q, k_pages, v_pages)
+
+
+def _paged_ring_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref,
+                               ck_ref, cv_ref, o_ref, m_scr, l_scr, acc_scr,
+                               *, scale: float, page_size: int, n_table: int,
+                               n_chunk: int, q_block: int, groups: int,
+                               window: int):
+    qi = pl.program_id(1)
+    p = pl.program_id(2)
+    start = meta_ref[0]
+    n_valid = meta_ref[1]
+    q0 = qi * q_block
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _scores(k):
+        hd = q_ref.shape[-1]
+        q = q_ref[:, 0].astype(jnp.float32).reshape(-1, hd)
+        sc = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [qb*G, ·]
+        r = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+        c = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        return sc, start + q0 + r // groups, c
+
+    # --- pre-write ring snapshot: positions < start, ring arithmetic ---
+    # live cells hold positions [max(0, start - window), start) — exactly
+    # min(start, window) of them, from cell 0 up
+    base = p * page_size
+
+    @pl.when((p < n_table) & (q0 < n_valid)
+             & (base < jnp.minimum(start, window)))
+    def _ring():
+        k = k_ref[0, :, 0].astype(jnp.float32)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        sc, qpos, c = _scores(k)
+        idx = base + c
+        cur = start - 1
+        kpos = cur - jnp.mod(cur - idx, window)  # < 0 = never written
+        # snapshot keys all precede the chunk, so causality is implied;
+        # the window mask drops wrapped-over and out-of-window cells
+        sc = jnp.where((kpos >= 0) & (kpos > qpos - window), sc, NEG_INF)
+        _online_update(m_scr, l_scr, acc_scr, sc, v)
+
+    # --- the chunk's own K/V (freshly projected, NOT read from pages) ---
+    j0 = (p - n_table) * page_size
+
+    @pl.when((p >= n_table) & (q0 < n_valid)
+             & (j0 < jnp.minimum(n_valid, q0 + q_block)))
+    def _chunk():
+        k = ck_ref[:, 0].astype(jnp.float32)                 # [ps, hd]
+        v = cv_ref[:, 0].astype(jnp.float32)
+        sc, qpos, c = _scores(k)
+        j = j0 + c
+        kpos = start + j
+        sc = jnp.where((j < n_valid) & (kpos <= qpos)
+                       & (kpos > qpos - window), sc, NEG_INF)
+        _online_update(m_scr, l_scr, acc_scr, sc, v)
+
+    @pl.when(p == n_table + n_chunk - 1)
+    def _finish():
+        qb, _, G, hd = o_ref.shape
+        o_ref[:, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)) \
+            .reshape(qb, G, hd).astype(o_ref.dtype)
+
+
+def paged_ring_prefill_kernel(q, k_pages, v_pages, chunk_k, chunk_v,
+                              page_table, meta, *, window: int,
+                              interpret: bool = False):
+    """Ring-layout (sliding-window/local) chunked prefill,
+    snapshot-before-write semantics.  q: [S, KV, G, hd]; k/v_pages:
+    [P, ps, KV, hd] — the pool BEFORE the chunk's writes (the chunk wraps
+    onto cells its own early queries still need); chunk_k/chunk_v:
+    [S, KV, hd] — the chunk's own post-rope keys/values; page_table: [n]
+    int32 — the request's ring of ``window // ps`` cells; meta: [2] int32
+    = (start, n_valid).  The grid walks ring cells then chunk blocks; the
+    sliding-window mask keeps every wrapped-over snapshot cell out of the
+    scores.  Returns [S, KV, G, hd] in q.dtype.
+    """
+    S, KV, G, hd = q.shape
+    ps = k_pages.shape[1]
+    n_table = page_table.shape[0]
+    qb = _prefill_q_block(S)
+    scale = hd ** -0.5
+    pad = (-S) % ps                            # block chunk keys at ps
+    if pad:
+        chunk_k = jnp.pad(chunk_k, ((0, pad), (0, 0), (0, 0)))
+        chunk_v = jnp.pad(chunk_v, ((0, pad), (0, 0), (0, 0)))
+    n_chunk = chunk_k.shape[0] // ps
+
+    kernel = functools.partial(_paged_ring_prefill_kernel, scale=scale,
+                               page_size=ps, n_table=n_table,
+                               n_chunk=n_chunk, q_block=qb, groups=G,
+                               window=window)
+
+    # chunk-phase steps clamp the page index to the trash page and ring-
+    # phase steps clamp the chunk block to 0: the inactive operand's DMA
+    # repeats one index, which the pipeline dedupes — no extra HBM traffic
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(KV, S // qb, n_table + n_chunk),
+        in_specs=[
+            pl.BlockSpec((qb, 1, G, hd),
+                         lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda h, qi, p, pt, mt: (
+                             jnp.where(p < n_table,
+                                       pt[jnp.minimum(p, n_table - 1)], 0),
+                             0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda h, qi, p, pt, mt: (
+                             jnp.where(p < n_table,
+                                       pt[jnp.minimum(p, n_table - 1)], 0),
+                             0, h, 0)),
+            pl.BlockSpec((ps, 1, hd),
+                         lambda h, qi, p, pt, mt: (
+                             jnp.where(p >= n_table, p - n_table, 0), h, 0)),
+            pl.BlockSpec((ps, 1, hd),
+                         lambda h, qi, p, pt, mt: (
+                             jnp.where(p >= n_table, p - n_table, 0), h, 0)),
+        ],
+        out_specs=pl.BlockSpec((qb, 1, G, hd),
+                               lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qb * G, 1), jnp.float32),    # m
+            pltpu.VMEM((qb * G, 1), jnp.float32),    # l
+            pltpu.VMEM((qb * G, hd), jnp.float32),   # acc
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, KV, G, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, meta, q, k_pages, v_pages, chunk_k, chunk_v)
+
+
+def _paged_mla_prefill_kernel(pt_ref, meta_ref, ql_ref, qr_ref, ckv_ref,
+                              kr_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                              scale: float, page_size: int, n_table: int,
+                              q_block: int, heads: int):
+    qi = pl.program_id(0)
+    p = pl.program_id(1)
+    start = meta_ref[0]
+    n_valid = meta_ref[1]
+    q0 = qi * q_block
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    limit = start + n_valid
+    base = p * page_size
+    horizon = jnp.minimum(limit, start + q0 + q_block)
+
+    @pl.when((q0 < n_valid) & (base < horizon))
+    def _compute():
+        R = ql_ref.shape[-1]
+        rp = qr_ref.shape[-1]
+        ql = ql_ref[...].astype(jnp.float32).reshape(-1, R)  # [qb*H, R]
+        qr = qr_ref[...].astype(jnp.float32).reshape(-1, rp)
+        ckv = ckv_ref[0].astype(jnp.float32)                 # [ps, R]
+        kr = kr_ref[0].astype(jnp.float32)                   # [ps, rp]
+        sc = jax.lax.dot_general(
+            ql, ckv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        sc = sc + jax.lax.dot_general(
+            qr, kr, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        sc = sc * scale                                      # [qb*H, ps]
+        r = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+        c = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        qpos = start + q0 + r // heads
+        kidx = base + c
+        sc = jnp.where((kidx < limit) & (kidx <= qpos), sc, NEG_INF)
+        _online_update(m_scr, l_scr, acc_scr, sc, ckv)       # acc latent
+
+    @pl.when(p == n_table - 1)
+    def _finish():
+        qb, H, R = o_ref.shape
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)) \
+            .reshape(qb, H, R).astype(o_ref.dtype)
+
+
+def paged_mla_prefill_kernel(q_lat, q_rope, ckv_pages, krope_pages,
+                             page_table, meta, *, scale: float,
+                             interpret: bool = False):
+    """Absorbed-MLA chunked prefill against latent pages (contiguous).
+    q_lat: [S, H, R] — the chunk's queries absorbed through W_uk; q_rope:
+    [S, H, rp]; ckv/krope_pages hold the chunk's freshly written latents;
+    page_table: [n] int32; meta: [2] int32 = (start, n_valid); ``scale``
+    the qk-dimension softmax scale.  Pages stream as compressed latents —
+    per-head K/V are never materialized — and the output stays in the
+    latent space [S, H, R] (the caller up-projects through W_uv).
+    """
+    S, H, R = q_lat.shape
+    rp = q_rope.shape[-1]
+    ps = ckv_pages.shape[1]
+    n_table = page_table.shape[0]
+    qb = _prefill_q_block(S)
+
+    kernel = functools.partial(_paged_mla_prefill_kernel, scale=scale,
+                               page_size=ps, n_table=n_table, q_block=qb,
+                               heads=H)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S // qb, n_table),
+        in_specs=[
+            pl.BlockSpec((qb, H, R), lambda qi, p, pt, mt: (qi, 0, 0)),
+            pl.BlockSpec((qb, H, rp), lambda qi, p, pt, mt: (qi, 0, 0)),
+            pl.BlockSpec((1, ps, R), lambda qi, p, pt, mt: (pt[p], 0, 0)),
+            pl.BlockSpec((1, ps, rp), lambda qi, p, pt, mt: (pt[p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((qb, H, R),
+                               lambda qi, p, pt, mt: (qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qb * H, 1), jnp.float32),    # m
+            pltpu.VMEM((qb * H, 1), jnp.float32),    # l
+            pltpu.VMEM((qb * H, R), jnp.float32),    # acc (latent space)
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, H, R), q_lat.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, meta, q_lat, q_rope, ckv_pages, krope_pages)

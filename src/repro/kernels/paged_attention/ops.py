@@ -1,25 +1,51 @@
-"""jit'd public wrappers: paged-attention decode in the serving pool's
-layouts.
+"""jit'd public wrappers: paged attention in the serving pool's layouts.
 
 Dispatch mirrors ``flash_attention``: the traced jnp path (ref semantics,
 gather-all) is the portable default the serving engine runs everywhere; the
 Pallas kernels (``use_kernel=True``) are the TPU fast path whose HBM
-traffic scales with pages actually held.  One wrapper per page geometry:
-``paged_attention`` covers the per-head k/v layouts (contiguous "kv" and
-ring "window" — ``window > 0`` flips the position mapping), and
-``paged_mla_attention`` the latent ckv/krope layout (absorbed MLA decode;
-scores and output stay in the latent space).  All share the head
-conventions of ``repro.models.attention``."""
+traffic scales with pages actually held.  Off-TPU, ``use_kernel=True``
+transparently runs the kernels in interpret mode (the backend selection
+the engine's ``ServeConfig.use_pallas`` override and the CI smoke job rely
+on), so kernel code paths stay exercised everywhere.
+
+Decode wrappers, one per page geometry: ``paged_attention`` covers the
+per-head k/v layouts (contiguous "kv" and ring "window" — ``window > 0``
+flips the position mapping), and ``paged_mla_attention`` the latent
+ckv/krope layout (absorbed MLA decode; scores and output stay in the
+latent space).  Chunked-prefill wrappers follow the same contract for one
+request's bucketed chunk: ``paged_prefill`` (contiguous; pages already
+hold the chunk's K/V), ``paged_ring_prefill`` (snapshot-before-write ring
+semantics; the chunk's own K/V ride along), ``paged_mla_prefill``
+(absorbed latent queries, latent output).  All share the head conventions
+of ``repro.models.attention``."""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.paged_attention.kernel import (paged_attention_kernel,
-                                                  paged_mla_kernel)
+                                                  paged_mla_kernel,
+                                                  paged_mla_prefill_kernel,
+                                                  paged_prefill_kernel,
+                                                  paged_ring_prefill_kernel)
 from repro.kernels.paged_attention.ref import (paged_attention_ref,
-                                               paged_mla_attention_ref)
+                                               paged_mla_attention_ref,
+                                               paged_mla_prefill_ref,
+                                               paged_prefill_ref,
+                                               paged_ring_prefill_ref)
+
+
+def _interp(interpret: bool) -> bool:
+    """Kernels only lower on TPU; everywhere else ``use_kernel=True`` means
+    the Pallas interpreter (correctness-identical, CI-exercisable)."""
+    return interpret or jax.default_backend() != "tpu"
+
+
+def _meta(start, n_valid):
+    return jnp.stack([jnp.asarray(start, jnp.int32),
+                      jnp.asarray(n_valid, jnp.int32)])
 
 
 @functools.partial(jax.jit,
@@ -40,7 +66,7 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
     G = H // KV
     out = paged_attention_kernel(q.reshape(slots, KV, G, hd), k_pages,
                                  v_pages, page_table, lengths,
-                                 window=window, interpret=interpret)
+                                 window=window, interpret=_interp(interpret))
     return out.reshape(slots, H, hd)
 
 
@@ -60,4 +86,70 @@ def paged_mla_attention(q_lat, q_rope, ckv_pages, krope_pages, page_table,
                                        scale=scale)
     return paged_mla_kernel(q_lat, q_rope, ckv_pages, krope_pages,
                             page_table, lengths, scale=scale,
-                            interpret=interpret)
+                            interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def paged_prefill(q, k_pages, v_pages, page_table, start, n_valid, *,
+                  use_kernel: bool = False, interpret: bool = False):
+    """Contiguous-layout chunked prefill.  q: [S, H, hd] — one request's
+    bucketed chunk (post-rope; query i holds absolute position
+    ``start + i``); k/v_pages: [P, ps, KV, hd] — the pool AFTER the
+    chunk's K/V were scattered in; page_table: [n] int32 — the request's
+    row (0-padded tail = trash); start / n_valid traced scalars.  Rows
+    past ``n_valid`` are bucket padding — their output is undefined and
+    must not be read.  Returns [S, H, hd] in q.dtype."""
+    S, H, hd = q.shape
+    if not use_kernel:
+        return paged_prefill_ref(q, k_pages, v_pages, page_table, start,
+                                 n_valid)
+    KV = k_pages.shape[2]
+    out = paged_prefill_kernel(q.reshape(S, KV, H // KV, hd), k_pages,
+                               v_pages, page_table, _meta(start, n_valid),
+                               interpret=_interp(interpret))
+    return out.reshape(S, H, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "use_kernel", "interpret"))
+def paged_ring_prefill(q, k_pages, v_pages, chunk_k, chunk_v, page_table,
+                       start, n_valid, *, window: int,
+                       use_kernel: bool = False, interpret: bool = False):
+    """Ring-layout (sliding-window/local) chunked prefill with
+    snapshot-before-write semantics: k/v_pages are the pool BEFORE the
+    chunk's writes and chunk_k/chunk_v [S, KV, hd] are the chunk's own
+    post-rope keys/values (its writes wrap onto ring cells its early
+    queries still need, so they must not be read back through the table).
+    Returns [S, H, hd] in q.dtype."""
+    S, H, hd = q.shape
+    if not use_kernel:
+        return paged_ring_prefill_ref(q, k_pages, v_pages, chunk_k,
+                                      chunk_v, page_table, start, n_valid,
+                                      window=window)
+    KV = k_pages.shape[2]
+    out = paged_ring_prefill_kernel(q.reshape(S, KV, H // KV, hd), k_pages,
+                                    v_pages, chunk_k, chunk_v, page_table,
+                                    _meta(start, n_valid), window=window,
+                                    interpret=_interp(interpret))
+    return out.reshape(S, H, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "use_kernel", "interpret"))
+def paged_mla_prefill(q_lat, q_rope, ckv_pages, krope_pages, page_table,
+                      start, n_valid, *, scale: float,
+                      use_kernel: bool = False, interpret: bool = False):
+    """Absorbed-MLA chunked prefill against latent pages (contiguous).
+    q_lat: [S, H, R] — the chunk's queries absorbed through W_uk; q_rope:
+    [S, H, rp]; ckv/krope_pages hold the chunk's freshly written latents;
+    ``scale`` the qk-dimension softmax scale.  Pages stream compressed —
+    per-head K/V are never materialized.  Returns the latent-space output
+    [S, H, R] in q_lat.dtype — the caller up-projects through W_uv."""
+    if not use_kernel:
+        return paged_mla_prefill_ref(q_lat, q_rope, ckv_pages, krope_pages,
+                                     page_table, start, n_valid,
+                                     scale=scale)
+    return paged_mla_prefill_kernel(q_lat, q_rope, ckv_pages, krope_pages,
+                                    page_table, _meta(start, n_valid),
+                                    scale=scale,
+                                    interpret=_interp(interpret))

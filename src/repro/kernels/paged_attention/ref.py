@@ -97,3 +97,104 @@ def paged_mla_attention_ref(q_lat, q_rope, ckv_pages, krope_pages,
     out = jnp.einsum("sht,str->shr", p, ckv.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
     return out.astype(q_lat.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill oracles (one bucketed chunk of a single request)
+#
+# q is [S, H, hd] (H = KV * G); page_table is the request's single row [n];
+# start / n_valid are traced scalars — query i holds absolute position
+# ``start + i``, the bucket tail (i >= n_valid) is padding.  Bucket-tail
+# output rows are garbage in both the oracle and the kernel (the kernel
+# skips them at grid level and emits 0) — callers only ever read rows
+# < n_valid, and tests must compare only those.
+# ---------------------------------------------------------------------------
+
+def _prefill_attend(q, k, v, valid, scale):
+    """Masked full-softmax core: q [S, KV, G, hd], k/v [T, KV, hd],
+    valid [S, T] -> [S, KV*G, hd]."""
+    S, KV, G, hd = q.shape
+    s = jnp.einsum("skgh,tkh->skgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("skgt,tkh->skgh", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(S, KV * G, hd)
+
+
+def paged_prefill_ref(q, k_pages, v_pages, page_table, start, n_valid):
+    """Contiguous-layout chunked prefill: the pages already hold the
+    chunk's K/V (positions start..start+n_valid-1), so queries attend the
+    gathered pages under the written bound AND the causal horizon.
+    Returns [S, H, hd] in q.dtype."""
+    S, H, hd = q.shape
+    _, ps, KV, _ = k_pages.shape
+    n = page_table.shape[0]
+    k = k_pages[page_table].reshape(n * ps, KV, hd)
+    v = v_pages[page_table].reshape(n * ps, KV, hd)
+    kidx = jnp.arange(n * ps)
+    qpos = start + jnp.arange(S)
+    valid = (kidx[None, :] < start + n_valid) \
+        & (kidx[None, :] <= qpos[:, None])
+    out = _prefill_attend(q.reshape(S, KV, H // KV, hd), k, v, valid,
+                          hd ** -0.5)
+    return out.astype(q.dtype)
+
+
+def paged_ring_prefill_ref(q, k_pages, v_pages, chunk_k, chunk_v,
+                           page_table, start, n_valid, *, window: int):
+    """Ring-layout chunked prefill, snapshot-before-write semantics: the
+    pages are the PRE-write ring snapshot (the chunk's writes wrap onto
+    cells its own early queries still need) and the chunk's own keys/
+    values ride along as [S, KV, hd] operands.  Key positions follow the
+    ring formula for the snapshot and ``start + j`` for the chunk; the
+    sliding-window mask excludes every wrapped-over snapshot cell.
+    Returns [S, H, hd] in q.dtype."""
+    S, H, hd = q.shape
+    _, ps, KV, _ = k_pages.shape
+    n = page_table.shape[0]
+    ring_k = k_pages[page_table].reshape(n * ps, KV, hd)
+    ring_v = v_pages[page_table].reshape(n * ps, KV, hd)
+    cur = start - 1
+    i = jnp.arange(n * ps)
+    ring_pos = cur - jnp.mod(cur - i, window)       # < 0 = never written
+    kk = jnp.concatenate([ring_k, chunk_k.astype(ring_k.dtype)], axis=0)
+    vv = jnp.concatenate([ring_v, chunk_v.astype(ring_v.dtype)], axis=0)
+    k_pos = jnp.concatenate([ring_pos, start + jnp.arange(S)])
+    k_ok = jnp.concatenate([ring_pos >= 0, jnp.arange(S) < n_valid])
+    qpos = start + jnp.arange(S)
+    valid = k_ok[None, :] & (k_pos[None, :] <= qpos[:, None]) \
+        & (k_pos[None, :] > qpos[:, None] - window)
+    out = _prefill_attend(q.reshape(S, KV, H // KV, hd), kk, vv, valid,
+                          hd ** -0.5)
+    return out.astype(q.dtype)
+
+
+def paged_mla_prefill_ref(q_lat, q_rope, ckv_pages, krope_pages,
+                          page_table, start, n_valid, *, scale: float):
+    """Absorbed-MLA chunked prefill against latent pages (contiguous).
+    q_lat [S, H, R] — queries absorbed through W_uk; pages hold the
+    chunk's freshly written latents.  Returns the latent-space output
+    [S, H, R] in q_lat.dtype — the caller up-projects through W_uv."""
+    S, H, R = q_lat.shape
+    _, ps, _ = ckv_pages.shape
+    n = page_table.shape[0]
+    ckv = ckv_pages[page_table].reshape(n * ps, R)
+    kr = krope_pages[page_table].reshape(n * ps, krope_pages.shape[-1])
+    s = jnp.einsum("shr,tr->sht", q_lat.astype(jnp.float32),
+                   ckv.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("shr,tr->sht", q_rope.astype(jnp.float32),
+                       kr.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    kidx = jnp.arange(n * ps)
+    qpos = start + jnp.arange(S)
+    valid = (kidx[None, :] < start + n_valid) \
+        & (kidx[None, :] <= qpos[:, None])
+    s = jnp.where(valid[:, None, :], s * scale, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("sht,tr->shr", p, ckv.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q_lat.dtype)

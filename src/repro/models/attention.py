@@ -387,7 +387,8 @@ def paged_latent_prefill_write(kv, ckv_new, krope_new, page_ids, start,
     }
 
 
-def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid):
+def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid,
+                        *, use_pallas: bool = False):
     """Prefill-chunk GQA self-attention directly against the page pool.
 
     x [1, S, D] — one request's chunk, padded to a power-of-two bucket;
@@ -396,19 +397,24 @@ def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid):
     first (pages covering the cached prefix are *never* written: the chunk
     starts at ``start`` >= prefix length, and padding writes hit the trash
     page), then the chunk's queries attend causally over everything cached
-    so far — shared prefix pages, earlier chunks, and the chunk itself —
-    via a gather of the request's pages.
+    so far — shared prefix pages, earlier chunks, and the chunk itself.
 
     Ring layout (sliding-window/local): the chunk's writes *wrap onto*
-    cells its own early queries still need, so the ring is gathered as a
+    cells its own early queries still need, so the ring is consumed as a
     snapshot BEFORE the write and the chunk attends over [snapshot, chunk]
-    with ring-arithmetic key positions; the sliding-window mask inside
-    ``attention_core`` keeps every overwritten (out-of-window) snapshot
-    cell out of the scores.  The engine caps ring chunks at ``window``
-    tokens, so no two writes in one chunk collide.
+    with ring-arithmetic key positions; the sliding-window mask keeps
+    every overwritten (out-of-window) snapshot cell out of the scores.
+    The engine caps ring chunks at ``window`` tokens, so no two writes in
+    one chunk collide.
+
+    ``use_pallas`` dispatches the scalar-prefetched Pallas prefill kernels
+    (``kernels.paged_attention``: HBM traffic ~ pages actually held,
+    bucket-tail query rows skipped at grid level); the default is the
+    traced whole-table gather through ``attention_core``.
 
     Returns (out [1, S, D], new_kv).
     """
+    from repro.kernels.paged_attention import ops as pa_ops
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
     H = cfg.num_heads
@@ -419,36 +425,53 @@ def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid):
 
     q, k, v = _project_qkv_rope(cfg, p, x, positions)
     if window:
-        ring_k = kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
-        ring_v = kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
-        cur = start - 1
-        i = jnp.arange(n * ps)
-        ring_pos = cur - jnp.mod(cur - i, window)        # < 0 = never written
         new_kv = paged_prefill_write(kv, k, v, page_ids, start, n_valid,
                                      window=window)
-        kk = jnp.concatenate([ring_k.astype(cd), k], axis=1)
-        vv = jnp.concatenate([ring_v.astype(cd), v], axis=1)
-        k_pos = jnp.concatenate(
-            [ring_pos[None, :], (start + jnp.arange(S))[None, :]], axis=1)
-        kv_valid = jnp.concatenate(
-            [(ring_pos >= 0)[None, :], (jnp.arange(S) < n_valid)[None, :]],
-            axis=1)
-        out = attention_core(q, kk, vv, positions, k_pos, causal=True,
-                             window=window, q_block=cfg.attn_q_block,
-                             kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
+        if use_pallas:
+            # snapshot semantics by construction: ``kv`` is the pre-write
+            # pool, the chunk's own K/V ride along as separate operands
+            out = pa_ops.paged_ring_prefill(
+                q[0], kv["k"], kv["v"], k[0].astype(cd), v[0].astype(cd),
+                page_ids, start, n_valid, window=window,
+                use_kernel=True)[None]
+        else:
+            ring_k = kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
+            ring_v = kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
+            cur = start - 1
+            i = jnp.arange(n * ps)
+            ring_pos = cur - jnp.mod(cur - i, window)  # < 0 = never written
+            kk = jnp.concatenate([ring_k.astype(cd), k], axis=1)
+            vv = jnp.concatenate([ring_v.astype(cd), v], axis=1)
+            k_pos = jnp.concatenate(
+                [ring_pos[None, :], (start + jnp.arange(S))[None, :]],
+                axis=1)
+            kv_valid = jnp.concatenate(
+                [(ring_pos >= 0)[None, :],
+                 (jnp.arange(S) < n_valid)[None, :]], axis=1)
+            out = attention_core(q, kk, vv, positions, k_pos, causal=True,
+                                 window=window, q_block=cfg.attn_q_block,
+                                 kv_block=cfg.attn_kv_block,
+                                 kv_valid=kv_valid)
     else:
         new_kv = paged_prefill_write(kv, k, v, page_ids, start, n_valid)
-        # gather this request's pages into a contiguous [1, n*ps] view;
-        # absolute key positions are the identity, validity = written-so-far
-        # bound (trash entries in the table tail sit past the bound, so
-        # they are never seen)
-        kk = new_kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
-        vv = new_kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
-        k_pos = jnp.arange(n * ps)
-        kv_valid = (k_pos < start + n_valid)[None, :]
-        out = attention_core(q, kk.astype(cd), vv.astype(cd), positions,
-                             k_pos, causal=True, q_block=cfg.attn_q_block,
-                             kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
+        if use_pallas:
+            out = pa_ops.paged_prefill(q[0], new_kv["k"], new_kv["v"],
+                                       page_ids, start, n_valid,
+                                       use_kernel=True)[None]
+        else:
+            # gather this request's pages into a contiguous [1, n*ps] view;
+            # absolute key positions are the identity, validity =
+            # written-so-far bound (trash entries in the table tail sit
+            # past the bound, so they are never seen)
+            kk = new_kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
+            vv = new_kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
+            k_pos = jnp.arange(n * ps)
+            kv_valid = (k_pos < start + n_valid)[None, :]
+            out = attention_core(q, kk.astype(cd), vv.astype(cd), positions,
+                                 k_pos, causal=True,
+                                 q_block=cfg.attn_q_block,
+                                 kv_block=cfg.attn_kv_block,
+                                 kv_valid=kv_valid)
     out = out.reshape(B, S, H * hd)
     return dot(out, p["wo"], cd), new_kv
 
@@ -519,14 +542,20 @@ def paged_mla_attention_apply(cfg, p, x, positions, kv, page_table, lengths,
 
 
 def paged_mla_prefill_apply(cfg, p, x, positions, kv, page_ids, start,
-                            n_valid):
+                            n_valid, *, use_pallas: bool = False):
     """Prefill-chunk MLA attention directly against latent pages.
 
-    The chunk's (normalized) latents are written into the pool, then — to
-    match the slotted prefill's numerics (``mla_apply``'s *expanded* path)
-    — per-head K/V are materialized from the gathered latents and the
-    chunk attends causally over prefix + chunk.  Contiguous layout only
-    (MLA is full causal attention).  Returns (out [1, S, D], new_kv)."""
+    The chunk's (normalized) latents are written into the pool.  The
+    traced default then — to match the slotted prefill's numerics
+    (``mla_apply``'s *expanded* path) — materializes per-head K/V from
+    the gathered latents and attends causally over prefix + chunk.
+    ``use_pallas`` dispatches the absorbed Pallas prefill kernel instead
+    (``paged_mla_prefill``: queries absorbed through W_uk, pages stream
+    as compressed ckv/krope, the latent output up-projects through W_uv
+    — the same math as the absorbed decode path, so HBM traffic is the
+    compressed cache).  Contiguous layout only (MLA is full causal
+    attention).  Returns (out [1, S, D], new_kv)."""
+    from repro.kernels.paged_attention import ops as pa_ops
     from repro.models.common import rms_norm
     m = cfg.mla
     B, S, _ = x.shape
@@ -542,24 +571,38 @@ def paged_mla_prefill_apply(cfg, p, x, positions, kv, page_ids, start,
                        cfg.rope_theta)[:, :, 0, :]
     new_kv = paged_latent_prefill_write(kv, ckv, krope, page_ids, start,
                                         n_valid)
-    ckv_all = new_kv["ckv"][page_ids].reshape(1, n * ps,
-                                              m.kv_lora_rank).astype(cd)
-    kr_all = new_kv["krope"][page_ids].reshape(
-        1, n * ps, m.qk_rope_head_dim).astype(cd)
-    k_nope = dot(ckv_all, p["w_uk"], cd).reshape(1, n * ps, H,
-                                                 m.qk_nope_head_dim)
-    vv = dot(ckv_all, p["w_uv"], cd).reshape(1, n * ps, H, m.v_head_dim)
     q_nope, q_rope = _mla_q(cfg, p, x, positions, cd)
-    q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k = jnp.concatenate(
-        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
-                                  (1, n * ps, H, m.qk_rope_head_dim))],
-        axis=-1)
-    k_pos = jnp.arange(n * ps)
-    kv_valid = (k_pos < start + n_valid)[None, :]
-    out = attention_core(q, k, vv, positions, k_pos, causal=True,
-                         q_block=cfg.attn_q_block,
-                         kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
+    if use_pallas:
+        scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+        w_uk = p["w_uk"].reshape(m.kv_lora_rank, H,
+                                 m.qk_nope_head_dim).astype(cd)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk,
+                           preferred_element_type=jnp.float32).astype(cd)
+        o_lat = pa_ops.paged_mla_prefill(
+            q_lat[0], q_rope[0], new_kv["ckv"], new_kv["krope"], page_ids,
+            start, n_valid, scale=scale, use_kernel=True)
+        w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim).astype(cd)
+        out = jnp.einsum("shr,rhv->shv", o_lat.astype(cd), w_uv,
+                         preferred_element_type=jnp.float32)[None]
+        out = out.astype(cd)
+    else:
+        ckv_all = new_kv["ckv"][page_ids].reshape(1, n * ps,
+                                                  m.kv_lora_rank).astype(cd)
+        kr_all = new_kv["krope"][page_ids].reshape(
+            1, n * ps, m.qk_rope_head_dim).astype(cd)
+        k_nope = dot(ckv_all, p["w_uk"], cd).reshape(1, n * ps, H,
+                                                     m.qk_nope_head_dim)
+        vv = dot(ckv_all, p["w_uv"], cd).reshape(1, n * ps, H, m.v_head_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      (1, n * ps, H, m.qk_rope_head_dim))],
+            axis=-1)
+        k_pos = jnp.arange(n * ps)
+        kv_valid = (k_pos < start + n_valid)[None, :]
+        out = attention_core(q, k, vv, positions, k_pos, causal=True,
+                             q_block=cfg.attn_q_block,
+                             kv_block=cfg.attn_kv_block, kv_valid=kv_valid)
     out = out.reshape(B, S, H * m.v_head_dim)
     return dot(out, p["wo"], cd), new_kv
 

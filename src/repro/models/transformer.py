@@ -307,15 +307,16 @@ def lm_paged_prefill(cfg, params, tokens, state, *, use_pallas: bool = False):
     Returns (logits [1, V] of the last *valid* token, new_pages).  One
     compiled shape per bucket covers every (prompt_len, prefix_len, chunk)
     combination — the dispatch that used to jit per prompt length.
-    ``use_pallas`` is accepted for contract symmetry; the chunk path always
-    runs the traced gather (the Pallas paged kernels are decode-only).
+    ``use_pallas`` selects the scalar-prefetched Pallas chunked-prefill
+    kernels (contiguous / ring / absorbed-MLA variants; HBM traffic ~
+    pages actually held) over the traced whole-table gather.
 
     Dispatches on the family's page layout: per-head k/v pages (full
     attention's contiguous pages and swa/local's ring-wrapped window
     pages) vs MLA's latent ckv/krope pages.
     """
-    del use_pallas
-    x, n_valid, new_pages = _paged_forward(cfg, params, tokens, state)
+    x, n_valid, new_pages = _paged_forward(cfg, params, tokens, state,
+                                           use_pallas=use_pallas)
     last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
     logits = lm_head(cfg, params, last)
     return logits[:, 0], new_pages
@@ -329,14 +330,16 @@ def lm_paged_verify(cfg, params, tokens, state, *, use_pallas: bool = False):
     sequence index ``start + 1 + j``.  The engine replays its sampler
     over these rows to decide the accepted prefix; invalid tail rows
     (``j >= n_valid``) are masked into the trash page exactly like a
-    bucketed prefill tail and their logits are simply ignored."""
-    del use_pallas
-    x, _, new_pages = _paged_forward(cfg, params, tokens, state)
+    bucketed prefill tail and their logits are simply ignored.
+    ``use_pallas`` routes the drafted span's chunk-shaped attention
+    through the same Pallas prefill kernels as ``lm_paged_prefill``."""
+    x, _, new_pages = _paged_forward(cfg, params, tokens, state,
+                                     use_pallas=use_pallas)
     logits = lm_head(cfg, params, x)
     return logits[0], new_pages
 
 
-def _paged_forward(cfg, params, tokens, state):
+def _paged_forward(cfg, params, tokens, state, *, use_pallas: bool = False):
     """Shared paged prefill/verify body -> (x [1,S,d], n_valid, new_pages)."""
     params = cast_tree(params, cfg.compute_dtype)
     cd = jnp.dtype(cfg.compute_dtype)
@@ -352,11 +355,11 @@ def _paged_forward(cfg, params, tokens, state):
         if cfg.attn_kind == "mla":
             a, new_kv = attn.paged_mla_prefill_apply(
                 cfg, lp["attn"], h, positions, kv, state["page_table"],
-                start, n_valid)
+                start, n_valid, use_pallas=use_pallas)
         else:
             a, new_kv = attn.paged_prefill_apply(
                 cfg, lp["attn"], h, positions, kv, state["page_table"],
-                start, n_valid)
+                start, n_valid, use_pallas=use_pallas)
         x = x + a
         h = apply_norm(cfg, lp["ln2"], x)
         if cfg.moe is not None:

@@ -398,8 +398,16 @@ class ServingEngine:
         spec_width = self.cfg.spec_tokens + 1   # last token + drafts
 
         # backend-selected like core/allreduce: the Pallas paged-attention
-        # kernel on TPU (HBM traffic ~ pages held), traced ref gather on CPU
-        paged_kernel = jax.default_backend() == "tpu"
+        # kernels on TPU (HBM traffic ~ pages held), traced ref gather on
+        # CPU.  ServeConfig.use_pallas overrides (off-TPU the kernels run
+        # in interpret mode — the ops wrappers select it automatically), so
+        # tests/CI exercise the kernel paths everywhere.  Applies to every
+        # paged dispatch: decode scans, prefill chunks, and spec-verify.
+        if self.cfg.use_pallas is None:
+            paged_kernel = jax.default_backend() == "tpu"
+        else:
+            paged_kernel = self.cfg.use_pallas
+        self.paged_kernel = paged_kernel and self.paged
 
         # One fused dispatch per cycle: lax.scan over decode_steps.  Each
         # slot decodes exactly ``limits[slot]`` tokens; past its budget the
@@ -503,7 +511,8 @@ class ServingEngine:
             (pages donated; the scalar/table operands are tiny uploads)."""
             return paged_prefill_fn(params, toks,
                                     {"pages": pages, "page_table": table,
-                                     "start": start, "n_valid": n_valid})
+                                     "start": start, "n_valid": n_valid},
+                                    use_pallas=paged_kernel)
 
         verify_tw = self.pool.table_width if self.paged else 0
 
@@ -536,7 +545,8 @@ class ServingEngine:
                 t, tab, st, nv = row
                 logits, pages = paged_verify_fn(
                     params, t[None], {"pages": pages, "page_table": tab,
-                                      "start": st, "n_valid": nv})
+                                      "start": st, "n_valid": nv},
+                    use_pallas=paged_kernel)
                 return pages, logits
 
             pages, stack = jax.lax.scan(body, pages,

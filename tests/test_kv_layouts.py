@@ -31,6 +31,9 @@ ARCHS = {
     # no lm-family arch ships attn_kind="local"; the layout seam must not
     # care (local == swa masking with a different name)
     "local": ("mixtral-8x22b", {"attn_kind": "local"}),
+    # contiguous per-head k/v pages (full attention) — the third page
+    # geometry the Pallas kernel family must cover
+    "full": ("qwen2.5-14b", {}),
 }
 
 
@@ -86,14 +89,20 @@ def test_window_page_size_validation_names_both_knobs():
 # Token identity: paged (latent / ring) == slotted, cold and warm
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["gather", "kernel"])
 @pytest.mark.parametrize("kind", sorted(ARCHS))
-def test_paged_matches_slotted_cold_and_warm(kind):
+def test_paged_matches_slotted_cold_and_warm(kind, use_pallas):
+    """Greedy token identity paged == slotted, cold and warm — with the
+    jnp gather path AND the Pallas kernels (interpret mode on CPU)
+    driving every paged dispatch (decode, prefill chunks, verify)."""
     cfg = _cfg(kind)
     rng = np.random.default_rng(3)
     prompts = _prompts(rng, cfg.vocab_size, [7, 12, 5, 9])
     prompts.append(list(prompts[0]))          # identical: warm-in-batch
-    ep = _engine(cfg, "paged")
+    ep = _engine(cfg, "paged", use_pallas=use_pallas)
     assert ep.paged and ep.layout is not None
+    assert ep.paged_kernel == use_pallas
     out_p = ep.generate(prompts, 5)
     es = _engine(cfg, "slotted", params=ep.params)
     assert not es.paged
@@ -115,14 +124,17 @@ def test_paged_matches_slotted_cold_and_warm(kind):
     assert 0 < sp["kv_bytes_peak"] <= sp["kv_bytes_slotted"]
 
 
-@pytest.mark.parametrize("kind", ["mla", "swa"])
-def test_paged_matches_slotted_under_mesh(kind):
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["gather", "kernel"])
+@pytest.mark.parametrize("kind", ["mla", "swa", "full"])
+def test_paged_matches_slotted_under_mesh(kind, use_pallas):
     cfg = _cfg(kind)
     rng = np.random.default_rng(4)
     prompts = _prompts(rng, cfg.vocab_size, [7, 11, 6, 9])
     # conftest forces 8 host devices: 2-way data (slots) x 2-way model (TP)
     mesh_cfg = MeshConfig(shape=(2, 2), axis_names=("data", "model"))
-    em = _engine(cfg, "paged", mesh_cfg=mesh_cfg, max_batch=4)
+    em = _engine(cfg, "paged", mesh_cfg=mesh_cfg, max_batch=4,
+                 use_pallas=use_pallas)
     out_mesh = em.generate(prompts, 4)
     out_single = _engine(cfg, "slotted", params=em.params,
                          max_batch=4).generate(prompts, 4)

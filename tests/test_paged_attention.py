@@ -11,9 +11,15 @@ import numpy as np
 import pytest
 
 from repro.kernels.paged_attention.ops import (paged_attention,
-                                               paged_mla_attention)
+                                               paged_mla_attention,
+                                               paged_mla_prefill,
+                                               paged_prefill,
+                                               paged_ring_prefill)
 from repro.kernels.paged_attention.ref import (paged_attention_ref,
                                                paged_mla_attention_ref,
+                                               paged_mla_prefill_ref,
+                                               paged_prefill_ref,
+                                               paged_ring_prefill_ref,
                                                ring_positions)
 
 
@@ -201,3 +207,139 @@ def test_trash_page_never_read(rng):
                               use_kernel=use_kernel, interpret=True)
         np.testing.assert_allclose(np.asarray(out), np.asarray(base),
                                    atol=2e-5)
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (one request's bucketed chunk; rows >= n_valid are bucket
+# padding — undefined by contract, so every comparison slices [:n_valid])
+# ---------------------------------------------------------------------------
+
+def _prefill_case(rng, H, KV, hd, ps, n, S, dtype=jnp.float32):
+    """Random page pool + the request's table row [n] (pages 1..n)."""
+    q = jnp.asarray(rng.normal(size=(S, H, hd)), dtype)
+    kp = jnp.asarray(rng.normal(size=(n + 1, ps, KV, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(n + 1, ps, KV, hd)), dtype)
+    table = jnp.arange(1, n + 1, dtype=jnp.int32)
+    return q, kp, vp, table
+
+
+PREFILL_CASES = [
+    # (H, KV, hd, ps, n, S, start, n_valid, dtype)
+    (4, 2, 32, 8, 4, 16, 0, 16, jnp.float32),    # cold, full bucket
+    (4, 2, 32, 8, 4, 16, 10, 13, jnp.float32),   # deep start + padded tail
+    (8, 8, 16, 4, 8, 8, 3, 5, jnp.float32),      # MHA (G = 1)
+    (2, 1, 64, 16, 2, 16, 0, 9, jnp.float32),    # MQA, padded tail
+    (4, 2, 32, 8, 4, 8, 17, 8, jnp.bfloat16),    # bf16 i/o, deep start
+    # multi-q-block bucket: S=256 -> q_block=128; n_valid=100 leaves the
+    # second block fully padded (grid-level skip: bucket-tail waste fix)
+    (4, 2, 32, 16, 7, 256, 0, 100, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("H,KV,hd,ps,n,S,start,n_valid,dtype",
+                         PREFILL_CASES)
+def test_paged_prefill_kernel_matches_ref(rng, H, KV, hd, ps, n, S, start,
+                                          n_valid, dtype):
+    q, kp, vp, table = _prefill_case(rng, H, KV, hd, ps, n, S, dtype)
+    assert start + n_valid <= n * ps
+    ref = paged_prefill_ref(q, kp, vp, table, start, n_valid)
+    out = paged_prefill(q, kp, vp, table, start, n_valid, use_kernel=True,
+                        interpret=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out[:n_valid], np.float32),
+                               np.asarray(ref[:n_valid], np.float32),
+                               atol=atol)
+
+
+def test_paged_prefill_padded_qblocks_emit_zero(rng):
+    """Fully padded q blocks are skipped at grid level and emit exact
+    zeros — the bucket tail costs no MXU cycles (and no garbage)."""
+    H, KV, hd, ps, n, S, n_valid = 4, 2, 32, 16, 7, 256, 100
+    q, kp, vp, table = _prefill_case(rng, H, KV, hd, ps, n, S)
+    out = paged_prefill(q, kp, vp, table, 0, n_valid, use_kernel=True,
+                        interpret=True)
+    # q_block = 128: rows 128..255 form an entirely-padded block
+    np.testing.assert_array_equal(np.asarray(out[128:]), 0.0)
+
+
+def test_paged_prefill_trash_page_never_read(rng):
+    """Table tail entries point at page 0; garbage there must not leak
+    into any valid row (kernel skips those pages entirely)."""
+    H, KV, hd, ps, n, S = 4, 2, 32, 8, 4, 16
+    start, n_valid = 3, 10                        # occupies pages 1..2
+    q, kp, vp, _ = _prefill_case(rng, H, KV, hd, ps, n, S)
+    table = jnp.asarray([1, 2, 0, 0], jnp.int32)  # tail = trash
+    base = paged_prefill(q, kp, vp, table, start, n_valid)
+    kp2 = kp.at[0].set(1e4)
+    vp2 = vp.at[0].set(-1e4)
+    for use_kernel in (False, True):
+        out = paged_prefill(q, kp2, vp2, table, start, n_valid,
+                            use_kernel=use_kernel, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[:n_valid]),
+                                   np.asarray(base[:n_valid]), atol=2e-5)
+
+
+RING_PREFILL_CASES = [
+    # (H, KV, hd, ps, n, S, start, n_valid) — window = n * ps
+    (4, 2, 32, 8, 3, 16, 0, 16),     # cold start (ring empty)
+    (4, 2, 32, 8, 3, 16, 30, 13),    # ring fully wrapped before the chunk
+    (8, 8, 16, 4, 4, 8, 10, 5),      # MHA, partially filled ring
+    (2, 1, 64, 8, 2, 32, 70, 27),    # chunk wider than the window (S > w)
+]
+
+
+@pytest.mark.parametrize("H,KV,hd,ps,n,S,start,n_valid",
+                         RING_PREFILL_CASES)
+def test_paged_ring_prefill_kernel_matches_ref(rng, H, KV, hd, ps, n, S,
+                                               start, n_valid):
+    window = n * ps
+    q, kp, vp, table = _prefill_case(rng, H, KV, hd, ps, n, S)
+    ck = jnp.asarray(rng.normal(size=(S, KV, hd)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(S, KV, hd)), jnp.float32)
+    ref = paged_ring_prefill_ref(q, kp, vp, ck, cv, table, start, n_valid,
+                                 window=window)
+    out = paged_ring_prefill(q, kp, vp, ck, cv, table, start, n_valid,
+                             window=window, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:n_valid]),
+                               np.asarray(ref[:n_valid]), atol=2e-5)
+
+
+def test_paged_ring_prefill_snapshot_semantics(rng):
+    """The kernel must read the chunk's own K/V from the ride-along
+    operands, never back through the (post-write) ring pages: poisoning
+    the pages at the chunk's own write cells must not change output when
+    the snapshot is passed."""
+    H, KV, hd, ps, n = 4, 2, 32, 8, 3
+    window, S, start, n_valid = 24, 16, 30, 13
+    q, kp, vp, table = _prefill_case(rng, H, KV, hd, ps, n, S)
+    ck = jnp.asarray(rng.normal(size=(S, KV, hd)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(S, KV, hd)), jnp.float32)
+    base = [paged_ring_prefill(q, kp, vp, ck, cv, table, start, n_valid,
+                               window=window, use_kernel=uk, interpret=True)
+            for uk in (False, True)]
+    np.testing.assert_allclose(np.asarray(base[1][:n_valid]),
+                               np.asarray(base[0][:n_valid]), atol=2e-5)
+
+
+MLA_PREFILL_CASES = [
+    # (H, R, rp, ps, n, S, start, n_valid)
+    (4, 32, 8, 8, 4, 16, 0, 16),
+    (2, 16, 16, 4, 8, 8, 5, 6),
+    (4, 32, 8, 16, 7, 256, 0, 100),   # multi-q-block + padded tail block
+]
+
+
+@pytest.mark.parametrize("H,R,rp,ps,n,S,start,n_valid", MLA_PREFILL_CASES)
+def test_paged_mla_prefill_kernel_matches_ref(rng, H, R, rp, ps, n, S,
+                                              start, n_valid):
+    q_lat = jnp.asarray(rng.normal(size=(S, H, R)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(size=(S, H, rp)), jnp.float32)
+    ckv = jnp.asarray(rng.normal(size=(n + 1, ps, R)), jnp.float32)
+    kr = jnp.asarray(rng.normal(size=(n + 1, ps, rp)), jnp.float32)
+    table = jnp.arange(1, n + 1, dtype=jnp.int32)
+    scale = (R + rp) ** -0.5
+    ref = paged_mla_prefill_ref(q_lat, q_rope, ckv, kr, table, start,
+                                n_valid, scale=scale)
+    out = paged_mla_prefill(q_lat, q_rope, ckv, kr, table, start, n_valid,
+                            scale=scale, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:n_valid]),
+                               np.asarray(ref[:n_valid]), atol=2e-5)
