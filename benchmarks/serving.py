@@ -52,6 +52,15 @@ output identity (spec only ever changes speed, never tokens).  ``--smoke``
 gates on identity plus spec engagement, and on ``accept_rate > 0`` for the
 headline arch.
 
+Since the quantized-KV PR every pass summary is stamped with its
+``kv_dtype`` and per-head paged archs carry a ``quantized`` section: the
+measured workload re-served from int8 pages (per-row bf16 scales, dequant
+fused into the paged-attention kernels) through both the jnp-oracle and
+Pallas paths, with ``kv_bytes_peak_ratio`` vs the fp32 paged pass (smoke
+gate <= 0.30x), ``same_budget_seq_ratio`` (>= 2x sequences admitted under
+the same HBM budget) and kernel-on/off ``token_identical``.  MLA archs
+omit the section (latent pages stay fp — the layout seam rejects int8).
+
 Untraced passes *omit* the phase-derived keys entirely
 (``repro.obs.TRACED_ONLY_KEYS``): with tracing off those fields were
 emitted as literal ``0.0`` — reading as "zero host overhead" — so the
@@ -88,16 +97,29 @@ SMOKE_ARCHS = ("qwen2.5-14b",) + BENCH_ARCHS
 #: 'paged'/'prefix'/'spec' are required only for archs with a paged decode
 #: path ('spec' additionally needs the spec_serve capability)
 REQUIRED_KEYS = ("arch", "requests", "slotted", "kv_bytes_saved_ratio",
-                 "prefix", "spec", "phases")
+                 "prefix", "spec", "quantized", "phases")
 REQUIRED_SUMMARY_KEYS = ("tokens_per_sec", "ttft_p50_s", "itl_p50_s",
                          "kv_bytes_peak", "kv_bytes_slotted",
                          "prefill_tokens", "prefix_hit_rate",
-                         "prefill_tokens_saved", "compile_count")
+                         "prefill_tokens_saved", "compile_count",
+                         "kv_dtype")
 REQUIRED_PREFIX_KEYS = ("hit", "cold", "slotted_tokens_per_sec",
                         "prefill_tokens_saved_ratio", "token_identical")
 #: speculative-decoding workload section (repetitive traffic, spec on/off)
 REQUIRED_SPEC_KEYS = ("on", "off", "accept_rate", "speedup",
                       "token_identical")
+#: int8 quantized-KV workload section (per-head paged layouts only — MLA
+#: latent pages stay fp): the same measured workload served from int8
+#: pages, its memory ratios against the fp32 paged pass, and the
+#: kernel-on/off identity of the quantized path
+REQUIRED_QUANT_KEYS = ("int8", "kv_bytes_peak_ratio", "page_bytes_ratio",
+                       "same_budget_seq_ratio", "token_identical")
+#: CI bars for the quantized section: an int8 page (int8 rows + bf16
+#: scales) must hold the measured peak at <= 0.30x the fp32 paged pass
+#: (~0.28 on the hd=16 smoke shapes), and the same HBM budget must admit
+#: >= 2x the concurrent sequences
+QUANT_PEAK_GATE = 0.30
+QUANT_ADMIT_GATE = 2.0
 #: per-arch traced-attribution section (repro.obs): where the cycle goes;
 #: ``prefill_kernel`` records whether the Pallas paged kernels (decode +
 #: chunked prefill + verify) drove the pass — backend-selected, so the
@@ -191,6 +213,7 @@ def _serve_once(arch, requests, batch, prompt_len, max_new, kv_layout,
         assert len(out) == requests and all(len(t) == max_new for t in out)
         s = _untraced(engine.metrics.summary())
         s["compile_count"] = engine.prefill_compiles  # lifetime, not window
+        s["kv_dtype"] = "fp32"          # the baseline passes store fp pages
         if best is None or s["tokens_per_sec"] > best["tokens_per_sec"]:
             best = s
     return engine.paged, best
@@ -375,6 +398,68 @@ def _spec_workload(arch, batch, page_size, spec_tokens=8, max_new=32,
     }
 
 
+def _quantized_workload(arch, requests, batch, prompt_len, max_new,
+                        page_size, fp32_peak):
+    """Int8 quantized-KV section: the measured workload re-served from
+    int8 pages (per-row bf16 scales, dequant fused into the attention
+    math), once through the jnp oracle path and once through the Pallas
+    kernels (interpret off-TPU) — quantization is part of the written
+    page, so the two must agree token for token.
+
+    Memory evidence comes from the pool itself: ``kv_bytes_peak_ratio``
+    divides the int8 pass's measured peak by the fp32 paged pass's
+    (``fp32_peak``), ``page_bytes_ratio`` is the per-page storage ratio,
+    and ``same_budget_seq_ratio`` is how many more worst-case sequences
+    the same HBM byte budget admits — the oversubscription headroom
+    quantization buys."""
+    import numpy as np
+    from repro.configs import get_config
+
+    max_seq = prompt_len + max_new + page_size
+    pages = 3 * batch * (-(-max_seq // page_size)) + 1
+    # the exact workload _serve_once measured on the fp32 pools
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(max(prompt_len // 2, 1), prompt_len + 1,
+                           size=requests)
+    vocab = get_config(arch, smoke=True).vocab_size
+    prompts = [rng.integers(0, vocab, (int(l),)) for l in lengths]
+
+    def serve(use_pallas):
+        cfg, eng = _make_engine(arch, batch, max_seq, max_new, "paged",
+                                page_size, num_pages=pages,
+                                kv_dtype="int8", use_pallas=use_pallas)
+        eng.generate(prompts, max_new)        # compile + cache warm-up
+        best = None
+        for _ in range(5):
+            eng.metrics.reset()
+            eng.results.clear()
+            outs = eng.generate(prompts, max_new)
+            s = _untraced(eng.metrics.summary())
+            s["kv_dtype"] = "int8"
+            if best is None or s["tokens_per_sec"] > best[1]["tokens_per_sec"]:
+                best = (outs, s)
+        return best + (eng.pool,)
+
+    out_ref, int8, pool = serve(False)
+    out_kern, int8_kern, _ = serve(True)
+    # worst-case sequences one HBM byte budget admits, fp32 vs int8 pages:
+    # both pools page identically (same table geometry), so the ratio is
+    # pure bytes-per-page — measured off the live pool, not assumed
+    budget = (pages - 1) * pool.page_bytes_fp32
+    seq_pages = -(-max_seq // page_size)
+    fp32_seqs = budget // (seq_pages * pool.page_bytes_fp32)
+    int8_seqs = budget // (seq_pages * pool.page_bytes)
+    return {
+        "requests": requests, "prompt_len": prompt_len, "max_new": max_new,
+        "int8": int8, "int8_kernel": int8_kern,
+        "kv_bytes_peak_ratio": (int8["kv_bytes_peak"] / fp32_peak
+                                if fp32_peak else 0.0),
+        "page_bytes_ratio": pool.page_bytes / pool.page_bytes_fp32,
+        "same_budget_seq_ratio": int8_seqs / max(fp32_seqs, 1),
+        "token_identical": out_ref == out_kern,
+    }
+
+
 def _bench(trace_path=None, **kw):
     """{'paged': summary, 'slotted': summary, 'kv_bytes_saved_ratio': x,
     'prefix': {...}, 'spec': {...}, 'phases': {...}}.
@@ -413,6 +498,15 @@ def _bench(trace_path=None, **kw):
     if paged_ok and "spec_serve" in caps:
         record["spec"] = _spec_workload(kw["arch"], kw["batch"],
                                         kw["page_size"])
+    # int8 quantized-KV section: per-head paged layouts only (MLA latent
+    # pages stay fp — the layout seam rejects the combination)
+    record["quantized"] = {}
+    layout = registry.build(get_config(kw["arch"], smoke=True)).kv_layout
+    if paged_ok and layout is not None and layout.name != "latent":
+        record["quantized"] = _quantized_workload(
+            kw["arch"], kw["requests"], kw["batch"], kw["prompt_len"],
+            kw["max_new"], kw["page_size"],
+            fp32_peak=record["paged"]["kv_bytes_peak"])
     record["phases"] = _traced_attribution(
         kw["arch"], kw["requests"], kw["batch"], kw["prompt_len"],
         kw["max_new"], kw["page_size"], trace_path=trace_path)
@@ -447,6 +541,12 @@ def check_schema(record):
             assert k in record["spec"], f"schema drift: missing spec.{k}"
         assert "drafted_tokens" in record["spec"]["on"], \
             "schema drift: spec.on summary lost the drafted_tokens counter"
+    if record.get("quantized"):
+        for k in REQUIRED_QUANT_KEYS:
+            assert k in record["quantized"], \
+                f"schema drift: missing quantized.{k}"
+        assert record["quantized"]["int8"].get("kv_dtype") == "int8", \
+            "schema drift: quantized.int8 summary lost its kv_dtype stamp"
     for k in REQUIRED_PHASE_KEYS:
         assert k in record["phases"], f"schema drift: missing phases.{k}"
     for arch, sub in record.get("archs", {}).items():
@@ -478,6 +578,10 @@ def run(**overrides):
          (r.get("spec") or {}).get("accept_rate", 0.0)),
         ("serving_spec_speedup", 0.0,
          (r.get("spec") or {}).get("speedup", 0.0)),
+        ("serving_int8_kv_peak_ratio", 0.0,
+         (r.get("quantized") or {}).get("kv_bytes_peak_ratio", 0.0)),
+        ("serving_int8_same_budget_seq_ratio", 0.0,
+         (r.get("quantized") or {}).get("same_budget_seq_ratio", 0.0)),
         ("serving_prefill_compile_count", 0.0, p["compile_count"]),
         ("serving_plan_time_frac", 0.0, r["phases"]["plan_frac"]),
         ("serving_decode_device_frac", 0.0,
@@ -563,6 +667,20 @@ def main():
                     assert sp["speedup"] >= 1.0, \
                         f"spec-on slower than spec-off [{arch}]: " \
                         f"{sp['speedup']:.2f}x on the repetitive workload"
+            qz = record["quantized"]
+            if qz:
+                assert qz["token_identical"], \
+                    f"int8 kernel-on vs kernel-off token drift [{arch}] — " \
+                    "fused dequant diverged from the jnp oracle"
+                assert qz["kv_bytes_peak_ratio"] <= QUANT_PEAK_GATE, \
+                    f"int8 kv_bytes_peak at " \
+                    f"{qz['kv_bytes_peak_ratio']:.3f}x fp32 > " \
+                    f"{QUANT_PEAK_GATE} [{arch}] — the quantized page " \
+                    "layout stopped paying for itself"
+                assert qz["same_budget_seq_ratio"] >= QUANT_ADMIT_GATE, \
+                    f"int8 admits only {qz['same_budget_seq_ratio']:.1f}x " \
+                    f"sequences under the fp32 byte budget [{arch}] " \
+                    f"(gate {QUANT_ADMIT_GATE}x)"
             hit = (record["prefix"] or {}).get("hit", {})
             print(f"smoke OK [{arch}]: schema intact; "
                   f"prefix_hit_rate={hit.get('prefix_hit_rate', 0.0):.2f} "
@@ -574,6 +692,10 @@ def main():
                   f"host_overhead={ph['host_overhead_frac']:.2f} "
                   f"accept_rate={(sp or {}).get('accept_rate', 0.0):.2f} "
                   f"spec_speedup={(sp or {}).get('speedup', 0.0):.2f} "
+                  f"int8_peak_ratio="
+                  f"{(qz or {}).get('kv_bytes_peak_ratio', 0.0):.2f} "
+                  f"int8_admits="
+                  f"{(qz or {}).get('same_budget_seq_ratio', 0.0):.1f}x "
                   f"(trace: {tp})")
         return
     record = {

@@ -350,12 +350,14 @@ class Session:
 
     def _engine_for(self, serve_cfg: ServeConfig):
         from repro.serving import ServingEngine
-        # switching kv_layout (or mutating the model's attn_kind) on a live
-        # Session retires every engine built for a different layout: a
-        # stale ServeConfig-keyed engine would otherwise survive with an
-        # incompatible pool (and a prefix cache the caller believes gone)
+        # switching kv_layout / kv_dtype (or mutating the model's
+        # attn_kind) on a live Session retires every engine built for a
+        # different layout: a stale ServeConfig-keyed engine would
+        # otherwise survive with an incompatible pool (and a prefix cache
+        # the caller believes gone)
         for key in [k for k, e in self._engines.items()
                     if k.kv_layout != serve_cfg.kv_layout
+                    or k.kv_dtype != serve_cfg.kv_dtype
                     or e.model_cfg.attn_kind != self.model.attn_kind]:
             self._drop_engine(key)
         eng = self._engines.pop(serve_cfg, None)

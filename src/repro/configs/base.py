@@ -224,6 +224,12 @@ MULTI_POD = MeshConfig(shape=(2, 16, 16), axis_names=("pod", "data", "model"))
 SERVE_POLICIES = ("fcfs", "priority")
 KV_LAYOUTS = ("auto", "paged", "slotted")
 
+# KV page storage dtypes ("fp32" = the family's native compute dtype; "int8"
+# = quantized pages + per-row scale leaves).  Mirrors
+# repro.serving.layouts.KV_DTYPES — kept literal here so ServeConfig
+# construction never imports the serving layer.
+KV_DTYPES = ("fp32", "int8")
+
 
 def floor_pow2(n: int) -> int:
     """Largest power of two <= n (n >= 1).  The auto-sizing rule every
@@ -318,6 +324,13 @@ class ServeConfig:
     pipeline_depth: int = 2       # 2 = async submit/retire overlap, 1 = sync
     eos_token: int = -1           # stop token (-1 disables early stop)
     kv_layout: str = "auto"       # "auto" | "paged" | "slotted"
+    # KV page storage dtype: "fp32" keeps the family's native compute dtype;
+    # "int8" stores k/v pages quantized (symmetric per-(page, offset,
+    # kv-head) fp32 scales as extra pool leaves, dequant fused into the
+    # paged-attention kernels).  Paged per-head layouts only — rejected for
+    # MLA (latent rank is contracted) and slotted-only families by
+    # check_kv_dtype once the engine knows the layout.
+    kv_dtype: str = "fp32"        # "fp32" | "int8" (paged k/v pages only)
     page_size: int = 16           # tokens per KV page (paged layout)
     num_pages: int = 0            # shared page pool size (0 = worst case)
     spec_tokens: int = 4          # max draft tokens per slot per cycle
@@ -383,6 +396,15 @@ class ServeConfig:
         if self.kv_layout not in KV_LAYOUTS:
             raise ValueError(
                 f"kv_layout={self.kv_layout!r} not in {KV_LAYOUTS}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype={self.kv_dtype!r} not in {KV_DTYPES}")
+        if self.kv_dtype != "fp32" and self.kv_layout == "slotted":
+            raise ValueError(
+                f"kv_dtype={self.kv_dtype!r} requires a paged layout "
+                f"(kv_layout='paged' or 'auto'), got kv_layout='slotted': "
+                "the slotted pool stores the bundle's native decode state "
+                "and never quantizes")
         for knob, least in (("max_batch", 1), ("max_queue", 1),
                             ("max_seq_len", 2), ("max_new_tokens", 1),
                             ("max_prefills_per_step", 1), ("decode_steps", 1),
@@ -443,6 +465,18 @@ class ServeConfig:
             return
         from repro.serving.layouts import check_window_page_size
         check_window_page_size(self.page_size, window)
+
+    def check_kv_dtype(self, layout) -> None:
+        """Model-aware validation for quantized KV (the engine calls this
+        once it knows the family's ``KVLayout``, matching ``check_window``):
+        ``kv_dtype="int8"`` needs a per-head paged layout — MLA latent
+        pages and slotted-only families are rejected with an error naming
+        both knobs.  Delegates to the layout seam's single implementation
+        (imported at call time — ``repro.serving`` sits above this
+        module).  ``layout`` is the family's base ``KVLayout`` or None when
+        the engine resolved to the slotted pool."""
+        from repro.serving.layouts import check_kv_dtype_layout
+        check_kv_dtype_layout(self.kv_dtype, layout)
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)

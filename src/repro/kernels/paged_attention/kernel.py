@@ -54,6 +54,17 @@ Layouts (see ref.py): q [slots, KV, G, hd] (prefill: [S, KV, G, hd]);
 k/v pages [P, ps, KV, hd]; q_lat [slots, H, R]; ckv pages [P, ps, R];
 page_table [slots, n_table] int32 (prefill: one row [n_table]); lengths
 [slots] int32 (prefill: meta [2] int32 = start, n_valid).
+
+Quantized (int8) pools add ``k_scale``/``v_scale`` operands [P, ps, KV]
+fp32 — one symmetric scale per (page, offset, kv-head) row — streamed
+through the same page-table index maps as their int8 data pages.  Dequant
+fuses into the online softmax: raw int8 scores are multiplied by the key's
+scale per column, probabilities by the value's scale per row before the PV
+product — fp pages are never materialized, so HBM reads stay ~1/4 of the
+fp pool's.  The jnp oracles in ref.py apply the identical fused math
+(same multiply placement), which is what keeps quantized kernel-on vs
+kernel-off token-identical.  MLA latent kernels take no scales (the
+layout seam rejects quantized latents — rank is a contracted dim).
 """
 from __future__ import annotations
 
@@ -67,9 +78,14 @@ import jax.experimental.pallas.tpu as pltpu
 from repro.kernels.common import NEG_INF, CompilerParams as _CompilerParams
 
 
-def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
-                  n_table: int, window: int):
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  scale: float, page_size: int, n_table: int, window: int,
+                  quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     s = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -94,6 +110,9 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         sc = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [G, ps]
+        if quantized:
+            # fused dequant: raw int8 scores scaled per key column
+            sc = sc * ks_ref[0, :, 0].astype(jnp.float32)[None, :]
         idx = base + jax.lax.broadcasted_iota(
             jnp.int32, sc.shape, 1)                       # cell indices
         if window:
@@ -111,8 +130,13 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         corr = jnp.exp(m_prev - m_new)
         pr = jnp.exp(sc - m_new)                          # [G, ps]
         l_scr[...] = l_prev * corr + jnp.sum(pr, axis=1, keepdims=True)
+        # fused dequant: probabilities scaled per value row (the softmax
+        # denominator stays unscaled — it normalizes probabilities, not
+        # values)
+        pv = pr * vs_ref[0, :, 0].astype(jnp.float32)[None, :] \
+            if quantized else pr
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-            pr, v, (((1,), (0,)), ((), ())),
+            pv, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         m_scr[...] = m_new
 
@@ -123,10 +147,14 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention_kernel(q, k_pages, v_pages, page_table, lengths, *,
-                           window: int = 0, interpret: bool = False):
+                           window: int = 0, k_scale=None, v_scale=None,
+                           interpret: bool = False):
     """q: [slots, KV, G, hd]; k/v_pages: [P, ps, KV, hd];
     page_table: [slots, n_table] int32; lengths: [slots] int32.
-    ``window > 0`` selects the ring-cell position mapping.
+    ``window > 0`` selects the ring-cell position mapping.  ``k_scale``/
+    ``v_scale`` [P, ps, KV] bf16 mark int8 pages — their blocks stream
+    through the same page-table index map and dequant fuses into the
+    softmax accumulation.
 
     Returns [slots, KV, G, hd] in q.dtype.
     """
@@ -134,21 +162,31 @@ def paged_attention_kernel(q, k_pages, v_pages, page_table, lengths, *,
     _, ps, _, _ = k_pages.shape
     n_table = page_table.shape[1]
     scale = hd ** -0.5
+    quantized = k_scale is not None
 
     kernel = functools.partial(_paged_kernel, scale=scale, page_size=ps,
-                               n_table=n_table, window=window)
+                               n_table=n_table, window=window,
+                               quantized=quantized)
+
+    page_spec = pl.BlockSpec((1, ps, 1, hd),
+                             lambda s, h, p, pt, ln: (pt[s, p], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda s, h, p, pt, ln: (s, h, 0, 0)),
+        # physical page chosen by the prefetched table — the paged gather
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec((1, ps, 1),
+                                  lambda s, h, p, pt, ln: (pt[s, p], 0, h))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(slots, KV, n_table),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda s, h, p, pt, ln: (s, h, 0, 0)),
-            # physical page chosen by the prefetched table — the paged gather
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda s, h, p, pt, ln: (pt[s, p], 0, h, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda s, h, p, pt, ln: (pt[s, p], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda s, h, p, pt, ln: (s, h, 0, 0)),
         scratch_shapes=[
@@ -165,7 +203,7 @@ def paged_attention_kernel(q, k_pages, v_pages, page_table, lengths, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(page_table, lengths, q, k_pages, v_pages)
+    )(page_table, lengths, *operands)
 
 
 def _paged_mla_kernel(pt_ref, len_ref, ql_ref, qr_ref, ckv_ref, kr_ref,
@@ -269,24 +307,33 @@ def _prefill_q_block(S: int) -> int:
     return S if S % 128 else 128
 
 
-def _online_update(m_scr, l_scr, acc_scr, sc, v):
-    """One masked score block folded into the (m, l, acc) scratch state."""
+def _online_update(m_scr, l_scr, acc_scr, sc, v, v_scale=None):
+    """One masked score block folded into the (m, l, acc) scratch state.
+    ``v_scale`` [ps] marks an int8 value block: probabilities are scaled
+    per value row before the PV product (fused dequant); the softmax
+    denominator stays unscaled — it normalizes probabilities, not
+    values."""
     m_prev = m_scr[...]
     l_prev = l_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True))
     corr = jnp.exp(m_prev - m_new)
     pr = jnp.exp(sc - m_new)
     l_scr[...] = l_prev * corr + jnp.sum(pr, axis=1, keepdims=True)
+    pv = pr if v_scale is None else pr * v_scale[None, :]
     acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-        pr, v, (((1,), (0,)), ((), ())),
+        pv, v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     m_scr[...] = m_new
 
 
-def _paged_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
-                          m_scr, l_scr, acc_scr, *, scale: float,
-                          page_size: int, n_table: int, q_block: int,
-                          groups: int):
+def _paged_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref, *rest,
+                          scale: float, page_size: int, n_table: int,
+                          q_block: int, groups: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     qi = pl.program_id(1)
     p = pl.program_id(2)
     start = meta_ref[0]
@@ -315,12 +362,16 @@ def _paged_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
         sc = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale      # [qb*G, ps]
+        if quantized:
+            # fused dequant: raw int8 scores scaled per key column
+            sc = sc * ks_ref[0, :, 0].astype(jnp.float32)[None, :]
         r = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
         c = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
         qpos = start + q0 + r // groups        # row r = query (r // G)
         kidx = base + c
         sc = jnp.where((kidx < limit) & (kidx <= qpos), sc, NEG_INF)
-        _online_update(m_scr, l_scr, acc_scr, sc, v)
+        _online_update(m_scr, l_scr, acc_scr, sc, v,
+                       vs_ref[0, :, 0].astype(jnp.float32) if quantized else None)
 
     @pl.when(p == n_table - 1)
     def _finish():
@@ -330,6 +381,7 @@ def _paged_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_prefill_kernel(q, k_pages, v_pages, page_table, meta, *,
+                         k_scale=None, v_scale=None,
                          interpret: bool = False):
     """Contiguous-layout chunked prefill.  q: [S, KV, G, hd] — one
     request's bucketed chunk (post-rope); k/v_pages: [P, ps, KV, hd] —
@@ -337,6 +389,8 @@ def paged_prefill_kernel(q, k_pages, v_pages, page_table, meta, *,
     int32 — this request's row (0-padded tail = trash); meta: [2] int32 =
     (start, n_valid).  Query i holds absolute position ``start + i``;
     padding rows (i >= n_valid) are skipped at grid level and come back 0.
+    ``k_scale``/``v_scale`` [P, ps, KV] bf16 mark int8 pages (fused
+    dequant, same page-table streaming).
 
     Returns [S, KV, G, hd] in q.dtype.
     """
@@ -345,22 +399,31 @@ def paged_prefill_kernel(q, k_pages, v_pages, page_table, meta, *,
     n_table = page_table.shape[0]
     qb = _prefill_q_block(S)
     scale = hd ** -0.5
+    quantized = k_scale is not None
 
     kernel = functools.partial(_paged_prefill_kernel, scale=scale,
                                page_size=ps, n_table=n_table, q_block=qb,
-                               groups=G)
+                               groups=G, quantized=quantized)
+
+    page_spec = pl.BlockSpec((1, ps, 1, hd),
+                             lambda h, qi, p, pt, mt: (pt[p], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((qb, 1, G, hd),
+                     lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec((1, ps, 1),
+                                  lambda h, qi, p, pt, mt: (pt[p], 0, h))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(KV, S // qb, n_table),
-        in_specs=[
-            pl.BlockSpec((qb, 1, G, hd),
-                         lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda h, qi, p, pt, mt: (pt[p], 0, h, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda h, qi, p, pt, mt: (pt[p], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((qb, 1, G, hd),
                                lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
         scratch_shapes=[
@@ -377,14 +440,20 @@ def paged_prefill_kernel(q, k_pages, v_pages, page_table, meta, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(page_table, meta, q, k_pages, v_pages)
+    )(page_table, meta, *operands)
+
 
 
 def _paged_ring_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref,
-                               ck_ref, cv_ref, o_ref, m_scr, l_scr, acc_scr,
-                               *, scale: float, page_size: int, n_table: int,
+                               ck_ref, cv_ref, *rest,
+                               scale: float, page_size: int, n_table: int,
                                n_chunk: int, q_block: int, groups: int,
-                               window: int):
+                               window: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     qi = pl.program_id(1)
     p = pl.program_id(2)
     start = meta_ref[0]
@@ -418,13 +487,18 @@ def _paged_ring_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref,
         k = k_ref[0, :, 0].astype(jnp.float32)
         v = v_ref[0, :, 0].astype(jnp.float32)
         sc, qpos, c = _scores(k)
+        if quantized:
+            # fused dequant of the int8 snapshot (the chunk operands below
+            # are freshly projected fp — never quantized)
+            sc = sc * ks_ref[0, :, 0].astype(jnp.float32)[None, :]
         idx = base + c
         cur = start - 1
         kpos = cur - jnp.mod(cur - idx, window)  # < 0 = never written
         # snapshot keys all precede the chunk, so causality is implied;
         # the window mask drops wrapped-over and out-of-window cells
         sc = jnp.where((kpos >= 0) & (kpos > qpos - window), sc, NEG_INF)
-        _online_update(m_scr, l_scr, acc_scr, sc, v)
+        _online_update(m_scr, l_scr, acc_scr, sc, v,
+                       vs_ref[0, :, 0].astype(jnp.float32) if quantized else None)
 
     # --- the chunk's own K/V (freshly projected, NOT read from pages) ---
     j0 = (p - n_table) * page_size
@@ -450,6 +524,7 @@ def _paged_ring_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref,
 
 def paged_ring_prefill_kernel(q, k_pages, v_pages, chunk_k, chunk_v,
                               page_table, meta, *, window: int,
+                              k_scale=None, v_scale=None,
                               interpret: bool = False):
     """Ring-layout (sliding-window/local) chunked prefill,
     snapshot-before-write semantics.  q: [S, KV, G, hd]; k/v_pages:
@@ -459,13 +534,16 @@ def paged_ring_prefill_kernel(q, k_pages, v_pages, chunk_k, chunk_v,
     int32 — the request's ring of ``window // ps`` cells; meta: [2] int32
     = (start, n_valid).  The grid walks ring cells then chunk blocks; the
     sliding-window mask keeps every wrapped-over snapshot cell out of the
-    scores.  Returns [S, KV, G, hd] in q.dtype.
+    scores.  ``k_scale``/``v_scale`` [P, ps, KV] bf16 mark int8 snapshot
+    pages (fused dequant; the chunk operands stay fp).
+    Returns [S, KV, G, hd] in q.dtype.
     """
     S, KV, G, hd = q.shape
     ps = k_pages.shape[1]
     n_table = page_table.shape[0]
     qb = _prefill_q_block(S)
     scale = hd ** -0.5
+    quantized = k_scale is not None
     pad = (-S) % ps                            # block chunk keys at ps
     if pad:
         chunk_k = jnp.pad(chunk_k, ((0, pad), (0, 0), (0, 0)))
@@ -475,34 +553,39 @@ def paged_ring_prefill_kernel(q, k_pages, v_pages, chunk_k, chunk_v,
     kernel = functools.partial(_paged_ring_prefill_kernel, scale=scale,
                                page_size=ps, n_table=n_table,
                                n_chunk=n_chunk, q_block=qb, groups=G,
-                               window=window)
+                               window=window, quantized=quantized)
 
     # chunk-phase steps clamp the page index to the trash page and ring-
     # phase steps clamp the chunk block to 0: the inactive operand's DMA
     # repeats one index, which the pipeline dedupes — no extra HBM traffic
+    def _page_index(h, qi, p, pt, mt):
+        return (jnp.where(p < n_table, pt[jnp.minimum(p, n_table - 1)], 0),
+                0, h, 0)
+
+    def _chunk_index(h, qi, p, pt, mt):
+        return (jnp.where(p >= n_table, p - n_table, 0), h, 0)
+
+    in_specs = [
+        pl.BlockSpec((qb, 1, G, hd),
+                     lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
+        pl.BlockSpec((1, ps, 1, hd), _page_index),
+        pl.BlockSpec((1, ps, 1, hd), _page_index),
+        pl.BlockSpec((ps, 1, hd), _chunk_index),
+        pl.BlockSpec((ps, 1, hd), _chunk_index),
+    ]
+    operands = [q, k_pages, v_pages, chunk_k, chunk_v]
+    if quantized:
+        def _scale_index(h, qi, p, pt, mt):
+            return (jnp.where(p < n_table,
+                              pt[jnp.minimum(p, n_table - 1)], 0), 0, h)
+        in_specs += [pl.BlockSpec((1, ps, 1), _scale_index),
+                     pl.BlockSpec((1, ps, 1), _scale_index)]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(KV, S // qb, n_table + n_chunk),
-        in_specs=[
-            pl.BlockSpec((qb, 1, G, hd),
-                         lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda h, qi, p, pt, mt: (
-                             jnp.where(p < n_table,
-                                       pt[jnp.minimum(p, n_table - 1)], 0),
-                             0, h, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda h, qi, p, pt, mt: (
-                             jnp.where(p < n_table,
-                                       pt[jnp.minimum(p, n_table - 1)], 0),
-                             0, h, 0)),
-            pl.BlockSpec((ps, 1, hd),
-                         lambda h, qi, p, pt, mt: (
-                             jnp.where(p >= n_table, p - n_table, 0), h, 0)),
-            pl.BlockSpec((ps, 1, hd),
-                         lambda h, qi, p, pt, mt: (
-                             jnp.where(p >= n_table, p - n_table, 0), h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((qb, 1, G, hd),
                                lambda h, qi, p, pt, mt: (qi, h, 0, 0)),
         scratch_shapes=[
@@ -519,7 +602,7 @@ def paged_ring_prefill_kernel(q, k_pages, v_pages, chunk_k, chunk_v,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(page_table, meta, q, k_pages, v_pages, chunk_k, chunk_v)
+    )(page_table, meta, *operands)
 
 
 def _paged_mla_prefill_kernel(pt_ref, meta_ref, ql_ref, qr_ref, ckv_ref,

@@ -17,7 +17,15 @@ request's bucketed chunk: ``paged_prefill`` (contiguous; pages already
 hold the chunk's K/V), ``paged_ring_prefill`` (snapshot-before-write ring
 semantics; the chunk's own K/V ride along), ``paged_mla_prefill``
 (absorbed latent queries, latent output).  All share the head conventions
-of ``repro.models.attention``."""
+of ``repro.models.attention``.
+
+Quantized (int8) pools pass their per-(page, offset, kv-head) bf16 scale
+leaves as optional ``k_scale``/``v_scale`` operands ([P, ps, KV]; None =
+fp pages).  Kernel and ref apply the *identical* fused math — raw int8
+scores scaled per key column, probabilities scaled per value row before
+the PV product — so kernel-on vs kernel-off stays token-identical for
+quantized layouts too.  MLA latent pages never quantize (the layout seam
+rejects the combination), so the MLA wrappers take no scales."""
 from __future__ import annotations
 
 import functools
@@ -51,22 +59,26 @@ def _meta(start, n_valid):
 @functools.partial(jax.jit,
                    static_argnames=("window", "use_kernel", "interpret"))
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
-                    window: int = 0, use_kernel: bool = False,
-                    interpret: bool = False):
+                    window: int = 0, k_scale=None, v_scale=None,
+                    use_kernel: bool = False, interpret: bool = False):
     """q: [slots, H, hd]; k/v_pages: [P, ps, KV, hd]; page_table:
     [slots, n_table] int32 (pad with 0, the trash page); lengths: [slots]
     int32 (valid tokens per slot).  ``window > 0`` selects the ring-cell
-    position mapping (sliding-window mask included).  Returns
-    [slots, H, hd] in q.dtype."""
+    position mapping (sliding-window mask included).  ``k_scale``/
+    ``v_scale`` [P, ps, KV] bf16 mark int8 pages (dequant fused into the
+    softmax accumulation).  Returns [slots, H, hd] in q.dtype."""
     slots, H, hd = q.shape
     KV = k_pages.shape[2]
     if not use_kernel:
         return paged_attention_ref(q, k_pages, v_pages, page_table, lengths,
-                                   window=window)
+                                   window=window, k_scale=k_scale,
+                                   v_scale=v_scale)
     G = H // KV
     out = paged_attention_kernel(q.reshape(slots, KV, G, hd), k_pages,
                                  v_pages, page_table, lengths,
-                                 window=window, interpret=_interp(interpret))
+                                 window=window, k_scale=k_scale,
+                                 v_scale=v_scale,
+                                 interpret=_interp(interpret))
     return out.reshape(slots, H, hd)
 
 
@@ -91,21 +103,24 @@ def paged_mla_attention(q_lat, q_rope, ckv_pages, krope_pages, page_table,
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def paged_prefill(q, k_pages, v_pages, page_table, start, n_valid, *,
-                  use_kernel: bool = False, interpret: bool = False):
+                  k_scale=None, v_scale=None, use_kernel: bool = False,
+                  interpret: bool = False):
     """Contiguous-layout chunked prefill.  q: [S, H, hd] — one request's
     bucketed chunk (post-rope; query i holds absolute position
     ``start + i``); k/v_pages: [P, ps, KV, hd] — the pool AFTER the
     chunk's K/V were scattered in; page_table: [n] int32 — the request's
     row (0-padded tail = trash); start / n_valid traced scalars.  Rows
     past ``n_valid`` are bucket padding — their output is undefined and
-    must not be read.  Returns [S, H, hd] in q.dtype."""
+    must not be read.  ``k_scale``/``v_scale`` [P, ps, KV] bf16 mark int8
+    pages.  Returns [S, H, hd] in q.dtype."""
     S, H, hd = q.shape
     if not use_kernel:
         return paged_prefill_ref(q, k_pages, v_pages, page_table, start,
-                                 n_valid)
+                                 n_valid, k_scale=k_scale, v_scale=v_scale)
     KV = k_pages.shape[2]
     out = paged_prefill_kernel(q.reshape(S, KV, H // KV, hd), k_pages,
                                v_pages, page_table, _meta(start, n_valid),
+                               k_scale=k_scale, v_scale=v_scale,
                                interpret=_interp(interpret))
     return out.reshape(S, H, hd)
 
@@ -113,23 +128,28 @@ def paged_prefill(q, k_pages, v_pages, page_table, start, n_valid, *,
 @functools.partial(jax.jit,
                    static_argnames=("window", "use_kernel", "interpret"))
 def paged_ring_prefill(q, k_pages, v_pages, chunk_k, chunk_v, page_table,
-                       start, n_valid, *, window: int,
-                       use_kernel: bool = False, interpret: bool = False):
+                       start, n_valid, *, window: int, k_scale=None,
+                       v_scale=None, use_kernel: bool = False,
+                       interpret: bool = False):
     """Ring-layout (sliding-window/local) chunked prefill with
     snapshot-before-write semantics: k/v_pages are the pool BEFORE the
     chunk's writes and chunk_k/chunk_v [S, KV, hd] are the chunk's own
     post-rope keys/values (its writes wrap onto ring cells its early
     queries still need, so they must not be read back through the table).
-    Returns [S, H, hd] in q.dtype."""
+    ``k_scale``/``v_scale`` [P, ps, KV] bf16 mark int8 *snapshot* pages —
+    the chunk operands always stay fp (freshly projected, never read back
+    from the pool).  Returns [S, H, hd] in q.dtype."""
     S, H, hd = q.shape
     if not use_kernel:
         return paged_ring_prefill_ref(q, k_pages, v_pages, chunk_k,
                                       chunk_v, page_table, start, n_valid,
-                                      window=window)
+                                      window=window, k_scale=k_scale,
+                                      v_scale=v_scale)
     KV = k_pages.shape[2]
     out = paged_ring_prefill_kernel(q.reshape(S, KV, H // KV, hd), k_pages,
                                     v_pages, chunk_k, chunk_v, page_table,
                                     _meta(start, n_valid), window=window,
+                                    k_scale=k_scale, v_scale=v_scale,
                                     interpret=_interp(interpret))
     return out.reshape(S, H, hd)
 

@@ -25,6 +25,15 @@ GQA head convention matches ``repro.models.attention``: head h = kv-head
 ``h // G`` (reshape H -> (KV, G)).  These materialize the fully gathered
 [slots, n*ps] score matrix — correctness only; the Pallas kernels only
 ever touch pages a slot actually holds.
+
+Quantized (int8) pools pass ``k_scale``/``v_scale`` [P, ps, KV] bf16 (one
+symmetric scale per (page, offset, kv-head) row, widened to fp32 on read).  The oracles mirror the
+kernels' *fused* dequant exactly — raw int8 scores are computed first and
+multiplied by the key's scale per column, probabilities are multiplied by
+the value's scale per row before the PV product; fp pages are never
+materialized — so kernel-on vs kernel-off stays token-identical for
+quantized layouts.  MLA latent oracles take no scales (the layout seam
+rejects quantized latents).
 """
 from __future__ import annotations
 
@@ -45,9 +54,11 @@ def ring_positions(lengths, n_tokens: int, window: int):
 
 
 def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
-                        window: int = 0):
+                        window: int = 0, k_scale=None, v_scale=None):
     """Returns [slots, H, hd] in q.dtype.  ``window > 0`` selects the ring
-    layout's position mapping (sliding-window mask included)."""
+    layout's position mapping (sliding-window mask included).  ``k_scale``/
+    ``v_scale`` [P, ps, KV] mark int8 pages — fused dequant, mirroring the
+    kernel (see module docstring)."""
     S, H, hd = q.shape
     _, ps, KV, _ = k_pages.shape
     n = page_table.shape[1]
@@ -63,8 +74,16 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
     s = jnp.einsum("skgh,stkh->skgt", q_.astype(jnp.float32),
                    k.astype(jnp.float32),
                    preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        ks = k_scale[page_table].astype(jnp.float32) \
+                                .reshape(S, n * ps, KV)    # [S, t, KV]
+        s = s * ks.transpose(0, 2, 1)[:, :, None, :]       # per key column
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        vs = v_scale[page_table].astype(jnp.float32) \
+                                .reshape(S, n * ps, KV)
+        p = p * vs.transpose(0, 2, 1)[:, :, None, :]       # per value row
     out = jnp.einsum("skgt,stkh->skgh", p, v.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
     return out.reshape(S, H, hd).astype(q.dtype)
@@ -110,47 +129,62 @@ def paged_mla_attention_ref(q_lat, q_rope, ckv_pages, krope_pages,
 # < n_valid, and tests must compare only those.
 # ---------------------------------------------------------------------------
 
-def _prefill_attend(q, k, v, valid, scale):
+def _prefill_attend(q, k, v, valid, scale, k_scale=None, v_scale=None):
     """Masked full-softmax core: q [S, KV, G, hd], k/v [T, KV, hd],
-    valid [S, T] -> [S, KV*G, hd]."""
+    valid [S, T] -> [S, KV*G, hd].  Optional per-key-row dequant scales
+    k_scale/v_scale [T, KV] (fused, matching the kernels: raw scores *
+    key scale, probabilities * value scale)."""
     S, KV, G, hd = q.shape
     s = jnp.einsum("skgh,tkh->skgt", q.astype(jnp.float32),
                    k.astype(jnp.float32),
                    preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        s = s * k_scale.T[None, :, None, :]                # per key column
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = p * v_scale.T[None, :, None, :]                # per value row
     out = jnp.einsum("skgt,tkh->skgh", p, v.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
     return out.reshape(S, KV * G, hd)
 
 
-def paged_prefill_ref(q, k_pages, v_pages, page_table, start, n_valid):
+def paged_prefill_ref(q, k_pages, v_pages, page_table, start, n_valid, *,
+                      k_scale=None, v_scale=None):
     """Contiguous-layout chunked prefill: the pages already hold the
     chunk's K/V (positions start..start+n_valid-1), so queries attend the
     gathered pages under the written bound AND the causal horizon.
+    ``k_scale``/``v_scale`` [P, ps, KV] mark int8 pages (fused dequant).
     Returns [S, H, hd] in q.dtype."""
     S, H, hd = q.shape
     _, ps, KV, _ = k_pages.shape
     n = page_table.shape[0]
     k = k_pages[page_table].reshape(n * ps, KV, hd)
     v = v_pages[page_table].reshape(n * ps, KV, hd)
+    ks = (k_scale[page_table].astype(jnp.float32).reshape(n * ps, KV)
+          if k_scale is not None else None)
+    vs = (v_scale[page_table].astype(jnp.float32).reshape(n * ps, KV)
+          if v_scale is not None else None)
     kidx = jnp.arange(n * ps)
     qpos = start + jnp.arange(S)
     valid = (kidx[None, :] < start + n_valid) \
         & (kidx[None, :] <= qpos[:, None])
     out = _prefill_attend(q.reshape(S, KV, H // KV, hd), k, v, valid,
-                          hd ** -0.5)
+                          hd ** -0.5, ks, vs)
     return out.astype(q.dtype)
 
 
 def paged_ring_prefill_ref(q, k_pages, v_pages, chunk_k, chunk_v,
-                           page_table, start, n_valid, *, window: int):
+                           page_table, start, n_valid, *, window: int,
+                           k_scale=None, v_scale=None):
     """Ring-layout chunked prefill, snapshot-before-write semantics: the
     pages are the PRE-write ring snapshot (the chunk's writes wrap onto
     cells its own early queries still need) and the chunk's own keys/
     values ride along as [S, KV, hd] operands.  Key positions follow the
     ring formula for the snapshot and ``start + j`` for the chunk; the
     sliding-window mask excludes every wrapped-over snapshot cell.
+    ``k_scale``/``v_scale`` [P, ps, KV] mark int8 *snapshot* pages — the
+    chunk operands stay fp, so their fused scale is 1.
     Returns [S, H, hd] in q.dtype."""
     S, H, hd = q.shape
     _, ps, KV, _ = k_pages.shape
@@ -160,15 +194,30 @@ def paged_ring_prefill_ref(q, k_pages, v_pages, chunk_k, chunk_v,
     cur = start - 1
     i = jnp.arange(n * ps)
     ring_pos = cur - jnp.mod(cur - i, window)       # < 0 = never written
-    kk = jnp.concatenate([ring_k, chunk_k.astype(ring_k.dtype)], axis=0)
-    vv = jnp.concatenate([ring_v, chunk_v.astype(ring_v.dtype)], axis=0)
+    if k_scale is not None:
+        # snapshot rows carry their page scales; chunk rows are fp (= 1)
+        kk = jnp.concatenate([ring_k.astype(jnp.float32),
+                              chunk_k.astype(jnp.float32)], axis=0)
+        vv = jnp.concatenate([ring_v.astype(jnp.float32),
+                              chunk_v.astype(jnp.float32)], axis=0)
+        ones = jnp.ones((S, KV), jnp.float32)
+        ks = jnp.concatenate(
+            [k_scale[page_table].astype(jnp.float32).reshape(n * ps, KV),
+             ones], axis=0)
+        vs = jnp.concatenate(
+            [v_scale[page_table].astype(jnp.float32).reshape(n * ps, KV),
+             ones], axis=0)
+    else:
+        kk = jnp.concatenate([ring_k, chunk_k.astype(ring_k.dtype)], axis=0)
+        vv = jnp.concatenate([ring_v, chunk_v.astype(ring_v.dtype)], axis=0)
+        ks = vs = None
     k_pos = jnp.concatenate([ring_pos, start + jnp.arange(S)])
     k_ok = jnp.concatenate([ring_pos >= 0, jnp.arange(S) < n_valid])
     qpos = start + jnp.arange(S)
     valid = k_ok[None, :] & (k_pos[None, :] <= qpos[:, None]) \
         & (k_pos[None, :] > qpos[:, None] - window)
     out = _prefill_attend(q.reshape(S, KV, H // KV, hd), kk, vv, valid,
-                          hd ** -0.5)
+                          hd ** -0.5, ks, vs)
     return out.astype(q.dtype)
 
 

@@ -49,6 +49,11 @@ def main():
                     help="KV-cache layout: page-granular (any family with "
                          "a KVLayout: full/swa/local k-v pages, MLA latent "
                          "pages) vs slot-granular preallocation")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8"), default="fp32",
+                    help="paged KV page storage dtype: int8 stores k/v "
+                         "pages quantized with per-page-per-head scales "
+                         "(~4x less KV HBM; dequant fused into the paged-"
+                         "attention kernels; MLA latent pages stay fp)")
     ap.add_argument("--page-size", type=int, default=None,
                     help="tokens per KV page (paged layout; default 16, "
                          "auto-shrunk for short runs and to tile the "
@@ -131,7 +136,7 @@ def main():
         enable_prefix_cache=not args.no_prefix_cache,
         prefill_bucket=not args.no_prefill_bucket,
         decode_steps=args.decode_steps,
-        kv_layout=args.kv_layout,
+        kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
         pipeline_depth=1 if args.sync else 2,
         num_pages=args.num_pages, trace=bool(args.trace),
         spec_tokens=args.spec_tokens, enable_spec=not args.no_spec,
@@ -151,8 +156,16 @@ def main():
         print(f"  queue  max {s['queue_depth_max']}  "
               f"preemptions {s['preemptions']}  rejected {s['rejected']}")
         layout = "paged" if engine.paged else "slotted"
-        print(f"  kv     {layout}  peak {s['kv_bytes_peak']/1e6:.2f} MB  "
+        print(f"  kv     {layout}/{args.kv_dtype}  "
+              f"peak {s['kv_bytes_peak']/1e6:.2f} MB  "
               f"(slotted pool would pin {s['kv_bytes_slotted']/1e6:.2f} MB)")
+        if engine.paged and engine.layout.quantized:
+            pool = engine.pool
+            print(f"  kvq    {pool.page_bytes} B/page quantized vs "
+                  f"{pool.page_bytes_fp32} B/page fp32 "
+                  f"({pool.page_bytes / pool.page_bytes_fp32:.2f}x — "
+                  f"{pool.page_bytes_fp32 / pool.page_bytes:.1f}x more "
+                  f"tokens in the same HBM)")
         print(f"  prefill  {s['prefill_tokens']} tokens run, "
               f"{s['prefill_tokens_saved']} served from prefix cache "
               f"(hit rate {s['prefix_hit_rate']:.2f}), "

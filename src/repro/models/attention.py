@@ -22,6 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ParamSpec, apply_rope, dot
+# the single quantizer for int8 KV pages (layouts depends only on jax, so
+# this does not cross the serving layer's import boundary)
+from repro.serving.layouts import SCALE_SUFFIX, quantize_kv
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
@@ -314,15 +317,27 @@ def paged_cache_update(kv, k_new, v_new, page_table, pos, *, window: int = 0):
     (the pool guarantees ``ps | window``).  Slots without a request carry
     an all-trash table (page 0), so their writes clobber only the reserved
     trash page.
+
+    Quantized (int8) pools carry a ``*_scale`` leaf per data leaf; the row
+    is quantized once here (``quantize_kv``) and both the int8 row and its
+    per-head scale scatter to the same (page, offset).
     """
     ps = kv["k"].shape[1]
     idx = pos % window if window else pos
     page = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
     off = pos % ps
-    return {
-        "k": kv["k"].at[page, off].set(k_new[:, 0].astype(kv["k"].dtype)),
-        "v": kv["v"].at[page, off].set(v_new[:, 0].astype(kv["v"].dtype)),
-    }
+    out = {}
+    for name, new in (("k", k_new), ("v", v_new)):
+        row = new[:, 0]
+        if name + SCALE_SUFFIX in kv:
+            qrow, srow = quantize_kv(row)
+            out[name] = kv[name].at[page, off].set(qrow)
+            out[name + SCALE_SUFFIX] = \
+                kv[name + SCALE_SUFFIX].at[page, off].set(srow)
+        else:
+            out[name] = kv[name].at[page, off].set(
+                row.astype(kv[name].dtype))
+    return out
 
 
 def paged_latent_update(kv, ckv_new, krope_new, page_table, pos):
@@ -361,15 +376,25 @@ def paged_prefill_write(kv, k_new, v_new, page_ids, start, n_valid, *,
     kv: {"k","v"}: [P, ps, KV, hd] (one layer's pages); k_new/v_new
     [1, S, KV, hd] (S = padded bucket length); page_ids [n] int32 — one
     request's page-table row; start / n_valid traced scalars.  Position
-    mapping per ``_chunk_targets`` (contiguous or ring).
+    mapping per ``_chunk_targets`` (contiguous or ring).  Quantized pools
+    scatter int8 rows + per-head scales (see ``paged_cache_update``);
+    padding rows land harmlessly in the trash page, scales included.
     """
     ps = kv["k"].shape[1]
     page, off = _chunk_targets(page_ids, start, n_valid, k_new.shape[1], ps,
                                window)
-    return {
-        "k": kv["k"].at[page, off].set(k_new[0].astype(kv["k"].dtype)),
-        "v": kv["v"].at[page, off].set(v_new[0].astype(kv["v"].dtype)),
-    }
+    out = {}
+    for name, new in (("k", k_new), ("v", v_new)):
+        rows = new[0]
+        if name + SCALE_SUFFIX in kv:
+            qrows, srows = quantize_kv(rows)
+            out[name] = kv[name].at[page, off].set(qrows)
+            out[name + SCALE_SUFFIX] = \
+                kv[name + SCALE_SUFFIX].at[page, off].set(srows)
+        else:
+            out[name] = kv[name].at[page, off].set(
+                rows.astype(kv[name].dtype))
+    return out
 
 
 def paged_latent_prefill_write(kv, ckv_new, krope_new, page_ids, start,
@@ -410,7 +435,11 @@ def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid,
     ``use_pallas`` dispatches the scalar-prefetched Pallas prefill kernels
     (``kernels.paged_attention``: HBM traffic ~ pages actually held,
     bucket-tail query rows skipped at grid level); the default is the
-    traced whole-table gather through ``attention_core``.
+    traced whole-table gather through ``attention_core``.  Quantized (int8)
+    pools route through the kernel family's paired oracle even with the
+    kernels off — ref and kernel apply the *same* fused scale math (scales
+    multiplied into the softmax accumulation, fp pages never materialized),
+    which is what keeps quantized kernel-on vs kernel-off token-identical.
 
     Returns (out [1, S, D], new_kv).
     """
@@ -422,18 +451,22 @@ def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid,
     ps = kv["k"].shape[1]
     n = page_ids.shape[0]
     window = _paged_window(cfg)
+    quantized = "k" + SCALE_SUFFIX in kv
 
     q, k, v = _project_qkv_rope(cfg, p, x, positions)
     if window:
         new_kv = paged_prefill_write(kv, k, v, page_ids, start, n_valid,
                                      window=window)
-        if use_pallas:
+        if use_pallas or quantized:
             # snapshot semantics by construction: ``kv`` is the pre-write
-            # pool, the chunk's own K/V ride along as separate operands
+            # pool, the chunk's own K/V ride along as separate fp operands
+            # (freshly projected — only pool pages are quantized)
             out = pa_ops.paged_ring_prefill(
                 q[0], kv["k"], kv["v"], k[0].astype(cd), v[0].astype(cd),
                 page_ids, start, n_valid, window=window,
-                use_kernel=True)[None]
+                k_scale=kv.get("k" + SCALE_SUFFIX),
+                v_scale=kv.get("v" + SCALE_SUFFIX),
+                use_kernel=use_pallas)[None]
         else:
             ring_k = kv["k"][page_ids].reshape(1, n * ps, *k.shape[2:])
             ring_v = kv["v"][page_ids].reshape(1, n * ps, *v.shape[2:])
@@ -454,10 +487,12 @@ def paged_prefill_apply(cfg, p, x, positions, kv, page_ids, start, n_valid,
                                  kv_valid=kv_valid)
     else:
         new_kv = paged_prefill_write(kv, k, v, page_ids, start, n_valid)
-        if use_pallas:
+        if use_pallas or quantized:
             out = pa_ops.paged_prefill(q[0], new_kv["k"], new_kv["v"],
                                        page_ids, start, n_valid,
-                                       use_kernel=True)[None]
+                                       k_scale=new_kv.get("k" + SCALE_SUFFIX),
+                                       v_scale=new_kv.get("v" + SCALE_SUFFIX),
+                                       use_kernel=use_pallas)[None]
         else:
             # gather this request's pages into a contiguous [1, n*ps] view;
             # absolute key positions are the identity, validity =
@@ -499,6 +534,8 @@ def paged_attention_apply(cfg, p, x, positions, kv, page_table, lengths, *,
     new_kv = paged_cache_update(kv, k, v, page_table, lengths, window=window)
     out = pa_ops.paged_attention(q[:, 0], new_kv["k"], new_kv["v"],
                                  page_table, lengths + 1, window=window,
+                                 k_scale=new_kv.get("k" + SCALE_SUFFIX),
+                                 v_scale=new_kv.get("v" + SCALE_SUFFIX),
                                  use_kernel=use_pallas)
     out = out[:, None].reshape(B, S, H * hd)
     return dot(out, p["wo"], cd), new_kv

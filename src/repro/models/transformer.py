@@ -313,7 +313,10 @@ def lm_paged_prefill(cfg, params, tokens, state, *, use_pallas: bool = False):
 
     Dispatches on the family's page layout: per-head k/v pages (full
     attention's contiguous pages and swa/local's ring-wrapped window
-    pages) vs MLA's latent ckv/krope pages.
+    pages) vs MLA's latent ckv/krope pages.  Quantized (int8) pools add
+    ``k_scale``/``v_scale`` leaves to each layer's kv dict — they ride the
+    same ``lax.scan`` over layers with no structural change here; the
+    attention layer quantizes on write and fuses dequant into the scores.
     """
     x, n_valid, new_pages = _paged_forward(cfg, params, tokens, state,
                                            use_pallas=use_pallas)
@@ -442,7 +445,9 @@ def lm_paged_decode(cfg, params, tokens, state, *, use_pallas: bool = False):
     family's (``repro.serving.layouts``): contiguous k/v pages for full
     attention, ring-wrapped window pages for swa/local (the position
     mapping and window mask live in the paged-attention kernel/ref), and
-    latent ckv/krope pages for MLA (absorbed decode).
+    latent ckv/krope pages for MLA (absorbed decode).  Int8 pools carry
+    ``k_scale``/``v_scale`` leaves per layer (quantize-on-append, dequant
+    fused into the attention math) — transparent to the scan over layers.
     """
     params = cast_tree(params, cfg.compute_dtype)
     cd = jnp.dtype(cfg.compute_dtype)

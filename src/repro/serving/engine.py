@@ -105,6 +105,7 @@ from repro.models import common, registry
 from repro.obs import (INFLIGHT_COUNTER, NULL_TRACER, Tracer, request_track,
                        write_chrome_trace)
 from repro.serving.kvcache import SlotKVCachePool
+from repro.serving.layouts import quantized_layout
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import PagedKVCachePool
 from repro.serving.sampling import (GREEDY, PACKED_WIDTH, SamplingParams,
@@ -308,6 +309,15 @@ class ServingEngine:
             # fail here with one ServeConfig-level error, not deep in the
             # pool or a kernel
             self.cfg.check_window(self.layout.window)
+            # quantized pools: rewrite the layout's page leaves to int8 +
+            # per-(page, offset, kv-head) fp32 scales.  Same single-error
+            # discipline as check_window — int8 + MLA latents (or a family
+            # that resolved slotted) fails here naming both knobs, not deep
+            # in a kernel
+            if self.cfg.kv_dtype != "fp32":
+                self.cfg.check_kv_dtype(self.layout)
+                self.layout = quantized_layout(self.layout,
+                                               self.cfg.kv_dtype)
             self.pool = PagedKVCachePool(
                 self.cfg.max_batch, self.cfg.page_size, self.cfg.max_seq_len,
                 lambda: self.bundle.init_decode_state(1, self.cfg.page_size),
@@ -325,6 +335,10 @@ class ServingEngine:
             # exceed the window (contiguous layouts are unconstrained)
             self._span_cap = self.layout.max_decode_span(self.cfg.decode_steps)
         else:
+            if self.cfg.kv_dtype != "fp32":
+                # auto-resolved slotted (no KVLayout): same error the
+                # explicit kv_layout='slotted' combination gets in validate()
+                self.cfg.check_kv_dtype(None)
             self.pool = SlotKVCachePool(
                 self.cfg.max_batch,
                 lambda: self.bundle.init_decode_state(1, self.cfg.max_seq_len),

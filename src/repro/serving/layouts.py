@@ -20,13 +20,26 @@ family's decode cache needs:
                   in place as the sequence wraps — a slot holds at most
                   ``window`` tokens of K/V, matching the slotted ring
                   cache's memory exactly while keeping page-granular lazy
-                  growth and prefix sharing.
+                  growth and prefix sharing;
+  * ``kv_dtype`` — the *storage* dtype of the data leaves: ``"fp32"`` keeps
+                  the family's native compute dtype; ``"int8"`` stores each
+                  k/v row as int8 with a per-(page, offset, kv-head)
+                  symmetric bfloat16 scale carried as an extra ``*_scale``
+                  leaf
+                  (``quantize_kv`` is the single quantizer — write paths
+                  call it; the paged-attention kernels and their jnp
+                  oracles multiply the scales back into the online-softmax
+                  accumulation, never materializing fp pages).
 
 ``layout_for(cfg)`` is the single capability authority: the registry asks
 it (instead of probing ``attn_kind`` strings) whether a family pages, and
 the engine/pool take the returned layout as a constructor argument.  A new
 cache format (quantized KV, hybrid local/global) plugs in by adding a
-layout here — no pool/engine/registry surgery.
+layout here — no pool/engine/registry surgery.  Quantized variants derive
+from the base layouts via ``quantized_layout`` (the engine applies
+``ServeConfig.kv_dtype`` there); MLA latent pages stay fp because rank is
+a *contracted* dim — per-page latent scales would reassociate the absorbed
+sums, so ``kv_dtype="int8"`` + ``attn_kind="mla"`` is rejected.
 
 Import discipline: this module depends only on jax — it sits *below* both
 ``repro.models.registry`` (which imports ``layout_for``) and
@@ -39,8 +52,67 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 P = jax.sharding.PartitionSpec
+
+#: storage dtypes a layout's data leaves may use ("fp32" = native compute
+#: dtype — the name records what the *bench baselines* store, fp32 on the
+#: smoke configs).  ``ServeConfig.kv_dtype`` validates against this.
+KV_DTYPES = ("fp32", "int8")
+
+#: suffix of the per-row scale leaf a quantized layout carries beside each
+#: data leaf ("k" -> "k_scale")
+SCALE_SUFFIX = "_scale"
+
+
+def quantize_kv(x):
+    """Symmetric per-row int8 quantization of a K/V leaf: one bfloat16
+    scale per (..., head) row over the trailing head_dim.  Returns
+    ``(q, scale)`` with ``q`` int8 in [-127, 127] and
+    ``x ≈ q * scale[..., None]``.
+
+    The scale is *stored* bf16 (half the overhead of fp32 — what keeps the
+    quantized page under the 0.30x budget on the hd=16 smoke shapes) but
+    the row is divided by the bf16-*rounded* value, so dequant with the
+    stored scale reconstructs exactly what was quantized; the clip guards
+    the ≤0.4% bf16 round-down that could push a ratio past 127.
+
+    This is the ONLY quantizer — the decode append, the prefill scatter and
+    the whole-state insert path all call it, so a written token's page
+    bytes are a pure function of its fp row (the warm/cold, mesh and
+    kernel-on/off identity argument for quantized layouts)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.bfloat16)
+    sf = scale.astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / sf[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def check_kv_dtype_layout(kv_dtype: str, layout: Optional["KVLayout"]) -> None:
+    """Quantized KV needs a per-head paged layout.  The ONLY implementation
+    of this rule — ``quantized_layout`` (engine-side derivation) and
+    ``ServeConfig.check_kv_dtype`` (engine-level validation) both call it.
+
+    MLA latent pages stay fp: the latent rank is a *contracted* dim of the
+    absorbed-decode einsums, so per-page scales would reassociate those
+    sums and break the latent == per-head equivalence."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype={kv_dtype!r} not in {KV_DTYPES}")
+    if kv_dtype == "fp32":
+        return
+    if layout is None:
+        raise ValueError(
+            f"kv_dtype={kv_dtype!r} requires a paged KV layout, but this "
+            "family serves slotted-only (no layout) — drop kv_dtype or "
+            "pick a paged family")
+    if layout.name == "latent":
+        raise ValueError(
+            f"kv_dtype={kv_dtype!r} cannot quantize MLA latent pages "
+            f"(attn_kind='mla'): the latent rank is a contracted dim, so "
+            "per-page scales would reassociate the absorbed sums — use "
+            "kv_dtype='fp32' with attn_kind='mla'")
 
 
 def check_window_page_size(page_size: int, window: int) -> None:
@@ -71,12 +143,39 @@ class KVLayout:
     name: str                    # "kv" | "latent" | "window"
     leaves: Tuple[str, ...]      # decode-state leaves the pool pages
     window: int = 0              # > 0: ring-wrapped window pages
+    kv_dtype: str = "fp32"       # "fp32" (native) | "int8" (+ scale leaves)
 
     # -- geometry ----------------------------------------------------------
 
     @property
     def ring(self) -> bool:
         return self.window > 0
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype != "fp32"
+
+    @property
+    def data_leaves(self) -> Tuple[str, ...]:
+        """The K/V-carrying leaves — ``leaves`` minus the scale leaves a
+        quantized layout appends.  These are the names present in the
+        bundle's native decode state (``init_decode_state`` / slotted
+        prefill caches); scale leaves exist only in the page pool."""
+        return tuple(n for n in self.leaves if not n.endswith(SCALE_SUFFIX))
+
+    def page_template(self, blank: dict) -> dict:
+        """One-page pool template from the bundle's native blank state:
+        identity for fp layouts; quantized layouts store each data leaf as
+        int8 and add a per-row bf16 scale leaf (the data leaf's shape with
+        head_dim dropped — one scale per (page, offset, kv-head))."""
+        if not self.quantized:
+            return {k: blank[k] for k in self.leaves}
+        one = {}
+        for name in self.data_leaves:
+            x = blank[name]
+            one[name] = jnp.zeros(x.shape, jnp.int8)
+            one[name + SCALE_SUFFIX] = jnp.zeros(x.shape[:-1], jnp.bfloat16)
+        return one
 
     def check_page_size(self, page_size: int) -> None:
         """Ring layouts need pages that tile the window (see
@@ -142,7 +241,8 @@ class KVLayout:
         into the Chrome trace's ``otherData`` and the pool's init event),
         so an attribution number is never read against the wrong layout."""
         return {"layout": self.name, "leaves": list(self.leaves),
-                "window": self.window, "ring": self.ring}
+                "window": self.window, "ring": self.ring,
+                "kv_dtype": self.kv_dtype}
 
     # -- sharding ----------------------------------------------------------
 
@@ -163,6 +263,14 @@ class KVLayout:
                 spec[3] = "model"
             elif leaf.shape[4] % model_size == 0:
                 spec[4] = "model"
+        if model_size > 1 and name in ("k_scale", "v_scale") \
+                and leaf.ndim == 4:
+            # [L,P,ps,KV] — shard KV exactly when the int8 data leaf does
+            # (same divisibility test on the same axis); when the data leaf
+            # fell back to head_dim sharding the scales replicate, which is
+            # consistent because their KV dim is then unsharded too.
+            if leaf.shape[3] % model_size == 0:
+                spec[3] = "model"
         return P(*spec)
 
 
@@ -172,7 +280,22 @@ KV_FULL = KVLayout("kv", ("k", "v"))
 KV_LATENT = KVLayout("latent", ("ckv", "krope"))
 
 
-def layout_for(cfg) -> Optional[KVLayout]:
+def quantized_layout(base: Optional[KVLayout],
+                     kv_dtype: str) -> Optional[KVLayout]:
+    """Derive the ``kv_dtype`` storage variant of a base layout: identity
+    for "fp32"; "int8" appends one ``*_scale`` leaf per data leaf and marks
+    the layout quantized.  The engine applies ``ServeConfig.kv_dtype`` here
+    (right beside its ``check_window`` call); raises the same ValueError as
+    ``check_kv_dtype_layout`` for un-quantizable layouts (MLA latent /
+    slotted-only)."""
+    if kv_dtype == "fp32":
+        return base
+    check_kv_dtype_layout(kv_dtype, base)
+    leaves = base.leaves + tuple(n + SCALE_SUFFIX for n in base.leaves)
+    return KVLayout(base.name, leaves, window=base.window, kv_dtype=kv_dtype)
+
+
+def layout_for(cfg, kv_dtype: str = "fp32") -> Optional[KVLayout]:
     """The capability authority: which page layout (if any) serves this
     model config's decode cache.  Returns None for families whose state has
     nothing to page (recurrent O(1) state) — they stay on the slotted pool.
@@ -180,13 +303,18 @@ def layout_for(cfg) -> Optional[KVLayout]:
     Callers pass a transformer-family ``ModelConfig``; the registry only
     consults this for families whose decode cache *is* the transformer
     cache (dense / moe), so recurrent hybrids with attention sub-blocks
-    never reach here.
+    never reach here.  ``kv_dtype`` (the ``ServeConfig`` knob) selects the
+    storage variant: "int8" emits layouts whose data leaves are int8 pages
+    with per-row scale leaves — rejected for MLA with an error naming both
+    knobs (latent rank is contracted; see ``check_kv_dtype_layout``).
     """
     kind = getattr(cfg, "attn_kind", "none")
     if kind == "full":
-        return KV_FULL
-    if kind == "mla":
-        return KV_LATENT
-    if kind in ("swa", "local") and getattr(cfg, "window", 0) > 0:
-        return KVLayout("window", ("k", "v"), window=cfg.window)
-    return None
+        base = KV_FULL
+    elif kind == "mla":
+        base = KV_LATENT
+    elif kind in ("swa", "local") and getattr(cfg, "window", 0) > 0:
+        base = KVLayout("window", ("k", "v"), window=cfg.window)
+    else:
+        return None
+    return quantized_layout(base, kv_dtype)

@@ -73,7 +73,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import NULL_TRACER
-from repro.serving.layouts import KV_FULL, KVLayout
+from repro.serving.layouts import (KV_FULL, KVLayout, SCALE_SUFFIX,
+                                   quantize_kv)
 
 P_ = jax.sharding.PartitionSpec
 
@@ -154,13 +155,16 @@ class PagedKVCachePool:
         self.enable_prefix_cache = enable_prefix_cache
 
         blank = blank_page_fn()
-        missing = [k for k in self.layout.leaves if k not in blank]
+        missing = [k for k in self.layout.data_leaves if k not in blank]
         if missing:
             raise ValueError(
                 f"paged pool ({self.layout.name} layout) needs decode-state "
-                f"leaves {self.layout.leaves}; missing {missing} in "
+                f"leaves {self.layout.data_leaves}; missing {missing} in "
                 + str(sorted(blank)))
-        one = {k: blank[k] for k in self.layout.leaves}      # [L,1,ps,...]
+        # [L,1,ps,...]; quantized layouts swap each data leaf for an int8
+        # page + a per-row fp32 scale leaf here (the bundle's native state
+        # never carries scales — the pool owns the storage format)
+        one = self.layout.page_template(blank)
         P = self.num_pages
 
         def grow(x):
@@ -179,18 +183,34 @@ class PagedKVCachePool:
             self.shardings = None
             out_sh = {}
 
+        quantized = self.layout.quantized
+
         def _insert(pages, one_state, ids):
             """Scatter a contiguous prefill cache into pages ``ids``.
 
-            one_state leaves: [L, 1, padded_len, ...]; ids
-            [pages_per_slot] int32 — entries past the prompt's pages point
-            at the trash page and receive the (blank) tail chunks.
+            one_state holds the layout's *data* leaves [L, 1, padded_len,
+            ...] (the bundle's native fp state — scale leaves exist only in
+            the pool); ids [pages_per_slot] int32 — entries past the
+            prompt's pages point at the trash page and receive the (blank)
+            tail chunks.  Quantized layouts quantize here with the same
+            ``quantize_kv`` the incremental write paths use, so an inserted
+            token's page bytes match what a chunked prefill would have
+            written.
             """
-            def put(pool, x):
-                xr = x[:, 0].reshape((x.shape[0], self.pages_per_slot,
-                                      page_size) + x.shape[3:])
-                return pool.at[:, ids].set(xr.astype(pool.dtype))
-            return {n: put(pages[n], one_state[n]) for n in pages}
+            def chunked(x):
+                return x[:, 0].reshape((x.shape[0], self.pages_per_slot,
+                                        page_size) + x.shape[3:])
+            out = {}
+            for n in one_state:
+                xr = chunked(one_state[n])
+                if quantized:
+                    q, s = quantize_kv(xr)
+                    out[n] = pages[n].at[:, ids].set(q)
+                    out[n + SCALE_SUFFIX] = \
+                        pages[n + SCALE_SUFFIX].at[:, ids].set(s)
+                else:
+                    out[n] = pages[n].at[:, ids].set(xr.astype(pages[n].dtype))
+            return out
 
         def _copy(pages, dst, src):
             """Copy-on-write: duplicate page ``src`` into ``dst`` (every
@@ -211,6 +231,11 @@ class PagedKVCachePool:
         # bytes of one page across layers and leaves (for telemetry)
         self.page_bytes = sum(
             leaf.nbytes // P for leaf in jax.tree.leaves(self.pages))
+        # fp32-equivalent page bytes (data leaves at 4 B/elt, no scale
+        # leaves) — denominator of the quantized savings ratio; equals
+        # page_bytes for fp32 pools
+        self.page_bytes_fp32 = sum(
+            self.pages[n].size * 4 // P for n in self.layout.data_leaves)
 
         # -- host bookkeeping ---------------------------------------------
         self._free_slots: List[int] = list(range(num_slots))
@@ -717,7 +742,7 @@ class PagedKVCachePool:
         into the pages ``alloc_for_insert`` bound to ``slot``.  The scatter
         writes every table entry, so the slot must hold only private pages
         (which ``alloc_for_insert`` guarantees)."""
-        one_kv = {n: one_state[n] for n in self.layout.leaves}
+        one_kv = {n: one_state[n] for n in self.layout.data_leaves}
         self.pages = self._insert(self.pages, one_kv,
                                   jnp.asarray(self.tables[slot]))
 

@@ -122,6 +122,49 @@ def test_paged_window_ref_matches_ring_cache_decode(rng, m):
                                    atol=2e-5)
 
 
+def _quantized_pages(kp, vp):
+    """Quantize a random fp pool the way the pool's write paths do."""
+    from repro.serving.layouts import quantize_kv
+    kq, ks = quantize_kv(kp)
+    vq, vs = quantize_kv(vp)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("window", [0, 24], ids=["full", "ring"])
+@pytest.mark.parametrize("slots,H,KV,hd,ps,n,dtype", PAGED_CASES[:2])
+def test_paged_kernel_matches_ref_quantized(rng, slots, H, KV, hd, ps, n,
+                                            dtype, window):
+    """Int8 pages + per-row scales: the fused-dequant kernel must match the
+    fused-dequant oracle on both page geometries (full and ring)."""
+    if window and window != n * ps:
+        window = n * ps
+    q, kp, vp, table, lengths = _paged_case(rng, slots, H, KV, hd, ps, n,
+                                            dtype)
+    kq, vq, ks, vs = _quantized_pages(kp, vp)
+    ref = paged_attention_ref(q, kq, vq, table, lengths, window=window,
+                              k_scale=ks, v_scale=vs)
+    out = paged_attention(q, kq, vq, table, lengths, window=window,
+                          k_scale=ks, v_scale=vs, use_kernel=True,
+                          interpret=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_paged_kernel_quantized_tracks_fp(rng):
+    """The fused int8 path is an *approximation* of fp attention — its
+    output must track the fp oracle on the same pre-quantization pool
+    within int8 resolution (loose tolerance, the accuracy argument)."""
+    q, kp, vp, table, lengths = _paged_case(rng, 3, 4, 2, 32, 8, 4,
+                                            jnp.float32)
+    kq, vq, ks, vs = _quantized_pages(kp, vp)
+    fp = paged_attention_ref(q, kp, vp, table, lengths)
+    qd = paged_attention_ref(q, kq, vq, table, lengths, k_scale=ks,
+                             v_scale=vs)
+    np.testing.assert_allclose(np.asarray(qd), np.asarray(fp),
+                               atol=0.05, rtol=0.05)
+
+
 def test_ring_positions_formula():
     """Each ring index resolves to the latest written position congruent to
     it; never-written cells come back invalid."""
@@ -278,6 +321,24 @@ def test_paged_prefill_trash_page_never_read(rng):
                                    np.asarray(base[:n_valid]), atol=2e-5)
 
 
+@pytest.mark.parametrize("H,KV,hd,ps,n,S,start,n_valid,dtype",
+                         PREFILL_CASES[:2] + PREFILL_CASES[-1:])
+def test_paged_prefill_kernel_matches_ref_quantized(rng, H, KV, hd, ps, n,
+                                                    S, start, n_valid,
+                                                    dtype):
+    """Chunked prefill against int8 pages: fused-dequant kernel vs the
+    fused-dequant oracle (incl. the multi-q-block padded-tail case)."""
+    q, kp, vp, table = _prefill_case(rng, H, KV, hd, ps, n, S, dtype)
+    kq, vq, ks, vs = _quantized_pages(kp, vp)
+    ref = paged_prefill_ref(q, kq, vq, table, start, n_valid, k_scale=ks,
+                            v_scale=vs)
+    out = paged_prefill(q, kq, vq, table, start, n_valid, k_scale=ks,
+                        v_scale=vs, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:n_valid], np.float32),
+                               np.asarray(ref[:n_valid], np.float32),
+                               atol=2e-5)
+
+
 RING_PREFILL_CASES = [
     # (H, KV, hd, ps, n, S, start, n_valid) — window = n * ps
     (4, 2, 32, 8, 3, 16, 0, 16),     # cold start (ring empty)
@@ -299,6 +360,28 @@ def test_paged_ring_prefill_kernel_matches_ref(rng, H, KV, hd, ps, n, S,
                                  window=window)
     out = paged_ring_prefill(q, kp, vp, ck, cv, table, start, n_valid,
                              window=window, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:n_valid]),
+                               np.asarray(ref[:n_valid]), atol=2e-5)
+
+
+@pytest.mark.parametrize("H,KV,hd,ps,n,S,start,n_valid",
+                         RING_PREFILL_CASES)
+def test_paged_ring_prefill_kernel_matches_ref_quantized(rng, H, KV, hd,
+                                                         ps, n, S, start,
+                                                         n_valid):
+    """Ring chunked prefill with an int8 *snapshot*: the ring pages carry
+    scales, the chunk's ride-along K/V stay fp (scale 1) — kernel vs
+    oracle across cold, wrapped and wider-than-window chunks."""
+    window = n * ps
+    q, kp, vp, table = _prefill_case(rng, H, KV, hd, ps, n, S)
+    ck = jnp.asarray(rng.normal(size=(S, KV, hd)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(S, KV, hd)), jnp.float32)
+    kq, vq, ks, vs = _quantized_pages(kp, vp)
+    ref = paged_ring_prefill_ref(q, kq, vq, ck, cv, table, start, n_valid,
+                                 window=window, k_scale=ks, v_scale=vs)
+    out = paged_ring_prefill(q, kq, vq, ck, cv, table, start, n_valid,
+                             window=window, k_scale=ks, v_scale=vs,
+                             use_kernel=True, interpret=True)
     np.testing.assert_allclose(np.asarray(out[:n_valid]),
                                np.asarray(ref[:n_valid]), atol=2e-5)
 
